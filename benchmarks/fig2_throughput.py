@@ -1,0 +1,56 @@
+"""Paper Fig. 2: arithmetic throughput of the 2-D conv kernels vs filter
+size. The paper's observation: sliding-window throughput approaches the
+hardware limit as the filter grows (the kernel becomes compute-bound), while
+im2col-GEMM saturates earlier on memory traffic. We report GFLOP/s for both
+plus a measured machine peak (dense GEMM) as the roofline reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import conv2d_im2col, conv2d_sliding, conv_flops
+
+H = W = 96
+CIN = COUT = 32
+SIZES = [3, 5, 9, 13, 17, 25, 31]
+
+
+def machine_peak_gflops() -> float:
+    """Dense f32 GEMM throughput — the practical roofline on this core."""
+    n = 1024
+    a = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda a, b: a @ b)
+    t = time_fn(f, a, a)
+    return 2 * n ** 3 / t / 1e9
+
+
+def run(sizes=SIZES) -> list[str]:
+    rng = np.random.default_rng(0)
+    peak = machine_peak_gflops()
+    out = [row("fig2/machine_peak_gemm", 0.0, f"gflops={peak:.1f}")]
+    x = jnp.asarray(rng.normal(size=(1, H, W, CIN)).astype(np.float32))
+    for k in sizes:
+        wgt = jnp.asarray(rng.normal(size=(k, k, CIN, COUT)).astype(np.float32))
+        oh = H - k + 1
+        fl = conv_flops(1, (oh, oh), (k, k), CIN, COUT)
+        for name, fn in [
+            ("sliding", conv2d_sliding), ("im2col", conv2d_im2col)
+        ]:
+            f = jax.jit(functools.partial(fn, padding="VALID"))
+            t = time_fn(f, x, wgt)
+            gf = fl / t / 1e9
+            out.append(row(
+                f"fig2/conv2d_k{k}_{name}", t,
+                f"gflops={gf:.1f} frac_of_peak={gf / peak:.3f}",
+            ))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

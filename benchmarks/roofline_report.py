@@ -1,0 +1,65 @@
+"""Roofline table builder — reads the dry-run JSONs (experiments/dryrun) and
+emits the §Roofline markdown table + CSV rows for benchmarks.run."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_cells(d: Path = DRYRUN_DIR) -> list[dict]:
+    cells = []
+    for f in sorted(d.glob("*.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def markdown_table(cells: list[dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_coll | dominant | "
+        "MODEL/HLO flops | mem/dev GiB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if "error" in c or "skipped" in c:
+            continue
+        if c.get("mesh") != mesh:
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+            f"{r['dominant']} | {r['useful_fraction']:.3f} | "
+            f"{c['memory']['peak_bytes'] / 2**30:.1f} |"
+        )
+    skips = [c for c in cells if "skipped" in c and (mesh == "16x16") ==
+             c["cell"].endswith("single")]
+    for c in skips:
+        arch, shape, _ = c["cell"].split("__")
+        lines.append(f"| {arch} | {shape} | — | — | — | SKIP | — | — |")
+    return "\n".join(lines)
+
+
+def csv_rows(cells: list[dict]) -> list[str]:
+    rows = []
+    for c in cells:
+        if "error" in c or "skipped" in c:
+            continue
+        r = c["roofline"]
+        dom_t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        rows.append(
+            f"roofline/{c['cell']},{dom_t * 1e6:.1f},"
+            f"dominant={r['dominant']} useful_frac={r['useful_fraction']:.3f} "
+            f"mem_gib={c['memory']['peak_bytes'] / 2**30:.1f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(markdown_table(cells))

@@ -1,0 +1,38 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV:
+  fig1/*      paper Fig. 1 — 2-D conv speedup (sliding vs im2col+GEMM)
+  fig2/*      paper Fig. 2 — 2-D conv arithmetic throughput vs filter size
+  conv1d/*    companion 1-D sliding conv speedup table + pooling scan claim
+  roofline/*  per-(arch×shape) dominant roofline term from the dry-run JSONs
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import fig1_speedup, fig2_throughput, roofline_report, table_conv1d
+
+    rows: list[str] = []
+    rows += fig1_speedup.run(
+        filter_sizes=[3, 5, 9, 17, 31] if quick else fig1_speedup.FILTER_SIZES
+    )
+    rows += fig2_throughput.run(
+        sizes=[3, 9, 17] if quick else fig2_throughput.SIZES
+    )
+    rows += table_conv1d.run(widths=[3, 9, 33] if quick else table_conv1d.WIDTHS)
+    try:
+        rows += roofline_report.csv_rows(roofline_report.load_cells())
+    except FileNotFoundError:
+        rows.append("roofline/missing,0.0,run repro.launch.dryrun first")
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

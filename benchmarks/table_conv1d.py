@@ -1,0 +1,59 @@
+"""Companion result (arXiv:2305.16513): 1-D sliding conv + pooling speedups
+vs filter width, against the im2col-GEMM baseline — the '~log(filter width)'
+speedup claim. Includes the two-phase-scan pooling vs shift evaluation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import (
+    conv1d_im2col,
+    conv1d_sliding,
+    conv_flops,
+    sliding_sum_scan,
+    sliding_sum_shift,
+)
+
+L = 16_384
+C = 32
+WIDTHS = [2, 3, 5, 9, 17, 33, 65]
+
+
+def run(widths=WIDTHS) -> list[str]:
+    rng = np.random.default_rng(0)
+    out = []
+    x = jnp.asarray(rng.normal(size=(1, L, C)).astype(np.float32))
+    for k in widths:
+        w = jnp.asarray(rng.normal(size=(k, C, C)).astype(np.float32))
+        t_s = time_fn(jax.jit(functools.partial(conv1d_sliding, padding="VALID")), x, w)
+        t_g = time_fn(jax.jit(functools.partial(conv1d_im2col, padding="VALID")), x, w)
+        fl = conv_flops(1, L - k + 1, k, C, C)
+        out.append(row(
+            f"conv1d/k{k}_sliding", t_s,
+            f"speedup={t_g / t_s:.2f}x gflops={fl / t_s / 1e9:.1f}",
+        ))
+        out.append(row(f"conv1d/k{k}_im2col", t_g, ""))
+    # pooling: O(n) scan vs O(n*w) shift — the sliding-sum claim
+    xs = jnp.asarray(rng.normal(size=(8, L)).astype(np.float32))
+    for wdw in [4, 16, 64, 256]:
+        t_scan = time_fn(
+            jax.jit(functools.partial(sliding_sum_scan, window=wdw)), xs
+        )
+        t_shift = time_fn(
+            jax.jit(functools.partial(sliding_sum_shift, window=wdw)), xs
+        )
+        out.append(row(
+            f"pool/w{wdw}_scan", t_scan,
+            f"shift_vs_scan={t_shift / t_scan:.2f}x",
+        ))
+        out.append(row(f"pool/w{wdw}_shift", t_shift, ""))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,55 @@
+"""Batched serving example: prefill a batch of prompts, decode with a static
+KV cache (the serve_step the decode_* dry-run shapes lower).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch qwen3-1.7b
+    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-1.6b   # O(1) state
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config, smoke_config  # noqa: E402
+from repro.distributed.sharding import Runtime  # noqa: E402
+from repro.launch.serve import generate  # noqa: E402
+from repro.models import build_model  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = smoke_config(get_config(args.arch))
+    model = build_model(cfg, Runtime())
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(2, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+    )
+    t0 = time.time()
+    toks = generate(
+        model, params, prompts, gen_len=args.gen,
+        cache_len=args.prompt_len + args.gen,
+    )
+    dt = time.time() - t0
+    print(f"[serve] {args.arch}: {toks.shape} tokens in {dt:.1f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s, incl. compile)")
+    print("[serve] greedy sample:", np.asarray(toks[0][:12]))
+    # decode determinism: same prompt -> same continuation
+    toks2 = generate(model, params, prompts, gen_len=args.gen,
+                     cache_len=args.prompt_len + args.gen)
+    assert (np.asarray(toks) == np.asarray(toks2)).all()
+    print("[serve] determinism check passed")
+
+
+if __name__ == "__main__":
+    main()

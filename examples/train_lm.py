@@ -1,0 +1,86 @@
+"""End-to-end LM training driver (deliverable (b)).
+
+Default: a ~10M-param qwen3-family model for 300 steps on CPU (~minutes),
+demonstrating the full production loop — deterministic data, checkpointing,
+resume, watchdog. ``--preset 100m`` trains the ~100M-param config the
+assignment names (same code path; budget the wall-clock accordingly on CPU).
+
+    PYTHONPATH=src python examples/train_lm.py
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 200
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch.train import train_loop  # noqa: E402
+
+
+PRESETS = {
+    # ~10M params: d=256, 4L — minutes on CPU
+    "10m": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+                head_dim=64, d_ff=1024, vocab_size=8192),
+    # ~100M params: d=768, 12L — the assignment's "~100M for a few hundred
+    # steps" scale; expect tens of minutes on a single CPU core
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                 head_dim=64, d_ff=2304, vocab_size=32768),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=list(PRESETS), default="10m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--run-dir", default="/tmp/repro_train_lm")
+    args_in = ap.parse_args()
+
+    cfg = get_config("qwen3-1.7b").replace(
+        **PRESETS[args_in.preset],
+        param_dtype="float32", compute_dtype="float32",
+        attn_chunk=128, loss_chunk=128,
+    )
+    n_params = (
+        cfg.vocab_size * cfg.d_model
+        + cfg.num_layers * (
+            cfg.d_model * (cfg.num_heads + 2 * cfg.num_kv_heads)
+            * cfg.resolved_head_dim
+            + cfg.num_heads * cfg.resolved_head_dim * cfg.d_model
+            + 3 * cfg.d_model * cfg.d_ff
+        )
+    )
+    print(f"[example] training ~{n_params/1e6:.0f}M-param model "
+          f"for {args_in.steps} steps")
+
+    class A:  # argparse-compatible namespace for train_loop
+        arch = "qwen3-1.7b"
+        smoke = False
+        steps = args_in.steps
+        batch = args_in.batch
+        seq = args_in.seq
+        lr = 1e-3
+        seed = 0
+        run_dir = args_in.run_dir
+        ckpt_every = 100
+        log_every = 10
+        grad_accum = None
+        no_resume = True
+        fail_at = None
+
+    # inject the custom config by monkey-patching the lookup used inside
+    import repro.launch.train as T
+    orig = T.get_config
+    T.get_config = lambda name: cfg
+    try:
+        out = train_loop(A)
+    finally:
+        T.get_config = orig
+    first = sum(out["losses"][:10]) / max(len(out["losses"][:10]), 1)
+    print(f"[example] loss: first10 {first:.3f} -> final {out['final_loss']:.3f}")
+    assert out["final_loss"] < first, "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

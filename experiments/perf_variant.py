@@ -1,0 +1,41 @@
+"""Hillclimb variant runner: lower a cell with config/rule overrides and
+print+record its roofline terms. Used by EXPERIMENTS.md §Perf iterations."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse, json, sys, time
+from pathlib import Path
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import lower_cell
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+from repro.launch.hlo_flops import analyze
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+def run(arch, shape, tag, cfg_overrides=None, rules_overrides=None, multi=False):
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape, multi, cfg_overrides=cfg_overrides,
+                               rules_overrides=rules_overrides)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    txt = compiled.as_text()
+    corr = analyze(txt)
+    coll = collective_bytes(txt)
+    terms = roofline_terms({"flops": corr["flops"], "bytes accessed": corr["bytes"]},
+                           coll, n_chips=meta["chips"], peak_flops=PEAK_FLOPS_BF16,
+                           hbm_bw=HBM_BW, ici_bw=ICI_BW)
+    rec = {"tag": tag, "arch": arch, "shape": shape,
+           "cfg_overrides": cfg_overrides, "rules_overrides": rules_overrides,
+           "peak_gib": (mem.argument_size_in_bytes + mem.temp_size_in_bytes)/2**30,
+           "roofline": terms, "collectives": coll,
+           "compile_s": round(time.time()-t0, 1)}
+    out = Path("experiments/perf"); out.mkdir(parents=True, exist_ok=True)
+    (out / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    print(f"[perf] {tag}: mem={rec['peak_gib']:.2f}GiB "
+          f"t=({terms['t_compute_s']:.4g},{terms['t_memory_s']:.4g},"
+          f"{terms['t_collective_s']:.4g})s dominant={terms['dominant']}")
+    return rec
+
+if __name__ == "__main__":
+    import runpy
+    # variants given as a small python expr file or inline via env; simplest:
+    # edit calls below per iteration

@@ -1,0 +1,154 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic.
+
+  * **atomic** — a checkpoint is written to ``step_N.tmp/`` and renamed to
+    ``step_N/`` only after every array + the manifest are on disk; a crash
+    mid-write can never leave a "latest" that is unreadable;
+  * **async** — ``save(..., blocking=False)`` snapshots to host memory
+    (device_get) and writes on a background thread so the train loop keeps
+    stepping; ``wait()`` joins before the next save or exit;
+  * **sharded layout** — each leaf is saved as its own ``.npy`` keyed by its
+    pytree path (host-sharded writes in multi-host settings would shard the
+    leaf dim here);
+  * **elastic restore** — arrays are loaded as full host arrays and
+    ``device_put`` against whatever sharding tree the *current* mesh
+    prescribes: a checkpoint written on one mesh restores onto a different
+    mesh/device-count (tested 8→4 virtual devices);
+  * **retention** — ``keep`` most recent checkpoints are retained.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}."))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_into(skeleton: Any, flat: dict[str, Any], prefix: str = ""):
+    if isinstance(skeleton, dict):
+        return {
+            k: _unflatten_into(v, flat, f"{prefix}{k}.")
+            for k, v in skeleton.items()
+        }
+    if isinstance(skeleton, tuple):
+        return tuple(
+            _unflatten_into(v, flat, f"{prefix}{i}.")
+            for i, v in enumerate(skeleton)
+        )
+    if isinstance(skeleton, list):
+        return [
+            _unflatten_into(v, flat, f"{prefix}{i}.")
+            for i, v in enumerate(skeleton)
+        ]
+    return flat[prefix[:-1]]
+
+
+def latest_step(directory: str | Path) -> int | None:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in d.iterdir()
+        if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, state: Any, *, blocking: bool = True,
+             extra: dict | None = None):
+        self.wait()
+        host_flat = {
+            k: np.asarray(jax.device_get(v)) for k, v in _flatten(state).items()
+        }
+        if blocking:
+            self._write(step, host_flat, extra or {})
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_flat, extra or {}),
+                daemon=True,
+            )
+            self._thread.start()
+
+    def _write(self, step: int, host_flat: dict[str, np.ndarray], extra: dict):
+        tmp = self.dir / f"step_{step}.tmp"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "time": time.time(), "leaves": {}, **extra}
+        for key, arr in host_flat.items():
+            fn = key.replace("/", "_") + ".npy"
+            np.save(tmp / fn, arr)
+            manifest["leaves"][key] = {
+                "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic commit
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(p.name.split("_")[1])
+            for p in self.dir.iterdir()
+            if p.is_dir() and p.name.startswith("step_")
+            and not p.name.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore ----------------------------------------------------------------
+    def restore(self, step: int, skeleton: Any, shardings: Any = None) -> Any:
+        """Load `step` into the structure of `skeleton`. If `shardings` is
+        given (pytree of NamedSharding congruent to skeleton), each leaf is
+        device_put against it — this is the elastic re-shard path."""
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat = {
+            k: np.load(d / meta["file"])
+            for k, meta in manifest["leaves"].items()
+        }
+        tree = _unflatten_into(skeleton, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else jax.device_put(x),
+                tree, shardings,
+            )
+        return tree
+
+    def manifest(self, step: int) -> dict:
+        return json.loads(
+            (self.dir / f"step_{step}" / "manifest.json").read_text()
+        )

@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    LONG_CONTEXT_FAMILIES,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    registry,
+    shape_applicable,
+    smoke_config,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "LONG_CONTEXT_FAMILIES",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "get_config",
+    "registry",
+    "shape_applicable",
+    "smoke_config",
+]

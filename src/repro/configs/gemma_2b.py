@@ -1,0 +1,21 @@
+"""gemma-2b [dense] — GeGLU, head_dim=256, MQA (kv=1), 256k vocab.
+
+[arXiv:2403.08295; hf] 18L d_model=2048 8H (GQA kv=1) d_ff=16384 vocab=256000
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    family="dense",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    d_ff=16384,
+    vocab_size=256_000,
+    head_dim=256,
+    activation="gelu",  # GeGLU
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    grad_accum=2,
+)

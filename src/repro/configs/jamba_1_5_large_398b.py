@@ -1,0 +1,34 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba + attention 1:7 interleave, MoE 16e top-2.
+
+[arXiv:2403.19887; hf] 72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536,
+MoE 16e top-2
+
+Paper-technique site: every Mamba block contains a causal depthwise conv1d
+(k=4) routed through the sliding conv kernel (custom small-k regime).
+Optimizer states are int8-compressed so the 398B training state fits the
+single-pod 4 TB HBM (see repro.optim).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=24576,  # per-expert FFN width
+    vocab_size=65_536,
+    activation="silu",
+    num_experts=16,
+    experts_per_token=2,
+    moe_every=2,  # MoE on every other layer
+    attn_every=8,  # 1 attention : 7 mamba
+    mamba_d_state=16,
+    mamba_conv_k=4,
+    mamba_expand=2,
+    rope_theta=10_000.0,
+    opt_state_dtype="int8",
+    grad_accum=16,
+    grad_accum_dtype="bfloat16",
+)

@@ -1,0 +1,27 @@
+"""llava-next-34b [vlm] — anyres tiling; transformer backbone only.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified] 60L d_model=7168 56H
+(GQA kv=8) d_ff=20480 vocab=64000
+
+The vision frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings (anyres tiling happens upstream). The non-stub
+patch embedding (conv2d k=14 s=14) is available through the paper's sliding
+conv2d kernel (``repro.models.llava.patch_embed``).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64_000,
+    activation="silu",
+    frontend="vision_stub",
+    num_patches=2880,  # anyres: 5 tiles x 576 patches
+    rope_theta=1_000_000.0,
+    grad_accum=8,
+)

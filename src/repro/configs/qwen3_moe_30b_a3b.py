@@ -1,0 +1,24 @@
+"""qwen3-moe-30b-a3b [moe] — 128 experts, top-8, qk_norm.
+
+[hf:Qwen/Qwen3-30B-A3B; hf] 48L d_model=2048 32H (GQA kv=4) d_ff=768
+vocab=151936, MoE 128e top-8
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=768,  # per-expert FFN width
+    vocab_size=151_936,
+    head_dim=128,
+    activation="silu",
+    qk_norm=True,
+    num_experts=128,
+    experts_per_token=8,
+    rope_theta=1_000_000.0,
+    grad_accum=4,
+)

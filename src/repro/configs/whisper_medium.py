@@ -1,0 +1,28 @@
+"""whisper-medium [audio] — enc-dec, conv frontend (stub).
+
+[arXiv:2212.04356; unverified] 24L d_model=1024 16H (GQA kv=16 = MHA)
+d_ff=4096 vocab=51865
+
+The conv frontend (two k=3 conv1d, second strided 2) is a STUB per the
+assignment: ``input_specs()`` provides precomputed frame embeddings. The
+non-stub frontend is implemented with the paper's custom k=3 sliding kernel
+(``repro.models.whisper.conv_frontend``). Shapes split seq_len between the
+encoder (frames) and decoder (tokens) halves.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,  # decoder depth
+    encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51_865,
+    activation="gelu_plain",  # whisper MLP is plain GELU (not gated)
+    cross_attention=True,
+    frontend="audio_stub",
+    rope_theta=10_000.0,  # decoder uses learned pos in HF; we use RoPE-free sinusoidal
+)

@@ -1,0 +1,54 @@
+"""Core: the paper's Sliding Window Sum / Convolution primitives (pure JAX).
+
+Pallas TPU kernels implementing the same contracts live in
+``repro.kernels`` and are validated against this module.
+"""
+from repro.core.conv import (
+    CUSTOM_TAPS,
+    GENERIC_MAX_TAP,
+    conv1d,
+    conv1d_depthwise_sliding,
+    conv1d_im2col,
+    conv1d_sliding,
+    conv1d_xla,
+    conv2d,
+    conv2d_im2col,
+    conv2d_sliding,
+    conv2d_xla,
+    conv_flops,
+    regime_for,
+)
+from repro.core.sliding import (
+    avg_pool2d,
+    max_pool2d,
+    sliding_avg,
+    sliding_max,
+    sliding_min,
+    sliding_reduce,
+    sliding_sum_scan,
+    sliding_sum_shift,
+)
+
+__all__ = [
+    "CUSTOM_TAPS",
+    "GENERIC_MAX_TAP",
+    "conv1d",
+    "conv1d_depthwise_sliding",
+    "conv1d_im2col",
+    "conv1d_sliding",
+    "conv1d_xla",
+    "conv2d",
+    "conv2d_im2col",
+    "conv2d_sliding",
+    "conv2d_xla",
+    "conv_flops",
+    "regime_for",
+    "avg_pool2d",
+    "max_pool2d",
+    "sliding_avg",
+    "sliding_max",
+    "sliding_min",
+    "sliding_reduce",
+    "sliding_sum_scan",
+    "sliding_sum_shift",
+]

@@ -1,0 +1,160 @@
+"""Sliding Window Sum primitives (Snytsar 2023, and companion arXiv:2305.16513).
+
+The paper's core observation: pooling and convolution are *sliding window
+sums* — for window size ``w`` over a sequence ``x``::
+
+    y[i] = reduce(x[i], x[i+1], ..., x[i+w-1])
+
+and they can be evaluated either by
+
+  * a **two-phase parallel scan** (prefix sums, then a strided difference) —
+    O(n) work, O(log n) depth, no ``w``-times memory bloat, or
+  * a **shift-and-accumulate** loop over the ``w`` taps, where each tap is a
+    *whole-vector* shifted view of the unmodified input (the "vector slide").
+
+Both avoid materializing the im2col matrix. This module is the pure-JAX
+(jnp) layer; the Pallas TPU kernels in ``repro.kernels`` share this
+structure and are validated against these functions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Sliding window sums (two-phase scan formulation)
+# ---------------------------------------------------------------------------
+
+def sliding_sum_scan(x: Array, window: int, axis: int = -1) -> Array:
+    """Sliding window sum via the two-phase prefix-scan algorithm.
+
+    Phase 1: inclusive prefix sum ``S`` along ``axis`` (log-depth scan).
+    Phase 2: ``y[i] = S[i + w - 1] - S[i - 1]`` — a strided difference.
+
+    Output length along ``axis`` is ``n - window + 1`` (VALID windows only).
+    This is the paper's preferred evaluation for *pooling*-class reductions
+    and large windows: O(n) adds regardless of window size.
+    """
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    n = x.shape[axis]
+    if window > n:
+        raise ValueError(f"window {window} exceeds length {n}")
+    # Prefix sums in f32 to bound cancellation error for long sequences.
+    acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
+    s = jnp.cumsum(x.astype(acc_dtype), axis=axis)
+    upper = jax.lax.slice_in_dim(s, window - 1, n, axis=axis)
+    lower = jax.lax.slice_in_dim(s, 0, n - window + 1, axis=axis)
+    head = jax.lax.slice_in_dim(upper, 0, 1, axis=axis)
+    body = jax.lax.slice_in_dim(upper, 1, None, axis=axis) - jax.lax.slice_in_dim(
+        lower, 0, -1, axis=axis
+    )
+    return jnp.concatenate([head, body], axis=axis).astype(x.dtype)
+
+
+def sliding_sum_shift(x: Array, window: int, axis: int = -1) -> Array:
+    """Sliding window sum via shift-and-accumulate (the vector-slide form).
+
+    O(n * w) adds but each tap is a contiguous shifted read — this is the
+    form that maps onto the TPU VMEM kernels for small windows.
+    """
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    n = x.shape[axis]
+    if window > n:
+        raise ValueError(f"window {window} exceeds length {n}")
+    out_len = n - window + 1
+    acc = jax.lax.slice_in_dim(x, 0, out_len, axis=axis).astype(jnp.float32)
+    for k in range(1, window):
+        acc = acc + jax.lax.slice_in_dim(x, k, k + out_len, axis=axis).astype(
+            jnp.float32
+        )
+    return acc.astype(x.dtype)
+
+
+def sliding_reduce(
+    x: Array,
+    window: int,
+    op: Callable[[Array, Array], Array],
+    init: Array,
+    axis: int = -1,
+) -> Array:
+    """Generic sliding reduction over any associative ``op`` (min/max/...).
+
+    Uses the two-phase structure generalized to non-invertible monoids via
+    the classic block decomposition (van Herk / Gil-Werman): suffix scans
+    within blocks of size ``window`` + prefix scans, one ``op`` per output.
+    Work is O(n) ops independent of window size.
+    """
+    n = x.shape[axis]
+    if window < 1 or window > n:
+        raise ValueError(f"bad window {window} for length {n}")
+    if window == 1:
+        return x
+    x = jnp.moveaxis(x, axis, -1)
+    out_len = n - window + 1
+    pad = (-n) % window
+    xp = jnp.concatenate(
+        [x, jnp.full(x.shape[:-1] + (pad,), init, dtype=x.dtype)], axis=-1
+    )
+    nblk = xp.shape[-1] // window
+    blocks = xp.reshape(xp.shape[:-1] + (nblk, window))
+    last = blocks.ndim - 1  # associative_scan requires a non-negative axis
+    pre = jax.lax.associative_scan(op, blocks, axis=last)
+    suf = jax.lax.associative_scan(op, blocks, axis=last, reverse=True)
+    pre = pre.reshape(xp.shape)
+    suf = suf.reshape(xp.shape)
+    # y[i] = op(suffix_scan_at(i), prefix_scan_at(i + w - 1))
+    y = op(
+        jax.lax.slice_in_dim(suf, 0, out_len, axis=-1),
+        jax.lax.slice_in_dim(pre, window - 1, window - 1 + out_len, axis=-1),
+    )
+    return jnp.moveaxis(y, -1, axis)
+
+
+def sliding_max(x: Array, window: int, axis: int = -1) -> Array:
+    return sliding_reduce(
+        x, window, jnp.maximum, jnp.array(-jnp.inf, x.dtype), axis=axis
+    )
+
+
+def sliding_min(x: Array, window: int, axis: int = -1) -> Array:
+    return sliding_reduce(
+        x, window, jnp.minimum, jnp.array(jnp.inf, x.dtype), axis=axis
+    )
+
+
+def sliding_avg(x: Array, window: int, axis: int = -1) -> Array:
+    return (sliding_sum_scan(x, window, axis=axis) / window).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pooling (NHWC), built on the sliding sums
+# ---------------------------------------------------------------------------
+
+def _pool2d(
+    x: Array, window: tuple[int, int], stride: tuple[int, int], reducer, axis_pair
+) -> Array:
+    wh, ww = window
+    sh, sw = stride
+    y = reducer(x, wh, axis=axis_pair[0])
+    y = reducer(y, ww, axis=axis_pair[1])
+    return y[:, ::sh, ::sw, :]
+
+
+def max_pool2d(x: Array, window=(2, 2), stride=None) -> Array:
+    """Max pooling, NHWC. Sliding-reduce evaluation (O(n) comparisons)."""
+    stride = stride or window
+    return _pool2d(x, window, stride, sliding_max, (1, 2))
+
+
+def avg_pool2d(x: Array, window=(2, 2), stride=None) -> Array:
+    """Average pooling, NHWC, two-phase scan evaluation."""
+    stride = stride or window
+    return _pool2d(x, window, stride, sliding_avg, (1, 2))

@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    FSDP_RULES,
+    ParamDef,
+    Runtime,
+    abstract_params,
+    init_params,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "FSDP_RULES",
+    "ParamDef",
+    "Runtime",
+    "abstract_params",
+    "init_params",
+]

@@ -1,0 +1,94 @@
+"""Fault-tolerance utilities: straggler watchdog + restart policy.
+
+On a real multi-pod deployment these hooks sit on every host:
+
+  * ``StepWatchdog`` — tracks an EMA of step wall-time; a step exceeding
+    ``threshold × EMA`` flags a straggler event. In production the action is
+    (1) alert, (2) if persistent, initiate a checkpointed restart excluding
+    the slow host (elastic down-shard — see ``CheckpointManager.restore``).
+    Here the detection logic is real and unit-tested; the remediation is a
+    callback.
+  * ``RestartPolicy`` — bounded exponential-backoff restart budget, the
+    standard "crash-loop" guard for automated restarts.
+  * ``heartbeat_file`` — liveness breadcrumb per host; the launcher's
+    monitor declares a host dead when its heartbeat goes stale (tested via
+    file mtimes).
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable
+
+
+@dataclass
+class StepWatchdog:
+    threshold: float = 3.0  # × EMA before a step is "straggling"
+    decay: float = 0.9
+    warmup_steps: int = 5
+    on_straggler: Callable[[int, float, float], None] | None = None
+    ema: float | None = None
+    seen: int = 0
+    events: list = field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Returns True if this step was flagged."""
+        self.seen += 1
+        flagged = False
+        if self.ema is not None and self.seen > self.warmup_steps:
+            if seconds > self.threshold * self.ema:
+                flagged = True
+                self.events.append((step, seconds, self.ema))
+                if self.on_straggler:
+                    self.on_straggler(step, seconds, self.ema)
+        self.ema = (
+            seconds
+            if self.ema is None
+            else self.decay * self.ema + (1 - self.decay) * seconds
+        )
+        return flagged
+
+
+@dataclass
+class RestartPolicy:
+    max_restarts: int = 5
+    base_backoff_s: float = 1.0
+    max_backoff_s: float = 300.0
+    restarts: int = 0
+
+    def next_backoff(self) -> float | None:
+        """Seconds to wait before restarting, or None if budget exhausted."""
+        if self.restarts >= self.max_restarts:
+            return None
+        delay = min(
+            self.base_backoff_s * (2 ** self.restarts), self.max_backoff_s
+        )
+        self.restarts += 1
+        return delay
+
+    def reset(self):
+        self.restarts = 0
+
+
+def heartbeat_file(run_dir: str | Path, host_id: int) -> Path:
+    p = Path(run_dir) / "heartbeats" / f"host_{host_id}"
+    p.parent.mkdir(parents=True, exist_ok=True)
+    return p
+
+
+def beat(run_dir: str | Path, host_id: int):
+    heartbeat_file(run_dir, host_id).write_text(str(time.time()))
+
+
+def stale_hosts(run_dir: str | Path, *, timeout_s: float) -> list[int]:
+    hb_dir = Path(run_dir) / "heartbeats"
+    if not hb_dir.exists():
+        return []
+    now = time.time()
+    out = []
+    for p in hb_dir.iterdir():
+        if now - float(p.read_text()) > timeout_s:
+            out.append(int(p.name.split("_")[1]))
+    return sorted(out)

@@ -1,0 +1,231 @@
+"""Logical-axis sharding: parameter definitions and mesh rules.
+
+Models declare every parameter as a ``ParamDef(shape, logical_axes, init)``.
+A single rule table maps logical axes to mesh axes (MaxText-style), giving
+
+  * ``jax.eval_shape``-compatible abstract trees for the dry-run,
+  * ``NamedSharding`` trees for pjit in/out shardings,
+  * seeded concrete initialization for real runs and smoke tests.
+
+Rules (production mesh ``(pod, data, model)``):
+
+  batch       -> (pod, data)     pure DP across pods and the data axis
+  vocab       -> model           vocab-parallel embeddings / logits
+  heads       -> model           Megatron attention TP
+  kv_heads    -> model           (replicated automatically when indivisible)
+  mlp         -> model           Megatron FFN TP (column/row)
+  experts     -> model           expert parallelism
+  conv_inner  -> model           mamba d_inner / conv channels
+  embed       -> data if fsdp    ZeRO-3 style parameter sharding (optional)
+  sequence    -> (none)          activations: sequence kept unsharded by
+                                 default; long-context KV cache may shard
+                                 sequence on `data` (see cache_spec)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis per dim
+    init: str = "normal"  # normal | zeros | ones | small_normal
+    dtype: str | None = None  # override model param dtype
+    scale: float | None = None  # stddev override for normal init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(key, d: ParamDef, default_dtype) -> Array:
+    dtype = jnp.dtype(d.dtype or default_dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    fan_in = d.shape[0] if len(d.shape) >= 1 else 1
+    if d.scale is not None:
+        scale = d.scale
+    elif d.init == "normal":
+        scale = 0.02
+    elif d.init == "small":
+        scale = 0.01
+    else:  # fan_in
+        scale = 1.0 / max(fan_in, 1) ** 0.5
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(defs, rng: jax.Array, default_dtype) -> Any:
+    """Concrete seeded init of a ParamDef pytree (dict-of-dicts)."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(k, d, default_dtype) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs, default_dtype) -> Any:
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or default_dtype)),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "vocab": "model",
+    "heads": "model",
+    "heads_flat": "model",  # rwkv (B, L, H*K) projections
+    "kv_heads": "model",
+    # fallback TP axis: shards head_dim when heads %% mesh != 0 (MQA gemma);
+    # pspec() priority gives `heads`/`kv_heads` first claim on `model`.
+    "head_dim": "model",
+    "mlp": "model",
+    "experts": "model",
+    "conv_inner": "model",
+    "embed": None,
+    "layers": None,
+    "stack": None,
+    "seq": None,
+    "kv_seq": None,
+    "state": None,
+}
+
+FSDP_RULES = dict(DEFAULT_RULES, embed="data")
+
+
+def _mesh_axis_size(mesh: Mesh | None, axis) -> int:
+    if mesh is None or axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= _mesh_axis_size(mesh, a)
+        return out
+    return mesh.shape.get(axis, 1) if hasattr(mesh.shape, "get") else dict(
+        zip(mesh.axis_names, mesh.devices.shape)
+    )[axis]
+
+
+@dataclass
+class Runtime:
+    """Execution context threaded through the models.
+
+    mesh=None → single-device (smoke tests): constraints become no-ops.
+    """
+
+    mesh: Mesh | None = None
+    rules: dict[str, Any] = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def _present(self, axis):
+        """Drop mesh axes that don't exist on this mesh (e.g. 'pod' on the
+        single-pod mesh)."""
+        if self.mesh is None or axis is None:
+            return None
+        names = self.mesh.axis_names
+        if isinstance(axis, tuple):
+            t = tuple(a for a in axis if a in names)
+            return t if t else None
+        return axis if axis in names else None
+
+    def axis_for(self, logical: str | None, dim_size: int):
+        """Mesh axis for a logical axis, dropped if indivisible/absent."""
+        if logical is None or self.mesh is None:
+            return None
+        mesh_axis = self._present(self.rules.get(logical))
+        if mesh_axis is None:
+            return None
+        if dim_size % _mesh_axis_size(self.mesh, mesh_axis) != 0:
+            return None  # e.g. kv_heads=1 under model=16 → replicate
+        return mesh_axis
+
+    def dp_axes(self) -> tuple[str, ...]:
+        ax = self._present(self.rules.get("batch"))
+        if ax is None:
+            return ()
+        return ax if isinstance(ax, tuple) else (ax,)
+
+    def pspec(self, axes: tuple[str | None, ...], shape: tuple[int, ...]) -> P:
+        """Per-dim logical→mesh mapping; a mesh axis is used at most once
+        (priority: head-like axes first, then left-to-right)."""
+        order = sorted(
+            range(len(axes)),
+            key=lambda i: 0 if axes[i] in ("heads", "kv_heads", "experts",
+                                           "mlp", "vocab", "conv_inner",
+                                           "heads_flat") else 1,
+        )
+        used: set = set()
+        out: list = [None] * len(axes)
+        for i in order:
+            mesh_axis = self._present(self.rules.get(axes[i])) if axes[i] else None
+            if mesh_axis is None:
+                continue
+            flat = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+            # keep whatever part of the (possibly tuple) mapping is unclaimed
+            avail = tuple(a for a in flat if a not in used)
+            if not avail:
+                continue
+            size = 1
+            for a in avail:
+                size *= _mesh_axis_size(self.mesh, a)
+            if shape[i] % size != 0:
+                continue
+            used.update(avail)
+            out[i] = avail if len(avail) > 1 else avail[0]
+        return P(*out)
+
+    def sharding_for(self, d: ParamDef) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(d.axes, d.shape))
+
+    def param_shardings(self, defs) -> Any:
+        return jax.tree.map(
+            self.sharding_for, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+        )
+
+    def constrain(self, x: Array, *axes: str | None) -> Array:
+        """with_sharding_constraint by logical axes; no-op without a mesh."""
+        if self.mesh is None:
+            return x
+        spec = self.pspec(tuple(axes), x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+    def axis_size(self, logical: str) -> int:
+        if self.mesh is None:
+            return 1
+        return _mesh_axis_size(self.mesh, self._present(self.rules.get(logical)))
+
+    @property
+    def dp_size(self) -> int:
+        return self.axis_size("batch")
+
+
+def spec_tree_to_shardings(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

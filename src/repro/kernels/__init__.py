@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: convolution.
+
+  sliding_conv1d.py  — 1-D sliding conv (generic / custom k∈{3,5} / compound
+                       regimes) + depthwise VPU kernel
+  sliding_conv2d.py  — 2-D sliding conv (the paper's main experiment)
+  im2col_gemm.py     — the GEMM-conv BASELINE (fused-VMEM + true HBM-bloat
+                       variants) and a tiled MXU GEMM
+  sliding_pool.py    — two-phase scan pooling kernel
+  ssm_scan.py        — selective-SSM scan with VMEM-resident state (the
+                       paper's streaming insight applied to Mamba; forward)
+  ops.py             — jit'd public dispatch (padding, regimes, fallbacks)
+  ref.py             — pure-jnp oracles for allclose validation
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,153 @@
+"""Public jit'd entry points for the Pallas kernels (backend dispatch layer).
+
+Call sites across the framework use these wrappers, which
+
+  * resolve padding (SAME/CAUSAL/VALID/explicit) *outside* the kernels so
+    the Pallas grids stay rectangular,
+  * pick the paper's kernel regime from the filter size
+    (``repro.core.conv.regime_for``),
+  * select execution mode: real Pallas lowering on TPU, ``interpret=True``
+    everywhere else (this container is CPU-only — interpret mode executes
+    the kernel body in Python and is how kernels are validated here), and
+  * fall back to the pure-JAX ``repro.core`` implementation for configs the
+    kernels don't cover (dilation > 1, grouped non-depthwise convs).
+
+``backend`` selects the paper's technique (``sliding``) vs the baselines
+(``im2col_gemm`` fused-VMEM, ``im2col_hbm`` true-bloat, ``xla``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import conv as core_conv
+from repro.kernels import im2col_gemm, sliding_conv1d, sliding_conv2d, sliding_pool
+
+Backend = Literal["sliding", "im2col_gemm", "im2col_hbm", "xla"]
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode unless running on a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad1d(x, padding, k, dilation):
+    lo, hi = core_conv._resolve_pad_1d(padding, k, dilation)
+    if lo or hi:
+        x = jnp.pad(x, ((0, 0), (lo, hi), (0, 0)))
+    return x
+
+
+def conv1d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding="VALID",
+    dilation: int = 1,
+    backend: Backend = "sliding",
+    tile_l: int = sliding_conv1d.DEFAULT_TILE_L,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Multi-channel 1-D convolution. x: (B,L,Cin), w: (K,Cin,Cout)."""
+    interpret = use_interpret() if interpret is None else interpret
+    if backend == "xla":
+        return core_conv.conv1d_xla(
+            x, w, stride=stride, padding=padding, dilation=dilation
+        )
+    if dilation > 1:  # kernels cover dilation=1; core handles the rest
+        return core_conv.conv1d(
+            x, w, stride=stride, padding=padding, dilation=dilation,
+            backend="sliding" if backend == "sliding" else "im2col_gemm",
+        )
+    x = _pad1d(x, padding, w.shape[0], dilation)
+    if backend == "sliding":
+        return sliding_conv1d.conv1d_sliding_pallas(
+            x, w, stride=stride, tile_l=tile_l, interpret=interpret
+        )
+    if backend == "im2col_gemm":
+        return im2col_gemm.conv1d_im2col_fused_pallas(
+            x, w, stride=stride, tile_l=tile_l, interpret=interpret
+        )
+    if backend == "im2col_hbm":
+        return im2col_gemm.conv1d_im2col_hbm(
+            x, w, stride=stride, interpret=interpret
+        )
+    raise ValueError(backend)
+
+
+def conv1d_depthwise(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding="CAUSAL",
+    tile_l: int = sliding_conv1d.DEFAULT_TILE_L,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Depthwise 1-D sliding conv (Mamba conv path). x: (B,L,C), w: (K,C)."""
+    interpret = use_interpret() if interpret is None else interpret
+    x = _pad1d(x, padding, w.shape[0], 1)
+    return sliding_conv1d.conv1d_depthwise_pallas(
+        x, w, stride=stride, tile_l=tile_l, interpret=interpret
+    )
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: tuple[int, int] = (1, 1),
+    padding="VALID",
+    dilation: tuple[int, int] = (1, 1),
+    backend: Backend = "sliding",
+    tile_h: int = sliding_conv2d.DEFAULT_TILE_H,
+    tile_w: int = sliding_conv2d.DEFAULT_TILE_W,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Multi-channel 2-D convolution. x: (B,H,W,Cin), w: (kh,kw,Cin,Cout)."""
+    interpret = use_interpret() if interpret is None else interpret
+    if backend == "xla":
+        return core_conv.conv2d_xla(
+            x, w, stride=stride, padding=padding, dilation=dilation
+        )
+    if dilation != (1, 1):
+        return core_conv.conv2d(
+            x, w, stride=stride, padding=padding, dilation=dilation,
+            backend="sliding" if backend == "sliding" else "im2col_gemm",
+        )
+    kh, kw = w.shape[:2]
+    (plo_h, phi_h), (plo_w, phi_w) = core_conv._resolve_pad_2d(
+        padding, kh, kw, dilation
+    )
+    if plo_h or phi_h or plo_w or phi_w:
+        x = jnp.pad(x, ((0, 0), (plo_h, phi_h), (plo_w, phi_w), (0, 0)))
+    if backend == "sliding":
+        return sliding_conv2d.conv2d_sliding_pallas(
+            x, w, stride=stride, tile_h=tile_h, tile_w=tile_w, interpret=interpret
+        )
+    if backend == "im2col_hbm" or backend == "im2col_gemm":
+        return im2col_gemm.conv2d_im2col_hbm(x, w, stride=stride, interpret=interpret)
+    raise ValueError(backend)
+
+
+def matmul(a: jax.Array, b: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    interpret = use_interpret() if interpret is None else interpret
+    return im2col_gemm.matmul_pallas(a, b, interpret=interpret)
+
+
+def pool1d(
+    x: jax.Array,
+    *,
+    window: int,
+    op: str = "sum",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """VALID sliding pooling along axis 1. x: (B,L,C)."""
+    interpret = use_interpret() if interpret is None else interpret
+    return sliding_pool.sliding_pool_pallas(
+        x, window=window, op=op, interpret=interpret
+    )

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The oracles are the `repro.core` implementations (themselves validated
+against ``jax.lax.conv_general_dilated`` / ``reduce_window``); tests sweep
+shapes/dtypes and ``assert_allclose`` kernels against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv import (
+    conv1d_depthwise_sliding,
+    conv1d_sliding,
+    conv2d_sliding,
+)
+from repro.core.sliding import sliding_max, sliding_sum_scan
+
+
+def conv1d_ref(x, w, *, stride: int = 1) -> jax.Array:
+    """VALID multi-channel 1-D conv oracle. x: (B,L,Cin), w: (K,Cin,Cout)."""
+    return conv1d_sliding(x, w, stride=stride, padding="VALID")
+
+
+def conv1d_depthwise_ref(x, w, *, stride: int = 1) -> jax.Array:
+    """VALID depthwise 1-D conv oracle. x: (B,L,C), w: (K,C)."""
+    return conv1d_depthwise_sliding(x, w, stride=stride, padding="VALID")
+
+
+def conv2d_ref(x, w, *, stride=(1, 1)) -> jax.Array:
+    """VALID 2-D conv oracle. x: (B,H,W,Cin), w: (kh,kw,Cin,Cout)."""
+    return conv2d_sliding(x, w, stride=stride, padding="VALID")
+
+
+def matmul_ref(a, b) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def pool_ref(x, *, window: int, op: str = "sum") -> jax.Array:
+    """VALID sliding pooling along axis 1 oracle. x: (B,L,C)."""
+    if op == "sum":
+        return sliding_sum_scan(x, window, axis=1)
+    if op == "avg":
+        return (sliding_sum_scan(x, window, axis=1).astype(jnp.float32) / window).astype(
+            x.dtype
+        )
+    if op == "max":
+        return sliding_max(x, window, axis=1)
+    raise ValueError(op)

@@ -1,0 +1,232 @@
+"""Pallas TPU kernels: 1-D Sliding Window convolution (paper §2, 1-D case).
+
+Three regimes, mirroring the paper's CPU kernels (see DESIGN.md §2 for the
+CPU→TPU mapping):
+
+  * ``custom``   (K ∈ {3, 5})   — tap-stacked VMEM gather + ONE MXU matmul of
+    shape (TL, K·Cin) @ (K·Cin, Cout). This is the "optimal number of
+    operations" variant: the K× stacking happens in VMEM *registers*, never
+    in HBM, and the MXU sees a single large contraction instead of K small
+    ones (the paper's Conclusion-§3 "small matrix multiplication"
+    reformulation).
+  * ``generic``  (K ≤ 17)       — unrolled shift-and-accumulate: each tap is
+    a shifted in-VMEM read followed by a (TL, Cin) @ (Cin, Cout) MXU matmul.
+    The shift is an address offset into the halo tile — the TPU analogue of
+    the CPU vector slide.
+  * ``compound`` (K > 17)       — the tap range no longer fits one halo tile
+    comfortably; taps are processed in chunks of ``TAP_CHUNK`` via an extra
+    (innermost) grid dimension that *revisits* the output block,
+    accumulating partial sums — the analogue of the paper's compound-vector
+    kernel operating on multiple hardware vectors.
+
+All kernels: NLC layout, stride ≥ 1 (loaded-tile register slicing), f32
+accumulation, bf16/f32 in/out. HBM traffic is O(input + output) — the im2col
+column matrix is never materialized (compare ``repro.kernels.im2col_gemm``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_L = 256
+TAP_CHUNK = 16  # taps per compound chunk ~= one "hardware vector" of taps
+
+
+def _acc(x_ref):
+    return jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _kernel_generic(x_ref, w_ref, o_ref, *, taps: int, tile_l: int, stride: int):
+    """Unrolled shift-and-MXU-matmul over taps (generic / vector-slide)."""
+    x = x_ref[0]  # ((TL-1)*s + K, Cin) halo tile, VMEM-resident
+    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
+    for k in range(taps):
+        xs = x[k : k + (tile_l - 1) * stride + 1]
+        if stride > 1:
+            xs = xs[::stride]
+        acc += jnp.dot(xs, w_ref[k], preferred_element_type=jnp.float32)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def _kernel_custom(x_ref, w_ref, o_ref, *, taps: int, tile_l: int, stride: int):
+    """Tap-stacked single-matmul kernel for K in {3, 5} (custom regime)."""
+    x = x_ref[0]
+    cols = []
+    for k in range(taps):
+        xs = x[k : k + (tile_l - 1) * stride + 1]
+        if stride > 1:
+            xs = xs[::stride]
+        cols.append(xs)
+    stacked = jnp.concatenate(cols, axis=-1)  # (TL, K*Cin) — in VMEM only
+    wf = w_ref[...].reshape(taps * w_ref.shape[1], w_ref.shape[2])
+    o_ref[0] = jnp.dot(
+        stacked, wf, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _kernel_compound(x_ref, w_ref, o_ref, *, chunk: int, tile_l: int, stride: int):
+    """Tap-chunked accumulation (compound regime): output block revisited
+    across the innermost grid dim; chunk c covers taps [c*chunk, (c+1)*chunk).
+    """
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[0] = jnp.zeros(o_ref.shape[1:], o_ref.dtype)
+
+    x = x_ref[0]
+    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
+    for k in range(chunk):  # taps within the chunk: unrolled slides
+        xs = x[k : k + (tile_l - 1) * stride + 1]
+        if stride > 1:
+            xs = xs[::stride]
+        acc += jnp.dot(xs, w_ref[k], preferred_element_type=jnp.float32)
+    o_ref[0] = (o_ref[0].astype(jnp.float32) + acc).astype(o_ref.dtype)
+
+
+def _kernel_depthwise(x_ref, w_ref, o_ref, *, taps: int, tile_l: int, stride: int):
+    """Depthwise (VPU) kernel: per-tap shifted elementwise FMA — the most
+    literal TPU transcription of the paper's vector-slide inner loop."""
+    x = x_ref[0]
+    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
+    for k in range(taps):
+        xs = x[k : k + (tile_l - 1) * stride + 1]
+        if stride > 1:
+            xs = xs[::stride]
+        acc += xs.astype(jnp.float32) * w_ref[k].astype(jnp.float32)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+def _pad_len(L_out_total: int, tile_l: int) -> int:
+    return pl.cdiv(L_out_total, tile_l) * tile_l
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "tile_l", "regime", "interpret"),
+)
+def conv1d_sliding_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    tile_l: int = DEFAULT_TILE_L,
+    regime: str | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """VALID 1-D sliding conv. x: (B, L, Cin), w: (K, Cin, Cout).
+
+    Padding is handled by the caller (``repro.kernels.ops``) so the kernel
+    grid stays rectangular. Output length: (L - K) // stride + 1.
+    """
+    B, L, Cin = x.shape
+    K, _, Cout = w.shape
+    out_len = (L - K) // stride + 1
+    if regime is None:
+        from repro.core.conv import regime_for
+
+        regime = regime_for(K)
+    tile_l = min(tile_l, out_len)
+    n_tiles = pl.cdiv(out_len, tile_l)
+    padded_out = n_tiles * tile_l
+    halo = (tile_l - 1) * stride + K  # input rows a tile touches
+    # pad input so every tile's halo read is in-bounds
+    need = (padded_out - 1) * stride + K
+    if need > L:
+        x = jnp.pad(x, ((0, 0), (0, need - L), (0, 0)))
+
+    if regime == "compound":
+        n_chunks = pl.cdiv(K, TAP_CHUNK)
+        Kp = n_chunks * TAP_CHUNK
+        if Kp > K:
+            w = jnp.pad(w, ((0, Kp - K), (0, 0), (0, 0)))
+            x = jnp.pad(x, ((0, 0), (0, Kp - K), (0, 0)))
+        chunk_halo = (tile_l - 1) * stride + TAP_CHUNK
+        kernel = functools.partial(
+            _kernel_compound, chunk=TAP_CHUNK, tile_l=tile_l, stride=stride
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid=(B, n_tiles, n_chunks),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, pl.Element(chunk_halo, (0, 0)), Cin),
+                    lambda b, i, c: (b, i * tile_l * stride + c * TAP_CHUNK, 0),
+                ),
+                pl.BlockSpec((TAP_CHUNK, Cin, Cout), lambda b, i, c: (c, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, tile_l, Cout), lambda b, i, c: (b, i, 0)),
+            out_shape=jax.ShapeDtypeStruct((B, padded_out, Cout), x.dtype),
+            interpret=interpret,
+        )(x, w)
+    else:
+        body = _kernel_custom if regime == "custom" else _kernel_generic
+        kernel = functools.partial(body, taps=K, tile_l=tile_l, stride=stride)
+        out = pl.pallas_call(
+            kernel,
+            grid=(B, n_tiles),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, pl.Element(halo, (0, 0)), Cin),
+                    lambda b, i: (b, i * tile_l * stride, 0),
+                ),
+                pl.BlockSpec((K, Cin, Cout), lambda b, i: (0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, tile_l, Cout), lambda b, i: (b, i, 0)),
+            out_shape=jax.ShapeDtypeStruct((B, padded_out, Cout), x.dtype),
+            interpret=interpret,
+        )(x, w)
+    return out[:, :out_len]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "tile_l", "interpret")
+)
+def conv1d_depthwise_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    tile_l: int = DEFAULT_TILE_L,
+    interpret: bool = False,
+) -> jax.Array:
+    """VALID depthwise sliding conv. x: (B, L, C), w: (K, C)."""
+    B, L, C = x.shape
+    K, _ = w.shape
+    out_len = (L - K) // stride + 1
+    tile_l = min(tile_l, out_len)
+    n_tiles = pl.cdiv(out_len, tile_l)
+    padded_out = n_tiles * tile_l
+    halo = (tile_l - 1) * stride + K
+    need = (padded_out - 1) * stride + K
+    if need > L:
+        x = jnp.pad(x, ((0, 0), (0, need - L), (0, 0)))
+    kernel = functools.partial(
+        _kernel_depthwise, taps=K, tile_l=tile_l, stride=stride
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, n_tiles),
+        in_specs=[
+            pl.BlockSpec(
+                (1, pl.Element(halo, (0, 0)), C),
+                lambda b, i: (b, i * tile_l * stride, 0),
+            ),
+            pl.BlockSpec((K, C), lambda b, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_l, C), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, padded_out, C), x.dtype),
+        interpret=interpret,
+    )(x, w)
+    return out[:, :out_len]

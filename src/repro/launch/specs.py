@@ -1,0 +1,113 @@
+"""ShapeDtypeStruct input stand-ins + sharding specs for every
+(architecture × shape) cell — the dry-run contract (no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ParamDef, Runtime
+from repro.models.llava import VISION_DIM
+
+Sds = jax.ShapeDtypeStruct
+
+
+def _tok(b, l):
+    return Sds((b, l), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Batch stand-ins for the step the shape lowers (train/prefill: full
+    batch; decode: one-token step inputs; the cache is supplied separately
+    via ``cache_specs``)."""
+    B, L = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    cd = jnp.dtype(cfg.compute_dtype)
+    if kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            # enc-dec: seq_len split between encoder frames and decoder tokens
+            half = L // 2
+            d = {"frames": Sds((B, half, cfg.d_model), cd), "tokens": _tok(B, half)}
+            if kind == "train":
+                d["labels"] = _tok(B, half)
+            return d
+        if cfg.family == "vlm":
+            P_ = min(cfg.num_patches, L // 2)
+            d = {"patches": Sds((B, P_, VISION_DIM), cd), "tokens": _tok(B, L - P_)}
+            if kind == "train":
+                d["labels"] = _tok(B, L - P_)
+            return d
+        d = {"tokens": _tok(B, L)}
+        if kind == "train":
+            d["labels"] = _tok(B, L)
+        return d
+    if kind == "decode":
+        return {"tokens": _tok(B, 1), "pos": Sds((), jnp.int32)}
+    raise ValueError(kind)
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, rt: Runtime):
+    if rt.mesh is None:
+        return None
+    out = {}
+    for k, v in input_specs(cfg, shape).items():
+        axes: tuple = ("batch",) + (None,) * (len(v.shape) - 1)
+        if v.shape == ():
+            axes = ()
+        out[k] = NamedSharding(rt.mesh, rt.pspec(axes, v.shape))
+    return out
+
+
+def cache_specs(model, B: int, S: int) -> Any:
+    """Abstract cache tree (ShapeDtypeStructs)."""
+    defs = model.cache_defs(B, S)
+    return jax.tree.map(
+        lambda d: Sds(d.shape, jnp.dtype(d.dtype or model.cfg.param_dtype)),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def cache_shardings(model, B: int, S: int, rt: Runtime):
+    if rt.mesh is None:
+        return None
+    defs = model.cache_defs(B, S)
+    return jax.tree.map(
+        rt.sharding_for, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+
+
+def opt_state_specs_tree(param_defs_tree, rt: Runtime, state_dtype: str):
+    """NamedSharding tree congruent to ``optim.init_opt_state`` output."""
+
+    def moment(d: ParamDef):
+        if state_dtype == "int8":
+            q = rt.sharding_for(d)
+            s_shape = (*d.shape[:-1], 1) if len(d.shape) else ()
+            s_axes = d.axes if len(d.shape) else ()
+            s = (
+                NamedSharding(rt.mesh, rt.pspec(s_axes, s_shape))
+                if rt.mesh is not None else None
+            )
+            return (q, s)
+        return rt.sharding_for(d)
+
+    is_def = lambda x: isinstance(x, ParamDef)
+    m = jax.tree.map(moment, param_defs_tree, is_leaf=is_def)
+    scalar = NamedSharding(rt.mesh, P()) if rt.mesh is not None else None
+    return {"m": m, "v": m, "count": scalar}
+
+
+def abstract_opt_state(param_defs_tree, param_dtype: str, state_dtype: str):
+    def moment(d: ParamDef):
+        if state_dtype == "int8":
+            s_shape = (*d.shape[:-1], 1) if len(d.shape) else ()
+            return (Sds(d.shape, jnp.int8), Sds(s_shape, jnp.float32))
+        return Sds(d.shape, jnp.dtype(state_dtype))
+
+    is_def = lambda x: isinstance(x, ParamDef)
+    m = jax.tree.map(moment, param_defs_tree, is_leaf=is_def)
+    return {"m": m, "v": m, "count": Sds((), jnp.int32)}

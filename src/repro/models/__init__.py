@@ -1,0 +1,29 @@
+"""Model zoo registry: family -> implementation."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Runtime
+
+
+def build_model(cfg: ModelConfig, rt: Runtime | None = None):
+    if cfg.family in ("dense", "moe"):
+        from repro.models.transformer import DenseLM
+
+        return DenseLM(cfg, rt)
+    if cfg.family == "vlm":
+        from repro.models.llava import Llava
+
+        return Llava(cfg, rt)
+    if cfg.family == "ssm":
+        from repro.models.rwkv6 import RWKV6
+
+        return RWKV6(cfg, rt, wkv_mode=cfg.rwkv_wkv_mode)
+    if cfg.family == "hybrid":
+        from repro.models.jamba import Jamba
+
+        return Jamba(cfg, rt)
+    if cfg.family == "audio":
+        from repro.models.whisper import Whisper
+
+        return Whisper(cfg, rt)
+    raise ValueError(f"unknown family {cfg.family!r}")

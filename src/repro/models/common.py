@@ -1,0 +1,87 @@
+"""Shared model plumbing: scan-over-layers, stacked ParamDefs, cache defs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamDef, Runtime
+
+Array = jax.Array
+
+
+def stack_defs(defs: Any, n: int) -> Any:
+    """Add a leading `layers` dim to every ParamDef (scan-over-layers)."""
+    return jax.tree.map(
+        lambda d: dataclasses.replace(
+            d, shape=(n, *d.shape), axes=("layers", *d.axes)
+        ),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def scan_blocks(
+    x: Array,
+    stacked: Any,
+    body: Callable[[Array, Any], Array],
+    *,
+    remat: bool = True,
+    collect: bool = False,
+):
+    """Run `body` over the leading (layers) dim of `stacked` params.
+
+    collect=True also stacks per-layer auxiliary outputs (body must return
+    (x, aux) pairs) — used by prefill to emit KV caches.
+
+    The carry passes through an optimization barrier each step: without it
+    XLA hoists dtype converts of the *entire* stacked residual (layers, B,
+    L, D) out of the backward while-loop, materializing an f32 copy of all
+    per-layer activations at once (observed: +9 GiB/device on gemma-2b).
+    """
+
+    def barrier_body(carry, lp):
+        return body(jax.lax.optimization_barrier(carry), lp)
+
+    if collect:
+        fn = jax.checkpoint(barrier_body) if remat else barrier_body
+
+        def step(carry, lp):
+            new, aux = fn(carry, lp)
+            return new, aux
+
+        return jax.lax.scan(step, x, stacked)
+    fn = jax.checkpoint(barrier_body) if remat else barrier_body
+
+    def step(carry, lp):
+        return fn(carry, lp), None
+
+    out, _ = jax.lax.scan(step, x, stacked)
+    return out
+
+
+def unrolled_blocks(x, layer_list, body, *, remat=True):
+    fn = jax.checkpoint(body) if remat else body
+    for lp in layer_list:
+        x = fn(x, lp)
+    return x
+
+
+def kv_cache_defs(cfg: ModelConfig, layers: int, batch: int, seq: int):
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    d = dict(
+        k=ParamDef(
+            (layers, batch, seq, kv, hd),
+            ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+            init="zeros",
+        ),
+        v=ParamDef(
+            (layers, batch, seq, kv, hd),
+            ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+            init="zeros",
+        ),
+    )
+    return d

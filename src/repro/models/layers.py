@@ -1,0 +1,407 @@
+"""Shared transformer building blocks (pure-functional JAX).
+
+Conventions:
+  * activations ``compute_dtype`` (bf16), reductions/softmax/norms in f32,
+  * GQA attention with grouped einsums (no KV head repetition in memory),
+  * flash-style chunked attention (online softmax over KV blocks inside a
+    scan) for long sequences — O(L·chunk) score memory instead of O(L²),
+  * decode path with a static pre-allocated KV cache,
+  * sequence-chunked cross-entropy so the (B, L, vocab) logits tensor is
+    never materialized (matters for the 152k/256k vocabs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamDef, Runtime
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": functools.partial(jax.nn.gelu, approximate=True),
+        "gelu_plain": functools.partial(jax.nn.gelu, approximate=True),
+        "relu_sq": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., L, H, D); positions: (..., L) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., L, D/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d_model: int) -> Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, dim / d_model)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention parameter defs
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    defs = {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", "head_dim"), init="fan_in"),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim"), init="fan_in"),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim"), init="fan_in"),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "embed"), init="fan_in"),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), init="ones")
+        defs["k_norm"] = ParamDef((hd,), (None,), init="ones")
+    return defs
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None) -> dict[str, ParamDef]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.activation == "gelu_plain":  # ungated (whisper)
+        return {
+            "wi": ParamDef((d, f), ("embed", "mlp"), init="fan_in"),
+            "wo": ParamDef((f, d), ("mlp", "embed"), init="fan_in"),
+        }
+    return {
+        "wg": ParamDef((d, f), ("embed", "mlp"), init="fan_in"),
+        "wu": ParamDef((d, f), ("embed", "mlp"), init="fan_in"),
+        "wd": ParamDef((f, d), ("mlp", "embed"), init="fan_in"),
+    }
+
+
+def mlp_apply(p, x: Array, cfg: ModelConfig) -> Array:
+    f = act_fn(cfg.activation)
+    if cfg.activation == "gelu_plain":
+        h = f(jnp.einsum("bld,df->blf", x, p["wi"].astype(x.dtype)))
+        return jnp.einsum("blf,fd->bld", h, p["wo"].astype(x.dtype))
+    g = jnp.einsum("bld,df->blf", x, p["wg"].astype(x.dtype))
+    u = jnp.einsum("bld,df->blf", x, p["wu"].astype(x.dtype))
+    return jnp.einsum("blf,fd->bld", f(g) * u, p["wd"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Attention forward paths
+# ---------------------------------------------------------------------------
+
+def _qkv(p, x: Array, cfg: ModelConfig, positions: Array, rope: bool = True):
+    dt = x.dtype
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bld,dhk->blhk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bld,dhk->blhk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _group(q: Array, kv_heads: int):
+    """(B, L, H, D) -> (B, L, KV, G, D) grouped query layout."""
+    B, L, H, D = q.shape
+    return q.reshape(B, L, kv_heads, H // kv_heads, D)
+
+
+def full_attention(
+    q: Array, k: Array, v: Array, *, causal: bool, q_offset: int = 0
+) -> Array:
+    """Direct attention (short sequences / decode). q: (B,Lq,H,D), k/v: (B,Lk,KV,D)."""
+    B, Lq, H, D = q.shape
+    KV = k.shape[2]
+    qg = _group(q, KV)
+    scale = D ** -0.5
+    scores = jnp.einsum("blkgd,bmkd->bkglm", qg, k).astype(jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(Lq) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkglm,bmkd->blkgd", w, v)
+    return out.reshape(B, Lq, H, D)
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool,
+    chunk: int,
+    kv_mask: Array | None = None,
+) -> Array:
+    """Flash-style attention: scan over KV chunks with online softmax.
+
+    q: (B, Lq, H, D); k/v: (B, Lk, KV, D); non-chunk-divisible lengths are
+    padded internally (padded KV masked, padded Q rows trimmed).
+    Score memory: O(cq*ck) per step instead of O(Lq*Lk).
+    Causal masking is applied per block pair; fully-masked pairs still cost
+    FLOPs in this baseline (the §Perf log addresses recovering them).
+    """
+    B, Lq0, H, D = q.shape
+    Lk0 = k.shape[1]
+    pad_q = (-Lq0) % min(chunk, Lq0)
+    pad_k = (-Lk0) % min(chunk, Lk0)
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        base = jnp.arange(Lk0 + pad_k)[None, :] < Lk0
+        if kv_mask is not None:
+            kv_mask = jnp.pad(kv_mask, ((0, 0), (0, pad_k))) & base
+        else:
+            kv_mask = jnp.broadcast_to(base, (B, Lk0 + pad_k))
+    B, Lq, H, D = q.shape
+    Lk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    cq = min(chunk, Lq)
+    ck = min(chunk, Lk)
+    nq, nk = Lq // cq, Lk // ck
+    scale = D ** -0.5
+    qg = _group(q, KV).reshape(B, nq, cq, KV, G, D)
+    kc = k.reshape(B, nk, ck, KV, D)
+    vc = v.reshape(B, nk, ck, KV, D)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def q_block(qi, q_chunk):
+        # remat per q-chunk: backward recomputes score blocks instead of
+        # saving the O(L²/chunk²) stack of (cq, ck) probability tiles.
+        # q_chunk: (B, cq, KV, G, D)
+        m0 = jnp.full((B, KV, G, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, cq, KV, G, D), jnp.float32)
+
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            kj, k_chunk, v_chunk = inp
+            s = (
+                jnp.einsum("blkgd,bmkd->bkglm", q_chunk, k_chunk).astype(
+                    jnp.float32
+                )
+                * scale
+            )  # (B, KV, G, cq, ck)
+            if causal:
+                qpos = qi * cq + jnp.arange(cq)
+                kpos = kj * ck + jnp.arange(ck)
+                s = jnp.where(
+                    qpos[:, None] >= kpos[None, :], s, -jnp.inf
+                )
+            if kv_mask is not None:
+                mblk = jax.lax.dynamic_slice_in_dim(kv_mask, kj * ck, ck, axis=1)
+                s = jnp.where(mblk[:, None, None, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkglm,bmkd->blkgd", p.astype(q.dtype), v_chunk)
+            acc_new = acc * jnp.moveaxis(corr, 3, 1)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        ks = jnp.moveaxis(kc, 1, 0)
+        vs = jnp.moveaxis(vc, 1, 0)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        l_safe = jnp.where(l > 0, l, 1.0)
+        out = acc / jnp.moveaxis(l_safe, 3, 1)[..., None]
+        return out.astype(q.dtype)
+
+    qs = jnp.moveaxis(qg, 1, 0)  # (nq, B, cq, KV, G, D)
+    out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qs))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Lq, KV, G, D)
+    return out.reshape(B, Lq, H, D)[:, :Lq0]
+
+
+def attention_train(
+    p, x: Array, cfg: ModelConfig, rt: Runtime, positions: Array | None = None,
+    rope: bool = True,
+) -> Array:
+    """Causal self-attention over a full sequence (train / prefill)."""
+    B, L, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(L)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions, rope=rope)
+    q = rt.constrain(q, "batch", None, "heads", "head_dim")
+    k = rt.constrain(k, "batch", None, "kv_heads", "head_dim")
+    v = rt.constrain(v, "batch", None, "kv_heads", "head_dim")
+    if L > cfg.attn_chunk:
+        out = chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    else:
+        out = full_attention(q, k, v, causal=True)
+    out = rt.constrain(out, "batch", None, "heads", "head_dim")
+    return jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(x.dtype))
+
+
+def attention_decode(
+    p,
+    x: Array,
+    cache: dict[str, Array],
+    pos: Array,
+    cfg: ModelConfig,
+    rt: Runtime,
+    rope: bool = True,
+) -> tuple[Array, dict[str, Array]]:
+    """Single-token decode step against a static KV cache.
+
+    x: (B, 1, D); cache: {"k","v": (B, S, KV, hd)}; pos: () int32.
+    """
+    B, _, _ = x.shape
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, x, cfg, positions, rope=rope)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    S = k.shape[1]
+    KV = k.shape[2]
+    qg = _group(q, KV)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("blkgd,bmkd->bkglm", qg, k).astype(jnp.float32) * scale
+    mask = jnp.arange(S)[None, :] <= pos
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkglm,bmkd->blkgd", w, v).reshape(*q.shape)
+    y = jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(x.dtype))
+    return y, {"k": k, "v": v}
+
+
+def cross_attention_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    return attention_defs(cfg.replace(qk_norm=False))
+
+
+def cross_attention(
+    p, x: Array, enc_kv: tuple[Array, Array], cfg: ModelConfig, rt: Runtime
+) -> Array:
+    """Decoder cross-attention; enc_kv = precomputed (k, v) of encoder output."""
+    dt = x.dtype
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"].astype(dt))
+    k, v = enc_kv
+    if x.shape[1] > cfg.attn_chunk:
+        out = chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    else:
+        out = full_attention(q, k, v, causal=False)
+    return jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(dt))
+
+
+def encode_kv(p, enc_out: Array, cfg: ModelConfig) -> tuple[Array, Array]:
+    dt = enc_out.dtype
+    k = jnp.einsum("bld,dhk->blhk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bld,dhk->blhk", enc_out, p["wv"].astype(dt))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Embedding / loss
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    defs = {
+        "tok": ParamDef(
+            (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), init="normal"
+        )
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), init="normal"
+        )
+    return defs
+
+
+def embed_tokens(p, tokens: Array, cfg: ModelConfig) -> Array:
+    e = p["tok"].astype(cdtype(cfg))[tokens]
+    if cfg.name.startswith("gemma"):
+        e = e * jnp.asarray(cfg.d_model ** 0.5, e.dtype)
+    return e
+
+
+def unembed_matrix(p, cfg: ModelConfig) -> Array:
+    if cfg.tie_embeddings:
+        return p["tok"].T
+    return p["unembed"]
+
+
+def lm_logits(p, h: Array, cfg: ModelConfig) -> Array:
+    w = unembed_matrix(p, cfg).astype(h.dtype)
+    return jnp.einsum("bld,dv->blv", h, w, preferred_element_type=jnp.float32)
+
+
+def chunked_ce_loss(
+    p_embed, h: Array, labels: Array, cfg: ModelConfig, rt: Runtime
+) -> Array:
+    """Mean next-token CE, scanning over sequence chunks so full (B, L, V)
+    logits never exist. h: (B, L, D); labels: (B, L) (-1 = masked)."""
+    B, L, D = h.shape
+    c = min(cfg.loss_chunk, L)
+    n = L // c
+    w = unembed_matrix(p_embed, cfg)
+    hc = jnp.moveaxis(h[:, : n * c].reshape(B, n, c, D), 1, 0)
+    yc = jnp.moveaxis(labels[:, : n * c].reshape(B, n, c), 1, 0)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, inp):
+        # remat: the (B, c, V) logits chunk is recomputed in backward rather
+        # than stacked across chunks (matters at 152k/256k vocab).
+        tot, cnt = carry
+        hb, yb = inp
+        logits = jnp.einsum(
+            "bld,dv->blv", hb, w.astype(hb.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        logits = rt.constrain(logits, "batch", None, "vocab")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(yb, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (yb >= 0).astype(jnp.float32)
+        tot = tot + ((logz - gold) * mask).sum()
+        cnt = cnt + mask.sum()
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hc, yc)
+    )
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,349 @@
+"""RWKV6 "Finch" (arXiv:2404.05892) — attention-free LM with data-dependent
+decay.
+
+Paper-technique site: the token shift is a k=2 sliding-window mix — each
+block reads its input together with a one-step shifted view (the sliding
+primitive with window 2), never materializing a gathered buffer.
+
+WKV evaluation:
+  * ``wkv_mode="scan"``   (default, faithful baseline) — sequential
+    recurrence ``S_t = diag(w_t)·S_{t-1} + k_tᵀv_t`` via ``lax.scan`` with
+    chunked checkpointing; numerically exact, VPU-bound.
+  * ``wkv_mode="chunked"`` — FLA-style chunkwise parallel form: intra-chunk
+    (c×c) masked matmuls + inter-chunk state propagation; MXU-friendly.
+    Used by the §Perf hillclimb; validated against the scan in tests.
+
+State per layer: S (B, H, K, V) f32 + token-shift carries (B, d) for the
+time-mix and channel-mix blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamDef, Runtime, abstract_params, init_params
+from repro.models import layers as L
+from repro.models.common import scan_blocks, stack_defs
+
+Array = jax.Array
+
+LORA_R = 32  # ddlerp LoRA rank
+DECAY_R = 64  # decay LoRA rank
+WKV_CHUNK = 32
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+# ---------------------------------------------------------------------------
+# parameter defs
+# ---------------------------------------------------------------------------
+
+def block_defs(cfg: ModelConfig) -> dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    H, K = _heads(cfg), cfg.rwkv_head_dim
+    return {
+        "ln1": ParamDef((d,), ("embed",), init="ones"),
+        "ln2": ParamDef((d,), ("embed",), init="ones"),
+        # time-mix (attention analogue)
+        "tm_maa_x": ParamDef((d,), ("embed",), init="zeros"),
+        "tm_maa": ParamDef((5, d), (None, "embed"), init="zeros"),  # w,k,v,r,g
+        "tm_A": ParamDef((d, 5 * LORA_R), ("embed", None), init="small"),
+        "tm_B": ParamDef((5, LORA_R, d), (None, None, "embed"), init="small"),
+        "decay_base": ParamDef((d,), ("embed",), init="zeros"),
+        "decay_A": ParamDef((d, DECAY_R), ("embed", None), init="small"),
+        "decay_B": ParamDef((DECAY_R, d), (None, "embed"), init="small"),
+        "bonus": ParamDef((H, K), ("heads", None), init="small"),
+        "wr": ParamDef((d, d), ("embed", "heads_flat"), init="fan_in"),
+        "wk": ParamDef((d, d), ("embed", "heads_flat"), init="fan_in"),
+        "wv": ParamDef((d, d), ("embed", "heads_flat"), init="fan_in"),
+        "wg": ParamDef((d, d), ("embed", "heads_flat"), init="fan_in"),
+        "wo": ParamDef((d, d), ("heads_flat", "embed"), init="fan_in"),
+        "gn_scale": ParamDef((d,), ("embed",), init="ones"),
+        # channel-mix
+        "cm_maa_k": ParamDef((d,), ("embed",), init="zeros"),
+        "cm_maa_r": ParamDef((d,), ("embed",), init="zeros"),
+        "cm_wk": ParamDef((d, f), ("embed", "mlp"), init="fan_in"),
+        "cm_wv": ParamDef((f, d), ("mlp", "embed"), init="fan_in"),
+        "cm_wr": ParamDef((d, d), ("embed", "embed"), init="fan_in"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sliding-window token shift (the paper primitive, window = 2)
+# ---------------------------------------------------------------------------
+
+def token_shift(x: Array, prev: Array | None = None) -> Array:
+    """x_{t-1} view of x — sliding window k=2. prev: carry for decode."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(x, xs, maa_x, maa, A, Bm):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    base = x + (xs - x) * maa_x
+    lora = jnp.einsum(
+        "bld,dr->blr", base, A.astype(x.dtype)
+    )  # (B, L, 5R)
+    lora = jnp.tanh(lora).reshape(*x.shape[:2], 5, LORA_R)
+    dd = jnp.einsum("blfr,frd->fbld", lora, Bm.astype(x.dtype))
+    mix = maa[:, None, None, :] + dd  # (5, B, L, d)
+    return x[None] + (xs - x)[None] * mix
+
+
+# ---------------------------------------------------------------------------
+# WKV evaluation
+# ---------------------------------------------------------------------------
+
+def wkv_scan(r, k, v, logw, u, state):
+    """Sequential recurrence. r,k: (B,L,H,K); v: (B,L,H,V); logw: (B,L,H,K);
+    u: (H,K); state: (B,H,K,V) f32. Returns (out (B,L,H,V), state)."""
+
+    def step(S, inp):
+        rt, kt, vt, lwt = inp  # (B,H,K), (B,H,K), (B,H,V), (B,H,K)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, out
+
+    xs = tuple(
+        jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, logw)
+    )
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1), state
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = WKV_CHUNK,
+                constrain=None):
+    """FLA-style chunkwise parallel WKV (MXU-friendly). Semantics match
+    wkv_scan; stability bounded by exp(cumsum) within one chunk.
+    ``constrain(x, *axes)`` (optional) pins shardings of the 5-D intra-chunk
+    tensors — GSPMD otherwise drops the head sharding in their backward."""
+    B, Lt, H, K = r.shape
+    V = v.shape[-1]
+    c = min(chunk, Lt)
+    n = Lt // c
+    f32 = jnp.float32
+    rc, kc, vc, wc = (
+        jnp.moveaxis(t.astype(f32).reshape(B, n, c, H, -1), 1, 0)
+        for t in (r, k, v, logw)
+    )
+
+    @jax.checkpoint  # recompute (B,c,c,H,K) intra-chunk tensors in backward
+    def step(S, inp):
+        rb, kb, vb, lwb = inp  # (B, c, H, K/V)
+        cum = jnp.cumsum(lwb, axis=1)  # (B, c, H, K)
+        cum_prev = cum - lwb  # exclusive
+        r_in = rb * jnp.exp(cum_prev)  # cum_prev <= 0: stable
+        o_inter = jnp.einsum("bchk,bhkv->bchv", r_in, S)
+        # intra-chunk pairwise decay: exponent cum_prev_i - cum_j <= 0 for
+        # j < i (strictly masked), so the exp never overflows.
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        diff = cum_prev[:, :, None] - cum[:, None, :]  # (B, c, c, H, K)
+        dec = jnp.exp(jnp.where(mask[None, :, :, None, None], diff, -jnp.inf))
+        if constrain is not None:
+            dec = constrain(dec, "batch", None, None, "heads", None)
+        A = jnp.einsum("bchk,bdhk->bcdhk", rb, kb)
+        if constrain is not None:
+            A = constrain(A, "batch", None, None, "heads", None)
+        A = jnp.einsum("bcdhk->bhcd", A * dec)
+        diag = jnp.einsum("bchk,hk,bchk->bch", rb, u.astype(f32), kb)
+        o_intra = jnp.einsum("bhcd,bdhv->bchv", A, vb) + diag[..., None] * vb
+        # state update: S' = diag(P_end) S + sum_j P_end/P_j k_j v_j
+        p_end = jnp.exp(cum[:, -1])  # (B, H, K)
+        k_tail = kb * jnp.exp(cum[:, -1:] - cum)
+        S = p_end[..., None] * S + jnp.einsum("bchk,bchv->bhkv", k_tail, vb)
+        return S, o_inter + o_intra
+
+    state, out = jax.lax.scan(step, state.astype(f32), (rc, kc, vc, wc))
+    return jnp.moveaxis(out, 0, 1).reshape(B, Lt, H, V), state
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def time_mix(
+    lp, x: Array, cfg: ModelConfig, rt: Runtime, state, x_prev=None,
+    wkv_mode: str = "scan",
+):
+    B, Lt, d = x.shape
+    H, K = _heads(cfg), cfg.rwkv_head_dim
+    xs = token_shift(x, x_prev)
+    mw, mk, mv, mr, mg = _ddlerp(
+        x, xs, lp["tm_maa_x"].astype(x.dtype), lp["tm_maa"].astype(x.dtype),
+        lp["tm_A"], lp["tm_B"],
+    )
+    dt = x.dtype
+    r = jnp.einsum("bld,dk->blk", mr, lp["wr"].astype(dt)).reshape(B, Lt, H, K)
+    kk = jnp.einsum("bld,dk->blk", mk, lp["wk"].astype(dt)).reshape(B, Lt, H, K)
+    vv = jnp.einsum("bld,dk->blk", mv, lp["wv"].astype(dt)).reshape(B, Lt, H, K)
+    g = jax.nn.silu(jnp.einsum("bld,dk->blk", mg, lp["wg"].astype(dt)))
+    # decay LoRA in compute dtype (bf16); upcast only at the exp — keeps the
+    # (B, L, d)-sized gradient tensors of this path out of f32 (§Perf iter 4)
+    dec_lora = jnp.einsum(
+        "blr,rd->bld",
+        jnp.tanh(jnp.einsum("bld,dr->blr", mw, lp["decay_A"].astype(dt))),
+        lp["decay_B"].astype(dt),
+    )
+    dec = lp["decay_base"].astype(jnp.float32) + dec_lora.astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(dec, -10.0, 4.0)).reshape(B, Lt, H, K)
+    if wkv_mode == "chunked":
+        out, state = wkv_chunked(
+            r, kk, vv, logw, lp["bonus"].astype(jnp.float32), state,
+            chunk=cfg.rwkv_wkv_chunk,
+            constrain=rt.constrain if rt.mesh is not None else None)
+    else:
+        out, state = wkv_scan(
+            r, kk, vv, logw, lp["bonus"].astype(jnp.float32), state)
+    # per-head group norm
+    out = out.reshape(B, Lt, H, K)
+    mean = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 64e-5)
+    out = out.reshape(B, Lt, d).astype(dt) * lp["gn_scale"].astype(dt)
+    out = out * g
+    return jnp.einsum("bld,dk->blk", out, lp["wo"].astype(dt)), state
+
+
+def channel_mix(lp, x: Array, cfg: ModelConfig, x_prev=None):
+    xs = token_shift(x, x_prev)
+    dt = x.dtype
+    xk = x + (xs - x) * lp["cm_maa_k"].astype(dt)
+    xr = x + (xs - x) * lp["cm_maa_r"].astype(dt)
+    kk = jnp.square(
+        jax.nn.relu(jnp.einsum("bld,df->blf", xk, lp["cm_wk"].astype(dt)))
+    )
+    vv = jnp.einsum("blf,fd->bld", kk, lp["cm_wv"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("bld,de->ble", xr, lp["cm_wr"].astype(dt)))
+    return rr * vv
+
+
+class RWKV6:
+    def __init__(self, cfg: ModelConfig, rt: Runtime | None = None,
+                 wkv_mode: str = "scan"):
+        self.cfg = cfg
+        self.rt = rt or Runtime()
+        self.wkv_mode = wkv_mode
+
+    def param_defs(self):
+        cfg = self.cfg
+        return {
+            "embed": L.embed_defs(cfg),
+            "blocks": stack_defs(block_defs(cfg), cfg.num_layers),
+            "final_norm": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        }
+
+    def init(self, rng):
+        return init_params(self.param_defs(), rng, self.cfg.param_dtype)
+
+    def abstract(self):
+        return abstract_params(self.param_defs(), self.cfg.param_dtype)
+
+    def _block(self, carry, lp):
+        cfg, rt = self.cfg, self.rt
+        x, aux = carry
+        x = rt.constrain(x, "batch", "seq", None)
+        B = x.shape[0]
+        H, K = _heads(cfg), cfg.rwkv_head_dim
+        S0 = jnp.zeros((B, H, K, K), jnp.float32)
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, _ = time_mix(lp, h, cfg, rt, S0, wkv_mode=self.wkv_mode)
+        x = x + y
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + channel_mix(lp, h, cfg)
+        x = rt.constrain(x, "batch", "seq", None)  # SP'd remat residual
+        return (x, aux)
+
+    def loss(self, params, batch):
+        cfg, rt = self.cfg, self.rt
+        x = L.embed_tokens(params["embed"], batch["tokens"], cfg)
+        x = rt.constrain(x, "batch", "seq", None)
+        x, _ = scan_blocks(
+            (x, jnp.zeros((), jnp.float32)), params["blocks"], self._block,
+            remat=cfg.remat != "none",
+        )
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return L.chunked_ce_loss(params["embed"], x, batch["labels"], cfg, rt)
+
+    # -- serving ------------------------------------------------------------
+    def cache_defs(self, batch: int, seq: int):
+        """Recurrent state: O(1) in sequence length (the long_500k case)."""
+        cfg = self.cfg
+        H, K = _heads(cfg), cfg.rwkv_head_dim
+        nl, d = cfg.num_layers, cfg.d_model
+        return {
+            "wkv": ParamDef(
+                (nl, batch, H, K, K),
+                ("layers", "batch", "heads", None, None),
+                init="zeros", dtype="float32",
+            ),
+            "tm_prev": ParamDef(
+                (nl, batch, 1, d), ("layers", "batch", None, "embed"), init="zeros"
+            ),
+            "cm_prev": ParamDef(
+                (nl, batch, 1, d), ("layers", "batch", None, "embed"), init="zeros"
+            ),
+        }
+
+    def prefill(self, params, batch):
+        """Forward over the prompt emitting last-token logits + recurrent
+        state per layer — O(1)-in-L serving state (why rwkv runs long_500k)."""
+        cfg, rt = self.cfg, self.rt
+        x = L.embed_tokens(params["embed"], batch["tokens"], cfg)
+        x = rt.constrain(x, "batch", "seq", None)
+        B = x.shape[0]
+        H, K = _heads(cfg), cfg.rwkv_head_dim
+
+        def body(carry, lp):
+            xc, aux = carry
+            xc = rt.constrain(xc, "batch", "seq", None)
+            S0 = jnp.zeros((B, H, K, K), jnp.float32)
+            h = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            y, S = time_mix(lp, h, cfg, rt, S0, wkv_mode=self.wkv_mode)
+            tm_prev = h[:, -1:]
+            xc = xc + y
+            h = L.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+            xc = xc + channel_mix(lp, h, cfg)
+            cm_prev = h[:, -1:]
+            return (xc, aux), {"wkv": S, "tm_prev": tm_prev, "cm_prev": cm_prev}
+
+        (x, _), cache = scan_blocks(
+            (x, jnp.zeros((), jnp.float32)), params["blocks"], body,
+            remat=cfg.remat != "none", collect=True,
+        )
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.lm_logits(params["embed"], x[:, -1:], cfg)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg, rt = self.cfg, self.rt
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+
+        def body(carry, inp):
+            xc, _ = carry
+            lp, cl = inp
+            h = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            y, S = time_mix(
+                lp, h, cfg, rt, cl["wkv"], x_prev=cl["tm_prev"].astype(h.dtype),
+                wkv_mode="scan",
+            )
+            new_tm_prev = h
+            xc = xc + y
+            h = L.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+            xc = xc + channel_mix(lp, h, cfg, x_prev=cl["cm_prev"].astype(h.dtype))
+            new = {"wkv": S, "tm_prev": new_tm_prev.astype(cl["tm_prev"].dtype),
+                   "cm_prev": h.astype(cl["cm_prev"].dtype)}
+            return (xc, jnp.zeros((), jnp.float32)), new
+
+        (x, _), new_cache = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params["blocks"], cache)
+        )
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return L.lm_logits(params["embed"], x, cfg), new_cache

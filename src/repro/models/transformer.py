@@ -1,0 +1,202 @@
+"""Dense / MoE decoder-only LM (gemma, llama3, granite, qwen3, qwen3-moe,
+phi3.5-moe, and the llava backbone).
+
+Pre-norm blocks, GQA attention (optional qk_norm), SwiGLU/GeGLU FFN or
+expert-parallel MoE FFN, scan-over-layers (stacked params) for bounded
+compile time at 512 devices, sequence-chunked CE loss.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamDef, Runtime, abstract_params, init_params
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.common import kv_cache_defs, scan_blocks, stack_defs
+
+Array = jax.Array
+
+
+class DenseLM:
+    def __init__(self, cfg: ModelConfig, rt: Runtime | None = None):
+        self.cfg = cfg
+        self.rt = rt or Runtime()
+
+    # -- parameters ---------------------------------------------------------
+    def block_defs(self) -> dict[str, Any]:
+        cfg = self.cfg
+        d = {
+            "attn_norm": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+            "attn": L.attention_defs(cfg),
+            "mlp_norm": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        }
+        if cfg.num_experts:
+            d["moe"] = moe_lib.moe_defs(cfg)
+        else:
+            d["mlp"] = L.mlp_defs(cfg)
+        return d
+
+    def param_defs(self) -> dict[str, Any]:
+        cfg = self.cfg
+        blocks = stack_defs(self.block_defs(), cfg.num_layers)
+        defs = {
+            "embed": L.embed_defs(cfg),
+            "blocks": blocks,
+            "final_norm": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        }
+        if cfg.frontend == "vision_stub":
+            defs["projector"] = {
+                "w1": ParamDef((1152, cfg.d_model), (None, "embed"), init="fan_in"),
+                "b1": ParamDef((cfg.d_model,), ("embed",), init="zeros"),
+                "w2": ParamDef(
+                    (cfg.d_model, cfg.d_model), ("embed", "embed"), init="fan_in"
+                ),
+            }
+        return defs
+
+    def init(self, rng: jax.Array):
+        return init_params(self.param_defs(), rng, self.cfg.param_dtype)
+
+    def abstract(self):
+        return abstract_params(self.param_defs(), self.cfg.param_dtype)
+
+    # -- blocks -------------------------------------------------------------
+    def _block(self, carry, lp):
+        cfg, rt = self.cfg, self.rt
+        x, aux = carry
+        x = rt.constrain(x, "batch", "seq", None)
+        h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        x = x + L.attention_train(lp["attn"], h, cfg, rt)
+        h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.num_experts:
+            y, a = moe_lib.moe_apply(lp["moe"], h, cfg, rt)
+            aux = aux + a
+        else:
+            y = L.mlp_apply(lp["mlp"], h, cfg)
+        x = x + y
+        # constrain the OUTPUT: this is what the next block's checkpoint
+        # saves as its residual — must be sequence-sharded (SP), else the
+        # remat stack is replicated over `model`.
+        x = rt.constrain(x, "batch", "seq", None)
+        return (x, aux)
+
+    def hidden(self, params, embeds: Array) -> tuple[Array, Array]:
+        cfg = self.cfg
+        aux0 = jnp.zeros((), jnp.float32)
+        if cfg.scan_layers:
+            x, aux = scan_blocks(
+                (embeds, aux0),
+                params["blocks"],
+                self._block,
+                remat=cfg.remat != "none",
+            )
+        else:
+            x, aux = embeds, aux0
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda a: a[i], params["blocks"])
+                x, aux = self._block((x, aux), lp)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, aux
+
+    def embeds_for(self, params, batch) -> Array:
+        cfg, rt = self.cfg, self.rt
+        e = L.embed_tokens(params["embed"], batch["tokens"], cfg)
+        if cfg.frontend == "vision_stub" and "patches" in batch:
+            pj = params["projector"]
+            dt = e.dtype
+            v = jax.nn.gelu(
+                jnp.einsum("bpc,cd->bpd", batch["patches"].astype(dt), pj["w1"].astype(dt))
+                + pj["b1"].astype(dt)
+            )
+            v = jnp.einsum("bpd,de->bpe", v, pj["w2"].astype(dt))
+            e = jnp.concatenate([v, e], axis=1)  # patches prefix, then text
+        return rt.constrain(e, "batch", "seq", None)
+
+    # -- training -----------------------------------------------------------
+    def loss(self, params, batch) -> Array:
+        cfg, rt = self.cfg, self.rt
+        embeds = self.embeds_for(params, batch)
+        h, aux = self.hidden(params, embeds)
+        labels = batch["labels"]
+        if h.shape[1] != labels.shape[1]:  # vlm: patch positions carry no loss
+            pad = jnp.full(
+                (labels.shape[0], h.shape[1] - labels.shape[1]), -1, labels.dtype
+            )
+            labels = jnp.concatenate([pad, labels], axis=1)
+        ce = L.chunked_ce_loss(params["embed"], h, labels, cfg, rt)
+        return ce + 0.01 * aux / max(cfg.num_layers, 1)
+
+    # -- serving ------------------------------------------------------------
+    def cache_defs(self, batch: int, seq: int):
+        return kv_cache_defs(self.cfg, self.cfg.num_layers, batch, seq)
+
+    def prefill(self, params, batch) -> tuple[Array, Any]:
+        """Full-sequence forward emitting last-token logits + the KV cache."""
+        cfg, rt = self.cfg, self.rt
+        embeds = self.embeds_for(params, batch)
+        B, Ltot = embeds.shape[:2]
+
+        def body(carry, lp):
+            x, aux = carry
+            x = rt.constrain(x, "batch", "seq", None)
+            h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+            positions = jnp.arange(Ltot)[None, :]
+            q, k, v = L._qkv(lp["attn"], h, cfg, positions)
+            if Ltot > cfg.attn_chunk:
+                o = L.chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+            else:
+                o = L.full_attention(q, k, v, causal=True)
+            x = x + jnp.einsum("blhk,hkd->bld", o, lp["attn"]["wo"].astype(x.dtype))
+            h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+            if cfg.num_experts:
+                y, a = moe_lib.moe_apply(lp["moe"], h, cfg, rt)
+                aux = aux + a
+            else:
+                y = L.mlp_apply(lp["mlp"], h, cfg)
+            return (x + y, aux), (k, v)
+
+        (x, _aux), kvs = scan_blocks(
+            (embeds, jnp.zeros((), jnp.float32)),
+            params["blocks"],
+            body,
+            remat=cfg.remat != "none",
+            collect=True,
+        )
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.lm_logits(params["embed"], x[:, -1:], cfg)
+        cache = {"k": kvs[0].astype(jnp.dtype(cfg.param_dtype)),
+                 "v": kvs[1].astype(jnp.dtype(cfg.param_dtype))}
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens: Array, pos: Array):
+        """One token for every sequence. tokens: (B, 1); pos: () int32."""
+        cfg, rt = self.cfg, self.rt
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        x = rt.constrain(x, "batch", "seq", None)
+
+        def body(carry, inp):
+            xc, _ = carry
+            lp, cl = inp
+            h = L.rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+            y, new_cache = L.attention_decode(lp["attn"], h, cl, pos, cfg, rt)
+            xc = xc + y
+            h = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+            if cfg.num_experts:
+                ym, _a = moe_lib.moe_apply(lp["moe"], h, cfg, rt)
+            else:
+                ym = L.mlp_apply(lp["mlp"], h, cfg)
+            return (xc + ym, jnp.zeros((), jnp.float32)), new_cache
+
+        (x, _), new_cache = jax.lax.scan(
+            body,
+            (x, jnp.zeros((), jnp.float32)),
+            (params["blocks"], cache),
+        )
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.lm_logits(params["embed"], x, cfg)
+        return logits, new_cache

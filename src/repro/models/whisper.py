@@ -1,0 +1,245 @@
+"""Whisper-medium (arXiv:2212.04356): encoder-decoder with conv frontend.
+
+The conv frontend (conv1d k=3 GELU, conv1d k=3 stride-2 GELU over 80-dim
+mels) is the paper-technique site: both convs route through the sliding
+conv1d path (custom k=3 regime). Per the assignment the frontend is a STUB
+for the dry-run shapes — ``input_specs`` provides precomputed frame
+embeddings (B, S_enc, d_model) — but ``conv_frontend`` is fully implemented
+and exercised by tests/benchmarks with ``frontend="audio"``.
+
+Encoder: bidirectional self-attention + plain-GELU MLP, sinusoidal
+positions. Decoder: causal self-attention + cross-attention + MLP. Shapes
+split ``seq_len`` evenly between encoder frames and decoder tokens.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.conv import conv1d_sliding
+from repro.distributed.sharding import ParamDef, Runtime, abstract_params, init_params
+from repro.models import layers as L
+from repro.models.common import kv_cache_defs, scan_blocks, stack_defs
+
+Array = jax.Array
+
+N_MELS = 80
+
+
+def frontend_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    d = cfg.d_model
+    return {
+        "conv1_w": ParamDef((3, N_MELS, d), (None, None, "embed"), init="fan_in"),
+        "conv1_b": ParamDef((d,), ("embed",), init="zeros"),
+        "conv2_w": ParamDef((3, d, d), (None, "embed", "embed"), init="fan_in"),
+        "conv2_b": ParamDef((d,), ("embed",), init="zeros"),
+    }
+
+
+def conv_frontend(p, mels: Array, cfg: ModelConfig) -> Array:
+    """mels: (B, T, 80) -> (B, T//2, d_model). Sliding conv, custom k=3."""
+    from repro.core import conv as C
+
+    backend = "sliding" if cfg.conv_backend.startswith("sliding") else cfg.conv_backend
+    x = C.conv1d(mels, p["conv1_w"].astype(mels.dtype), padding="SAME",
+                 backend=backend) + p["conv1_b"].astype(mels.dtype)
+    x = jax.nn.gelu(x)
+    x = C.conv1d(x, p["conv2_w"].astype(x.dtype), stride=2, padding="SAME",
+                 backend=backend) + p["conv2_b"].astype(x.dtype)
+    return jax.nn.gelu(x)
+
+
+class Whisper:
+    def __init__(self, cfg: ModelConfig, rt: Runtime | None = None):
+        self.cfg = cfg
+        self.rt = rt or Runtime()
+
+    # -- parameters -----------------------------------------------------------
+    def _enc_block_defs(self):
+        cfg = self.cfg
+        return {
+            "attn_norm": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+            "attn": L.attention_defs(cfg),
+            "mlp_norm": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+            "mlp": L.mlp_defs(cfg),
+        }
+
+    def _dec_block_defs(self):
+        cfg = self.cfg
+        return {
+            "attn_norm": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+            "attn": L.attention_defs(cfg),
+            "xattn_norm": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+            "xattn": L.cross_attention_defs(cfg),
+            "mlp_norm": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+            "mlp": L.mlp_defs(cfg),
+        }
+
+    def param_defs(self):
+        cfg = self.cfg
+        return {
+            "embed": L.embed_defs(cfg),
+            "frontend": frontend_defs(cfg),
+            "encoder": stack_defs(self._enc_block_defs(), cfg.encoder_layers),
+            "enc_norm": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+            "decoder": stack_defs(self._dec_block_defs(), cfg.num_layers),
+            "final_norm": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        }
+
+    def init(self, rng):
+        return init_params(self.param_defs(), rng, self.cfg.param_dtype)
+
+    def abstract(self):
+        return abstract_params(self.param_defs(), self.cfg.param_dtype)
+
+    # -- encoder --------------------------------------------------------------
+    def encode(self, params, frames: Array) -> Array:
+        """frames: precomputed embeddings (B, S_enc, d) [stub] or mels
+        (B, T, 80) [conv frontend]."""
+        cfg, rt = self.cfg, self.rt
+        if frames.shape[-1] == N_MELS:
+            frames = conv_frontend(params["frontend"], frames, cfg)
+        x = frames.astype(L.cdtype(cfg))
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+        x = rt.constrain(x, "batch", "seq", None)
+
+        def body(carry, lp):
+            xc, aux = carry
+            xc = rt.constrain(xc, "batch", "seq", None)
+            h = L.rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+            positions = jnp.arange(xc.shape[1])[None, :]
+            q, k, v = L._qkv(lp["attn"], h, cfg, positions, rope=False)
+            if xc.shape[1] > cfg.attn_chunk:
+                o = L.chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+            else:
+                o = L.full_attention(q, k, v, causal=False)
+            xc = xc + jnp.einsum("blhk,hkd->bld", o, lp["attn"]["wo"].astype(xc.dtype))
+            h = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+            xc = rt.constrain(xc + L.mlp_apply(lp["mlp"], h, cfg),
+                              "batch", "seq", None)
+            return (xc, aux)
+
+        x, _ = scan_blocks(
+            (x, jnp.zeros((), jnp.float32)), params["encoder"], body,
+            remat=cfg.remat != "none",
+        )
+        return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # -- decoder --------------------------------------------------------------
+    def _dec_block(self, carry, lp, enc_out):
+        cfg, rt = self.cfg, self.rt
+        x, aux = carry
+        x = rt.constrain(x, "batch", "seq", None)
+        h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        x = x + L.attention_train(lp["attn"], h, cfg, rt, rope=False)
+        h = L.rms_norm(x, lp["xattn_norm"], cfg.norm_eps)
+        kv = L.encode_kv(lp["xattn"], enc_out, cfg)
+        x = x + L.cross_attention(lp["xattn"], h, kv, cfg, rt)
+        h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = rt.constrain(x + L.mlp_apply(lp["mlp"], h, cfg),
+                         "batch", "seq", None)
+        return (x, aux)
+
+    def loss(self, params, batch):
+        cfg, rt = self.cfg, self.rt
+        enc_out = self.encode(params, batch["frames"])
+        x = L.embed_tokens(params["embed"], batch["tokens"], cfg)
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+        x = rt.constrain(x, "batch", "seq", None)
+        body = functools.partial(self._dec_block, enc_out=enc_out)
+        x, _ = scan_blocks(
+            (x, jnp.zeros((), jnp.float32)), params["decoder"], body,
+            remat=cfg.remat != "none",
+        )
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return L.chunked_ce_loss(params["embed"], x, batch["labels"], cfg, rt)
+
+    # -- serving ----------------------------------------------------------------
+    def cache_defs(self, batch: int, seq: int):
+        """Decoder self-attn cache (seq//2) + cross KV (seq//2 enc frames)."""
+        cfg = self.cfg
+        s_dec, s_enc = seq // 2, seq // 2
+        d = kv_cache_defs(cfg, cfg.num_layers, batch, s_dec)
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        d["xk"] = ParamDef(
+            (cfg.num_layers, batch, s_enc, kv, hd),
+            ("layers", "batch", "kv_seq", "kv_heads", None), init="zeros")
+        d["xv"] = ParamDef(
+            (cfg.num_layers, batch, s_enc, kv, hd),
+            ("layers", "batch", "kv_seq", "kv_heads", None), init="zeros")
+        return d
+
+    def prefill(self, params, batch):
+        """Encode frames + decoder prompt forward: last-token logits, decoder
+        self-attn KV cache, and per-layer cross KV of the encoder output."""
+        cfg, rt = self.cfg, self.rt
+        enc_out = self.encode(params, batch["frames"])
+        x = L.embed_tokens(params["embed"], batch["tokens"], cfg)
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+        x = rt.constrain(x, "batch", "seq", None)
+        Ltot = x.shape[1]
+
+        def body(carry, lp):
+            xc, aux = carry
+            h = L.rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+            positions = jnp.arange(Ltot)[None, :]
+            q, k, v = L._qkv(lp["attn"], h, cfg, positions, rope=False)
+            if Ltot > cfg.attn_chunk:
+                o = L.chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+            else:
+                o = L.full_attention(q, k, v, causal=True)
+            xc = xc + jnp.einsum("blhk,hkd->bld", o,
+                                 lp["attn"]["wo"].astype(xc.dtype))
+            h = L.rms_norm(xc, lp["xattn_norm"], cfg.norm_eps)
+            xk, xv = L.encode_kv(lp["xattn"], enc_out, cfg)
+            xc = xc + L.cross_attention(lp["xattn"], h, (xk, xv), cfg, rt)
+            h = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+            xc = xc + L.mlp_apply(lp["mlp"], h, cfg)
+            pd = jnp.dtype(cfg.param_dtype)
+            return (xc, aux), {"k": k.astype(pd), "v": v.astype(pd),
+                               "xk": xk.astype(pd), "xv": xv.astype(pd)}
+
+        (x, _), cache = scan_blocks(
+            (x, jnp.zeros((), jnp.float32)), params["decoder"], body,
+            remat=cfg.remat != "none", collect=True,
+        )
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.lm_logits(params["embed"], x[:, -1:], cfg)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg, rt = self.cfg, self.rt
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        B = x.shape[0]
+        pe = L.sinusoidal_positions(cache["k"].shape[2], cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None].astype(x.dtype)
+
+        def body(carry, inp):
+            xc, _ = carry
+            lp, cl = inp
+            h = L.rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+            y, kv_new = L.attention_decode(
+                lp["attn"], h, {"k": cl["k"], "v": cl["v"]}, pos, cfg, rt,
+                rope=False)
+            xc = xc + y
+            h = L.rms_norm(xc, lp["xattn_norm"], cfg.norm_eps)
+            dt = h.dtype
+            q = jnp.einsum("bld,dhk->blhk", h, lp["xattn"]["wq"].astype(dt))
+            o = L.full_attention(q, cl["xk"].astype(dt), cl["xv"].astype(dt),
+                                 causal=False)
+            xc = xc + jnp.einsum("blhk,hkd->bld", o,
+                                 lp["xattn"]["wo"].astype(dt))
+            h = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+            xc = xc + L.mlp_apply(lp["mlp"], h, cfg)
+            new = dict(cl)
+            new.update(kv_new)
+            return (xc, jnp.zeros((), jnp.float32)), new
+
+        (x, _), new_cache = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params["decoder"], cache))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return L.lm_logits(params["embed"], x, cfg), new_cache

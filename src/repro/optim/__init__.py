@@ -1,0 +1,19 @@
+from repro.optim.adamw import (
+    OptConfig,
+    apply_updates,
+    global_norm,
+    init_opt_state,
+    lr_at,
+)
+from repro.optim.compress import dequantize_int8, ef_allreduce_grads, quantize_int8
+
+__all__ = [
+    "OptConfig",
+    "apply_updates",
+    "global_norm",
+    "init_opt_state",
+    "lr_at",
+    "quantize_int8",
+    "dequantize_int8",
+    "ef_allreduce_grads",
+]

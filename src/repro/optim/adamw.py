@@ -1,0 +1,124 @@
+"""AdamW with optional low-precision moment storage.
+
+``state_dtype``:
+  * ``float32`` — standard.
+  * ``bfloat16`` — moments stored bf16 (compute in f32).
+  * ``int8``     — blockwise-quantized moments (per last-axis row absmax
+    scale), 8-bit-Adam style. This is what lets the jamba-398b training
+    state fit the single-pod 4 TB HBM: 398e9 × (1 int8 m + 1 int8 v +
+    2 f32-ish scales/row) ≈ 0.9 TB instead of 3.2 TB f32.
+
+All update math runs in f32; storage dtype only affects at-rest bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compress import dequantize_int8, quantize_int8
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: str = "float32"  # float32 | bfloat16 | int8
+
+
+def lr_at(cfg: OptConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.lr * (
+        cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def _store(x: Array, dtype: str, *, sqrt_space: bool = False):
+    if dtype == "int8":
+        # second moments are stored in sqrt-space: v spans twice the log-
+        # dynamic-range of m (it is a square), so direct int8 underflows v→0
+        # while m survives, exploding m̂/√v̂. √v matches m's range.
+        return quantize_int8(jnp.sqrt(x) if sqrt_space else x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _load(x, dtype: str, *, sqrt_space: bool = False) -> Array:
+    if dtype == "int8":
+        d = dequantize_int8(*x)
+        return jnp.square(d) if sqrt_space else d
+    return x.astype(jnp.float32)
+
+
+def init_opt_state(params, cfg: OptConfig):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {
+        "m": jax.tree.map(lambda z: _store(z, cfg.state_dtype), zeros),
+        "v": jax.tree.map(
+            lambda z: _store(z, cfg.state_dtype, sqrt_space=True), zeros
+        ),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def apply_updates(params, grads, opt_state, cfg: OptConfig):
+    count = opt_state["count"] + 1
+    cf = count.astype(jnp.float32)
+    lr = lr_at(cfg, count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    is_q = cfg.state_dtype == "int8"
+
+    def upd(p, g, m_s, v_s):
+        g = g.astype(jnp.float32) * scale
+        m = _load(m_s, cfg.state_dtype)
+        v = _load(v_s, cfg.state_dtype, sqrt_space=True)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / (1 - cfg.b1 ** cf)
+        vhat = v / (1 - cfg.b2 ** cf)
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = (p.astype(jnp.float32) - lr * (step_ + decay)).astype(p.dtype)
+        return (
+            new_p,
+            _store(m, cfg.state_dtype),
+            _store(v, cfg.state_dtype, sqrt_space=True),
+        )
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    is_pair = lambda x: isinstance(x, tuple)
+    flat_m = jax.tree.flatten(opt_state["m"], is_leaf=is_pair)[0]
+    flat_v = jax.tree.flatten(opt_state["v"], is_leaf=is_pair)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, {
+        "grad_norm": gnorm, "lr": lr,
+    }

@@ -1,0 +1,126 @@
+"""Core sliding-window primitives vs direct evaluation + XLA references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+
+
+def direct_sliding(x, w, op):
+    n = x.shape[-1]
+    return jnp.stack(
+        [op(x[..., i : i + w], -1) for i in range(n - w + 1)], axis=-1
+    )
+
+
+@pytest.mark.parametrize("window", [1, 2, 3, 7, 16, 33, 100])
+def test_sliding_sum_both_algorithms(rng, window):
+    x = jnp.asarray(rng.normal(size=(3, 100)).astype(np.float32))
+    want = direct_sliding(x, window, jnp.sum)
+    np.testing.assert_allclose(
+        core.sliding_sum_scan(x, window), want, rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        core.sliding_sum_shift(x, window), want, rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("window", [2, 5, 17, 64])
+def test_sliding_max_min(rng, window):
+    x = jnp.asarray(rng.normal(size=(2, 90)).astype(np.float32))
+    np.testing.assert_allclose(
+        core.sliding_max(x, window), direct_sliding(x, window, jnp.max)
+    )
+    np.testing.assert_allclose(
+        core.sliding_min(x, window), direct_sliding(x, window, jnp.min)
+    )
+
+
+def test_pooling_vs_reduce_window(rng):
+    x = jnp.asarray(rng.normal(size=(2, 24, 20, 4)).astype(np.float32))
+    got = core.max_pool2d(x, (2, 2))
+    want = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+    np.testing.assert_allclose(got, want)
+    got = core.avg_pool2d(x, (3, 3), (1, 1))
+    want = (
+        jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, 3, 3, 1), (1, 1, 1, 1), "VALID"
+        )
+        / 9.0
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("pad", ["VALID", "SAME", "CAUSAL"])
+@pytest.mark.parametrize("k", [1, 3, 5, 7, 17, 19])
+def test_conv1d_backends_agree(rng, pad, k):
+    x = jnp.asarray(rng.normal(size=(2, 64, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, 8, 16)).astype(np.float32))
+    ref = core.conv1d_xla(x, w, padding=pad)
+    np.testing.assert_allclose(
+        core.conv1d_sliding(x, w, padding=pad), ref, rtol=2e-4, atol=2e-4
+    )
+    np.testing.assert_allclose(
+        core.conv1d_im2col(x, w, padding=pad), ref, rtol=2e-4, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("stride,dil", [(2, 1), (1, 2), (3, 2)])
+def test_conv1d_stride_dilation(rng, stride, dil):
+    x = jnp.asarray(rng.normal(size=(2, 65, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(5, 4, 8)).astype(np.float32))
+    ref = core.conv1d_xla(x, w, stride=stride, dilation=dil, padding="SAME")
+    np.testing.assert_allclose(
+        core.conv1d_sliding(x, w, stride=stride, dilation=dil, padding="SAME"),
+        ref, rtol=2e-4, atol=2e-4,
+    )
+
+
+@pytest.mark.parametrize("kh,kw", [(1, 1), (3, 3), (5, 5), (7, 3), (1, 9)])
+@pytest.mark.parametrize("stride", [(1, 1), (2, 2)])
+def test_conv2d_backends_agree(rng, kh, kw, stride):
+    x = jnp.asarray(rng.normal(size=(2, 20, 22, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(kh, kw, 4, 8)).astype(np.float32))
+    ref = core.conv2d_xla(x, w, stride=stride, padding="SAME")
+    np.testing.assert_allclose(
+        core.conv2d_sliding(x, w, stride=stride, padding="SAME"),
+        ref, rtol=3e-4, atol=3e-4,
+    )
+    np.testing.assert_allclose(
+        core.conv2d_im2col(x, w, stride=stride, padding="SAME"),
+        ref, rtol=3e-4, atol=3e-4,
+    )
+
+
+def test_depthwise_matches_grouped_xla(rng):
+    x = jnp.asarray(rng.normal(size=(2, 40, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    got = core.conv1d_depthwise_sliding(x, w, padding="CAUSAL")
+    want = core.conv1d_xla(
+        x, w.reshape(4, 1, 16), padding="CAUSAL", groups=16
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_regime_selection():
+    assert core.regime_for(3) == "custom"
+    assert core.regime_for(5) == "custom"
+    assert core.regime_for(4) == "generic"
+    assert core.regime_for(17) == "generic"
+    assert core.regime_for(18) == "compound"
+    assert core.regime_for(64) == "compound"
+
+
+def test_conv_is_differentiable(rng):
+    x = jnp.asarray(rng.normal(size=(1, 32, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(5, 4, 4)).astype(np.float32))
+
+    def f(w):
+        return jnp.sum(core.conv1d_sliding(x, w, padding="SAME") ** 2)
+
+    g = jax.grad(f)(w)
+    assert g.shape == w.shape
+    assert bool(jnp.isfinite(g).all())

@@ -1,0 +1,124 @@
+"""Hypothesis property tests on the sliding-window invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def arr(draw, shape, lo=-4, hi=4):
+    vals = draw(
+        st.lists(
+            st.floats(lo, hi, width=32),
+            min_size=int(np.prod(shape)),
+            max_size=int(np.prod(shape)),
+        )
+    )
+    return jnp.asarray(np.array(vals, np.float32).reshape(shape))
+
+
+@given(st.data())
+def test_sliding_sum_equals_direct(data):
+    n = data.draw(st.integers(4, 40), label="n")
+    w = data.draw(st.integers(1, 8), label="w")
+    if w > n:
+        w = n
+    x = arr(data.draw, (2, n))
+    got = core.sliding_sum_scan(x, w)
+    want = jnp.stack([x[:, i : i + w].sum(-1) for i in range(n - w + 1)], -1)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    got2 = core.sliding_sum_shift(x, w)
+    np.testing.assert_allclose(got2, want, rtol=1e-3, atol=1e-3)
+
+
+@given(st.data())
+def test_conv_linearity(data):
+    """conv(a·x + b·y) == a·conv(x) + b·conv(y) — convolution is linear."""
+    k = data.draw(st.integers(1, 6), label="k")
+    x = arr(data.draw, (1, 16, 2))
+    y = arr(data.draw, (1, 16, 2))
+    w = arr(data.draw, (k, 2, 3), lo=-2, hi=2)
+    a = data.draw(st.floats(-2, 2, width=32))
+    lhs = core.conv1d_sliding(a * x + y, w)
+    rhs = a * core.conv1d_sliding(x, w) + core.conv1d_sliding(y, w)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-2, atol=1e-2)
+
+
+@given(st.data())
+def test_conv_shift_equivariance(data):
+    """Shifting the input shifts the VALID conv output (translation equiv.)."""
+    k = data.draw(st.integers(1, 4), label="k")
+    s = data.draw(st.integers(1, 4), label="shift")
+    x = arr(data.draw, (1, 24, 2))
+    w = arr(data.draw, (k, 2, 2), lo=-2, hi=2)
+    full = core.conv1d_sliding(x, w)  # (1, 24-k+1, 2)
+    shifted_in = core.conv1d_sliding(x[:, s:], w)
+    np.testing.assert_allclose(full[:, s:], shifted_in, rtol=1e-3, atol=1e-3)
+
+
+@given(st.data())
+def test_sliding_backends_agree(data):
+    """The paper's claim: all three evaluations compute the same function."""
+    k = data.draw(st.integers(1, 8), label="k")
+    n = data.draw(st.integers(8, 32), label="n")
+    if k > n:
+        k = n
+    x = arr(data.draw, (1, n, 3))
+    w = arr(data.draw, (k, 3, 2), lo=-2, hi=2)
+    a = core.conv1d_sliding(x, w)
+    b = core.conv1d_im2col(x, w)
+    c = core.conv1d_xla(x, w)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(a, c, rtol=1e-3, atol=1e-3)
+
+
+@given(st.data())
+def test_sliding_max_idempotent_monotone(data):
+    """max-pool invariants: idempotence on constant rows; monotonicity."""
+    n = data.draw(st.integers(6, 30), label="n")
+    w = data.draw(st.integers(2, 6), label="w")
+    if w > n:
+        w = n
+    x = arr(data.draw, (1, n))
+    y = x + jnp.abs(arr(data.draw, (1, n)))  # y >= x
+    mx = core.sliding_max(x, w)
+    my = core.sliding_max(y, w)
+    assert bool((my >= mx - 1e-6).all())
+    const = jnp.full((1, n), 3.25)
+    np.testing.assert_allclose(
+        core.sliding_max(const, w), jnp.full((1, n - w + 1), 3.25)
+    )
+
+
+@given(st.data())
+def test_quantize_roundtrip_error_bound(data):
+    """int8 quantization error is bounded by scale/2 per element."""
+    from repro.optim import dequantize_int8, quantize_int8
+
+    x = arr(data.draw, (4, 16), lo=-10, hi=10)
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert bool((err <= s * 0.5 + 1e-6).all())
+
+
+@given(st.data())
+def test_data_pipeline_determinism_and_masking(data):
+    from repro.data import SyntheticLMData
+
+    seed = data.draw(st.integers(0, 10_000))
+    step = data.draw(st.integers(0, 50))
+    d = SyntheticLMData(vocab_size=128, seq_len=64, global_batch=4, seed=seed)
+    b1 = d.batch_at(step)
+    b2 = d.batch_at(step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["labels"], b2["labels"])
+    # next-token alignment: where label >= 0 it equals the next input token
+    toks, labels = b1["tokens"], b1["labels"]
+    m = labels[:, :-1] >= 0
+    np.testing.assert_array_equal(
+        labels[:, :-1][m], toks[:, 1:][m]
+    )
