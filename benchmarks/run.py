@@ -1,20 +1,82 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--autotune]
 
-Prints ``name,us_per_call,derived`` CSV:
+Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_conv.json``
+(name → us_per_call) alongside it so the perf trajectory is machine-
+trackable across PRs:
   fig1/*      paper Fig. 1 — 2-D conv speedup (sliding vs im2col+GEMM)
   fig2/*      paper Fig. 2 — 2-D conv arithmetic throughput vs filter size
   conv1d/*    companion 1-D sliding conv speedup table + pooling scan claim
   roofline/*  per-(arch×shape) dominant roofline term from the dry-run JSONs
+  autotune/*  (--autotune) best-vs-default tile/block search per shape
+
+``--autotune`` runs the shape-keyed search (``repro.kernels.autotune``) over
+every fig1/fig2/conv1d conv shape, persists winners in the JSON tuning cache
+consulted by ``repro.kernels.ops``, and reports best-vs-default speedup.
 """
 from __future__ import annotations
 
+import json
 import sys
+from pathlib import Path
+
+BENCH_JSON = Path("BENCH_conv.json")
+
+
+def autotune_rows(quick: bool) -> list[str]:
+    import numpy as np
+    import jax.numpy as jnp
+
+    from benchmarks import fig1_speedup, fig2_throughput, table_conv1d
+    from repro.kernels import autotune
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    def fmt(result):
+        c = result.best
+        blocks = f"ci{c['cin_block']}_co{c['cout_block']}"
+        tile = (
+            f"tl{c['tile_l']}" if "tile_l" in c
+            else f"th{c['tile_h']}_tw{c['tile_w']}"
+        )
+        return (
+            f"best={tile}_{blocks}_{c['regime']} "
+            f"speedup_vs_default={result.speedup:.2f}x"
+        )
+
+    # 2-D shapes: fig1 (128²) and fig2 (96²) filter sweeps
+    for h, cin, sizes in (
+        (fig1_speedup.H, fig1_speedup.CIN,
+         [3, 9, 31] if quick else fig1_speedup.FILTER_SIZES),
+        (fig2_throughput.H, fig2_throughput.CIN,
+         [3, 17] if quick else fig2_throughput.SIZES),
+    ):
+        x = jnp.asarray(rng.normal(size=(1, h, h, cin)).astype(np.float32))
+        for k in sizes:
+            w = jnp.asarray(
+                rng.normal(size=(k, k, cin, cin)).astype(np.float32)
+            )
+            r = autotune.autotune_conv2d(x, w)
+            rows.append(
+                f"autotune/conv2d_{h}x{h}_k{k},{r.best_us:.1f},{fmt(r)}"
+            )
+    # 1-D shapes: the conv1d table sweep
+    L, C = table_conv1d.L, table_conv1d.C
+    if quick:
+        L = 4096  # quick mode: interpret-mode grids get expensive at 16k
+    x = jnp.asarray(rng.normal(size=(1, L, C)).astype(np.float32))
+    for k in [3, 33] if quick else table_conv1d.WIDTHS:
+        w = jnp.asarray(rng.normal(size=(k, C, C)).astype(np.float32))
+        r = autotune.autotune_conv1d(x, w)
+        rows.append(f"autotune/conv1d_L{L}_k{k},{r.best_us:.1f},{fmt(r)}")
+    return rows
 
 
 def main() -> None:
     quick = "--quick" in sys.argv
+    tune = "--autotune" in sys.argv
     from benchmarks import fig1_speedup, fig2_throughput, roofline_report, table_conv1d
 
     rows: list[str] = []
@@ -29,9 +91,22 @@ def main() -> None:
         rows += roofline_report.csv_rows(roofline_report.load_cells())
     except FileNotFoundError:
         rows.append("roofline/missing,0.0,run repro.launch.dryrun first")
+    if tune:
+        rows += autotune_rows(quick)
     print("name,us_per_call,derived")
     for r in rows:
         print(r)
+    # machine-readable mirror of the CSV: {name: us_per_call}
+    bench = {}
+    for r in rows:
+        name, us, _ = r.split(",", 2)
+        bench[name] = float(us)
+    BENCH_JSON.write_text(json.dumps(bench, indent=1, sort_keys=True))
+    print(f"# wrote {BENCH_JSON}", file=sys.stderr)
+    if tune:
+        from repro.kernels import autotune
+
+        print(f"# tuning cache: {autotune.cache_path()}", file=sys.stderr)
 
 
 if __name__ == "__main__":

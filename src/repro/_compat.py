@@ -1,0 +1,65 @@
+"""Version compatibility shims for the jax API surface we use.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and renamed ``check_rep`` → ``check_vma``) across jax releases. Callers in
+this repo use the new-style keyword API; this shim presents that API on both
+old and new jax.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.6: top-level export, check_vma kwarg
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kw):
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, **kw,
+        )
+
+except ImportError:  # jax 0.4.x: experimental module, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kw):
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma, **kw,
+        )
+
+
+import contextlib as _contextlib
+
+import jax as _jax
+
+if hasattr(_jax, "set_mesh"):
+    set_mesh = _jax.set_mesh
+else:  # jax 0.4.x: Mesh is itself the context manager
+
+    @_contextlib.contextmanager
+    def set_mesh(mesh):
+        with mesh:
+            yield mesh
+
+
+
+@_jax.custom_vjp
+def optimization_barrier(x):
+    """``jax.lax.optimization_barrier`` with a gradient rule.
+
+    jax 0.4.x has no differentiation rule for the barrier primitive; this
+    wrapper passes cotangents through (barriered, preserving the
+    anti-hoisting intent in the backward pass too).
+    """
+    return _jax.lax.optimization_barrier(x)
+
+
+def _barrier_fwd(x):
+    return optimization_barrier(x), None
+
+
+def _barrier_bwd(_, g):
+    return (_jax.lax.optimization_barrier(g),)
+
+
+optimization_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+__all__ = ["shard_map", "optimization_barrier", "set_mesh"]

@@ -8,9 +8,12 @@
   sliding_pool.py    — two-phase scan pooling kernel
   ssm_scan.py        — selective-SSM scan with VMEM-resident state (the
                        paper's streaming insight applied to Mamba; forward)
-  ops.py             — jit'd public dispatch (padding, regimes, fallbacks)
+  autotune.py        — shape-keyed tile/block/regime search with a
+                       persistent JSON cache consulted by ops.py
+  ops.py             — jit'd public dispatch (padding, regimes, epilogue
+                       fusion, autotuned tiles, fallbacks)
   ref.py             — pure-jnp oracles for allclose validation
 """
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["autotune", "ops", "ref"]

@@ -128,8 +128,9 @@ def conv1d_im2col_fused_pallas(
         grid=(B, n_tiles),
         in_specs=[
             pl.BlockSpec(
-                (1, pl.Element(halo, (0, 0)), Cin),
+                (1, halo, Cin),
                 lambda b, i: (b, i * tile_l * stride, 0),
+                indexing_mode=pl.unblocked,
             ),
             pl.BlockSpec((K, Cin, Cout), lambda b, i: (0, 0, 0)),
         ],

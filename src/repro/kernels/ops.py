@@ -6,6 +6,13 @@ Call sites across the framework use these wrappers, which
     the Pallas grids stay rectangular,
   * pick the paper's kernel regime from the filter size
     (``repro.core.conv.regime_for``),
+  * resolve tile/channel-block choices: explicit arguments win, then the
+    shape-keyed autotuner cache (``repro.kernels.autotune``), then defaults
+    — with automatic channel blocking above ``AUTO_BLOCK_THRESHOLD`` so
+    large-channel layers never load a full ``(K, Cin, Cout)`` weight tile
+    into VMEM,
+  * fuse the ``bias`` + ``activation`` epilogue into the sliding kernels
+    (one launch for conv→bias→act); non-sliding backends apply it unfused,
   * select execution mode: real Pallas lowering on TPU, ``interpret=True``
     everywhere else (this container is CPU-only — interpret mode executes
     the kernel body in Python and is how kernels are validated here), and
@@ -24,7 +31,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import conv as core_conv
-from repro.kernels import im2col_gemm, sliding_conv1d, sliding_conv2d, sliding_pool
+from repro.kernels import autotune, im2col_gemm, sliding_conv1d, sliding_conv2d, sliding_pool
+from repro.kernels.sliding_conv1d import apply_activation
 
 Backend = Literal["sliding", "im2col_gemm", "im2col_hbm", "xla"]
 
@@ -41,6 +49,41 @@ def _pad1d(x, padding, k, dilation):
     return x
 
 
+def epilogue_unfused(y, bias, activation):
+    """bias+activation outside the kernel (baseline backends). Matches the
+    fused kernel epilogue's numerics: bias add + activation in f32, one
+    cast back to the output dtype."""
+    if bias is None and activation in (None, "none"):
+        return y
+    yf = y.astype(jnp.float32)
+    if bias is not None:
+        yf = yf + bias.astype(jnp.float32)
+    return apply_activation(yf, activation).astype(y.dtype)
+
+
+def _auto_block(c: int, explicit: int | None) -> int | None:
+    if explicit is not None:
+        return explicit or None  # 0 means "force unblocked"
+    if c > autotune.AUTO_BLOCK_THRESHOLD:
+        return autotune.AUTO_BLOCK
+    return None
+
+
+def _tuned_fill(key: str, **fields):
+    """Fill None fields from the autotune cache entry for this shape key.
+
+    Resolution precedence (shared by conv1d and conv2d): explicit caller
+    argument → tuned cache entry → caller-side default."""
+    tuned = autotune.lookup(key)
+    if tuned is not None:
+        # .get(): a partial / hand-edited cache entry falls back to defaults
+        # rather than crashing dispatch for that shape
+        fields = {
+            k: (tuned.get(k) if v is None else v) for k, v in fields.items()
+        }
+    return fields
+
+
 def conv1d(
     x: jax.Array,
     w: jax.Array,
@@ -49,34 +92,62 @@ def conv1d(
     padding="VALID",
     dilation: int = 1,
     backend: Backend = "sliding",
-    tile_l: int = sliding_conv1d.DEFAULT_TILE_L,
+    bias: jax.Array | None = None,
+    activation: str = "none",
+    tile_l: int | None = None,
+    cin_block: int | None = None,
+    cout_block: int | None = None,
+    regime: str | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Multi-channel 1-D convolution. x: (B,L,Cin), w: (K,Cin,Cout)."""
+    """Multi-channel 1-D convolution. x: (B,L,Cin), w: (K,Cin,Cout).
+
+    ``bias`` (Cout,) + ``activation`` (none/relu/gelu/silu) are fused into
+    the sliding kernel's epilogue; baseline backends apply them unfused.
+    """
     interpret = use_interpret() if interpret is None else interpret
     if backend == "xla":
-        return core_conv.conv1d_xla(
+        y = core_conv.conv1d_xla(
             x, w, stride=stride, padding=padding, dilation=dilation
         )
+        return epilogue_unfused(y, bias, activation)
     if dilation > 1:  # kernels cover dilation=1; core handles the rest
-        return core_conv.conv1d(
+        y = core_conv.conv1d(
             x, w, stride=stride, padding=padding, dilation=dilation,
             backend="sliding" if backend == "sliding" else "im2col_gemm",
         )
+        return epilogue_unfused(y, bias, activation)
     x = _pad1d(x, padding, w.shape[0], dilation)
     if backend == "sliding":
+        B, L, Cin = x.shape
+        K, _, Cout = w.shape
+        key = autotune.conv1d_key(B, L, Cin, Cout, K, stride, x.dtype.name)
+        cfg = _tuned_fill(
+            key, tile_l=tile_l, cin_block=cin_block,
+            cout_block=cout_block, regime=regime,
+        )
+        tile_l = cfg["tile_l"]
+        if tile_l is None:
+            tile_l = sliding_conv1d.DEFAULT_TILE_L
         return sliding_conv1d.conv1d_sliding_pallas(
-            x, w, stride=stride, tile_l=tile_l, interpret=interpret
+            x, w, bias, stride=stride, tile_l=tile_l,
+            cin_block=_auto_block(Cin, cfg["cin_block"]),
+            cout_block=_auto_block(Cout, cfg["cout_block"]),
+            regime=cfg["regime"], activation=activation,
+            interpret=interpret,
         )
+    tile_l = sliding_conv1d.DEFAULT_TILE_L if tile_l is None else tile_l
     if backend == "im2col_gemm":
-        return im2col_gemm.conv1d_im2col_fused_pallas(
+        y = im2col_gemm.conv1d_im2col_fused_pallas(
             x, w, stride=stride, tile_l=tile_l, interpret=interpret
         )
-    if backend == "im2col_hbm":
-        return im2col_gemm.conv1d_im2col_hbm(
+    elif backend == "im2col_hbm":
+        y = im2col_gemm.conv1d_im2col_hbm(
             x, w, stride=stride, interpret=interpret
         )
-    raise ValueError(backend)
+    else:
+        raise ValueError(backend)
+    return epilogue_unfused(y, bias, activation)
 
 
 def conv1d_depthwise(
@@ -85,14 +156,23 @@ def conv1d_depthwise(
     *,
     stride: int = 1,
     padding="CAUSAL",
-    tile_l: int = sliding_conv1d.DEFAULT_TILE_L,
+    bias: jax.Array | None = None,
+    activation: str = "none",
+    tile_l: int | None = None,
+    c_block: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Depthwise 1-D sliding conv (Mamba conv path). x: (B,L,C), w: (K,C)."""
+    """Depthwise 1-D sliding conv (Mamba conv path). x: (B,L,C), w: (K,C).
+
+    conv→bias→activation is one kernel launch (fused epilogue).
+    """
     interpret = use_interpret() if interpret is None else interpret
     x = _pad1d(x, padding, w.shape[0], 1)
+    tile_l = sliding_conv1d.DEFAULT_TILE_L if tile_l is None else tile_l
     return sliding_conv1d.conv1d_depthwise_pallas(
-        x, w, stride=stride, tile_l=tile_l, interpret=interpret
+        x, w, bias, stride=stride, tile_l=tile_l,
+        c_block=_auto_block(x.shape[-1], c_block), activation=activation,
+        interpret=interpret,
     )
 
 
@@ -104,21 +184,31 @@ def conv2d(
     padding="VALID",
     dilation: tuple[int, int] = (1, 1),
     backend: Backend = "sliding",
-    tile_h: int = sliding_conv2d.DEFAULT_TILE_H,
-    tile_w: int = sliding_conv2d.DEFAULT_TILE_W,
+    bias: jax.Array | None = None,
+    activation: str = "none",
+    tile_h: int | None = None,
+    tile_w: int | None = None,
+    cin_block: int | None = None,
+    cout_block: int | None = None,
+    regime: str | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Multi-channel 2-D convolution. x: (B,H,W,Cin), w: (kh,kw,Cin,Cout)."""
+    """Multi-channel 2-D convolution. x: (B,H,W,Cin), w: (kh,kw,Cin,Cout).
+
+    ``bias``/``activation`` fuse into the sliding kernel epilogue.
+    """
     interpret = use_interpret() if interpret is None else interpret
     if backend == "xla":
-        return core_conv.conv2d_xla(
+        y = core_conv.conv2d_xla(
             x, w, stride=stride, padding=padding, dilation=dilation
         )
+        return epilogue_unfused(y, bias, activation)
     if dilation != (1, 1):
-        return core_conv.conv2d(
+        y = core_conv.conv2d(
             x, w, stride=stride, padding=padding, dilation=dilation,
             backend="sliding" if backend == "sliding" else "im2col_gemm",
         )
+        return epilogue_unfused(y, bias, activation)
     kh, kw = w.shape[:2]
     (plo_h, phi_h), (plo_w, phi_w) = core_conv._resolve_pad_2d(
         padding, kh, kw, dilation
@@ -126,11 +216,30 @@ def conv2d(
     if plo_h or phi_h or plo_w or phi_w:
         x = jnp.pad(x, ((0, 0), (plo_h, phi_h), (plo_w, phi_w), (0, 0)))
     if backend == "sliding":
+        B, H, W, Cin = x.shape
+        Cout = w.shape[3]
+        key = autotune.conv2d_key(
+            B, H, W, Cin, Cout, kh, kw, *stride, x.dtype.name
+        )
+        cfg = _tuned_fill(
+            key, tile_h=tile_h, tile_w=tile_w, cin_block=cin_block,
+            cout_block=cout_block, regime=regime,
+        )
+        tile_h = cfg["tile_h"]
+        tile_w = cfg["tile_w"]
+        if tile_h is None:
+            tile_h = sliding_conv2d.DEFAULT_TILE_H
+        if tile_w is None:
+            tile_w = sliding_conv2d.DEFAULT_TILE_W
         return sliding_conv2d.conv2d_sliding_pallas(
-            x, w, stride=stride, tile_h=tile_h, tile_w=tile_w, interpret=interpret
+            x, w, bias, stride=stride, tile_h=tile_h, tile_w=tile_w,
+            cin_block=_auto_block(Cin, cfg["cin_block"]),
+            cout_block=_auto_block(Cout, cfg["cout_block"]),
+            regime=cfg["regime"], activation=activation, interpret=interpret,
         )
     if backend == "im2col_hbm" or backend == "im2col_gemm":
-        return im2col_gemm.conv2d_im2col_hbm(x, w, stride=stride, interpret=interpret)
+        y = im2col_gemm.conv2d_im2col_hbm(x, w, stride=stride, interpret=interpret)
+        return epilogue_unfused(y, bias, activation)
     raise ValueError(backend)
 
 

@@ -14,14 +14,29 @@ CPU→TPU mapping):
     The shift is an address offset into the halo tile — the TPU analogue of
     the CPU vector slide.
   * ``compound`` (K > 17)       — the tap range no longer fits one halo tile
-    comfortably; taps are processed in chunks of ``TAP_CHUNK`` via an extra
-    (innermost) grid dimension that *revisits* the output block,
-    accumulating partial sums — the analogue of the paper's compound-vector
-    kernel operating on multiple hardware vectors.
+    comfortably; taps are processed in chunks of ``TAP_CHUNK`` via the
+    reduction grid dimension that *revisits* the output block, accumulating
+    partial sums — the analogue of the paper's compound-vector kernel
+    operating on multiple hardware vectors.
+
+Channel blocking (DESIGN.md §3): when ``cin_block``/``cout_block`` are set,
+the grid gains Cout-block and Cin-block dimensions so a kernel instance only
+holds a ``(K, cin_block, cout_block)`` weight tile and a ``(halo, cin_block)``
+input tile in VMEM — large-channel layers no longer load full ``(K, Cin,
+Cout)`` weights per tile. Partial Cin-block products are accumulated in an
+f32 VMEM scratch across output-block revisits (the reduction dimension is
+innermost in the grid, so each output block's reduction completes before the
+block is flushed).
+
+Fused epilogue: ``bias`` (Cout,) and ``activation`` (none/relu/gelu/silu)
+are applied inside the kernel on the final reduction visit — conv→bias→act
+is one kernel launch, not three HBM round-trips.
 
 All kernels: NLC layout, stride ≥ 1 (loaded-tile register slicing), f32
 accumulation, bf16/f32 in/out. HBM traffic is O(input + output) — the im2col
 column matrix is never materialized (compare ``repro.kernels.im2col_gemm``).
+Halo (overlapping) input windows use ``pl.unblocked`` index maps: offsets
+are element-granular, so consecutive tiles may share (K-1)·stride rows.
 """
 from __future__ import annotations
 
@@ -30,109 +45,211 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_TILE_L = 256
 TAP_CHUNK = 16  # taps per compound chunk ~= one "hardware vector" of taps
 
 
-def _acc(x_ref):
-    return jnp.float32
+def apply_activation(x: jax.Array, activation: str) -> jax.Array:
+    """Epilogue activation on the f32 accumulator (static dispatch)."""
+    if activation in (None, "none"):
+        return x
+    if activation == "relu":
+        return jax.nn.relu(x)
+    if activation == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if activation == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _epilogue(acc, bias_ref, o_ref, *, activation: str):
+    """bias-add + activation on the f32 accumulator, cast, store."""
+    if bias_ref is not None:
+        acc = acc + bias_ref[0].astype(jnp.float32)
+    o_ref[0] = apply_activation(acc, activation).astype(o_ref.dtype)
+
+
+def _slide(x, k: int, tile: int, stride: int):
+    """Tap-k shifted view of the halo tile (the paper's vector slide)."""
+    xs = x[k : k + (tile - 1) * stride + 1]
+    if stride > 1:
+        xs = xs[::stride]
+    return xs
 
 
 # ---------------------------------------------------------------------------
 # kernel bodies
 # ---------------------------------------------------------------------------
+# Common structure: grid (B, L-tiles, Cout-blocks, reduction) with the
+# reduction dimension (Cin blocks × tap chunks) innermost. acc_ref is an f32
+# VMEM scratch persisting across the reduction sweep of one output block.
 
-def _kernel_generic(x_ref, w_ref, o_ref, *, taps: int, tile_l: int, stride: int):
+def _unpack(rest, has_bias: bool):
+    if has_bias:
+        bias_ref, o_ref, acc_ref = rest
+    else:
+        (o_ref, acc_ref), bias_ref = rest, None
+    return bias_ref, o_ref, acc_ref
+
+
+def _reduce_store(acc, rest, *, has_bias, n_red, red_axis, finish):
+    """Fold this visit's partial product into the output block.
+
+    n_red == 1 (unblocked channels, single tap chunk — the common hot path):
+    no scratch is allocated and the register accumulator goes straight
+    through the epilogue. Otherwise the f32 scratch carries partials across
+    output-block revisits: first visit stores, later visits add, last visit
+    runs ``finish(acc, bias_ref, o_ref)``.
+    """
+    if n_red == 1:
+        if has_bias:
+            bias_ref, o_ref = rest
+        else:
+            (o_ref,), bias_ref = rest, None
+        finish(acc, bias_ref, o_ref)
+        return
+    bias_ref, o_ref, acc_ref = _unpack(rest, has_bias)
+    r = pl.program_id(red_axis)
+
+    @pl.when(r == 0)
+    def _first():
+        acc_ref[...] = acc
+
+    @pl.when(r > 0)
+    def _accum():
+        acc_ref[...] += acc
+
+    @pl.when(r == n_red - 1)
+    def _done():
+        finish(acc_ref[...], bias_ref, o_ref)
+
+
+def _kernel_generic(
+    x_ref, w_ref, *rest, taps, tile_l, stride, n_red, activation, has_bias
+):
     """Unrolled shift-and-MXU-matmul over taps (generic / vector-slide)."""
-    x = x_ref[0]  # ((TL-1)*s + K, Cin) halo tile, VMEM-resident
-    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
+    x = x_ref[0]  # ((TL-1)*s + K, cin_block) halo tile, VMEM-resident
+    cout = w_ref.shape[2]
+    acc = jnp.zeros((tile_l, cout), jnp.float32)
     for k in range(taps):
-        xs = x[k : k + (tile_l - 1) * stride + 1]
-        if stride > 1:
-            xs = xs[::stride]
-        acc += jnp.dot(xs, w_ref[k], preferred_element_type=jnp.float32)
-    o_ref[0] = acc.astype(o_ref.dtype)
+        acc += jnp.dot(
+            _slide(x, k, tile_l, stride), w_ref[k],
+            preferred_element_type=jnp.float32,
+        )
+    _reduce_store(
+        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=3,
+        finish=functools.partial(_epilogue, activation=activation),
+    )
 
 
-def _kernel_custom(x_ref, w_ref, o_ref, *, taps: int, tile_l: int, stride: int):
+def _kernel_custom(
+    x_ref, w_ref, *rest, taps, tile_l, stride, n_red, activation, has_bias
+):
     """Tap-stacked single-matmul kernel for K in {3, 5} (custom regime)."""
     x = x_ref[0]
-    cols = []
-    for k in range(taps):
-        xs = x[k : k + (tile_l - 1) * stride + 1]
-        if stride > 1:
-            xs = xs[::stride]
-        cols.append(xs)
-    stacked = jnp.concatenate(cols, axis=-1)  # (TL, K*Cin) — in VMEM only
+    cols = [_slide(x, k, tile_l, stride) for k in range(taps)]
+    stacked = jnp.concatenate(cols, axis=-1)  # (TL, K*cin_block) — VMEM only
     wf = w_ref[...].reshape(taps * w_ref.shape[1], w_ref.shape[2])
-    o_ref[0] = jnp.dot(
-        stacked, wf, preferred_element_type=jnp.float32
-    ).astype(o_ref.dtype)
+    acc = jnp.dot(stacked, wf, preferred_element_type=jnp.float32)
+    _reduce_store(
+        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=3,
+        finish=functools.partial(_epilogue, activation=activation),
+    )
 
 
-def _kernel_compound(x_ref, w_ref, o_ref, *, chunk: int, tile_l: int, stride: int):
-    """Tap-chunked accumulation (compound regime): output block revisited
-    across the innermost grid dim; chunk c covers taps [c*chunk, (c+1)*chunk).
+def _kernel_compound(
+    x_ref, w_ref, *rest, chunk, tile_l, stride, n_red, activation, has_bias
+):
+    """Tap-chunked accumulation (compound regime): the reduction dimension
+    sweeps Cin blocks × tap chunks; chunk c covers taps [c·chunk, (c+1)·chunk).
     """
-    c = pl.program_id(2)
-
-    @pl.when(c == 0)
-    def _init():
-        o_ref[0] = jnp.zeros(o_ref.shape[1:], o_ref.dtype)
-
     x = x_ref[0]
-    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
+    cout = w_ref.shape[2]
+    acc = jnp.zeros((tile_l, cout), jnp.float32)
     for k in range(chunk):  # taps within the chunk: unrolled slides
-        xs = x[k : k + (tile_l - 1) * stride + 1]
-        if stride > 1:
-            xs = xs[::stride]
-        acc += jnp.dot(xs, w_ref[k], preferred_element_type=jnp.float32)
-    o_ref[0] = (o_ref[0].astype(jnp.float32) + acc).astype(o_ref.dtype)
+        acc += jnp.dot(
+            _slide(x, k, tile_l, stride), w_ref[k],
+            preferred_element_type=jnp.float32,
+        )
+    _reduce_store(
+        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=3,
+        finish=functools.partial(_epilogue, activation=activation),
+    )
 
 
-def _kernel_depthwise(x_ref, w_ref, o_ref, *, taps: int, tile_l: int, stride: int):
+def _kernel_depthwise(
+    x_ref, w_ref, *rest, taps, tile_l, stride, activation, has_bias
+):
     """Depthwise (VPU) kernel: per-tap shifted elementwise FMA — the most
     literal TPU transcription of the paper's vector-slide inner loop."""
+    if has_bias:
+        bias_ref, o_ref = rest
+    else:
+        (o_ref,), bias_ref = rest, None
     x = x_ref[0]
     acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
     for k in range(taps):
-        xs = x[k : k + (tile_l - 1) * stride + 1]
-        if stride > 1:
-            xs = xs[::stride]
-        acc += xs.astype(jnp.float32) * w_ref[k].astype(jnp.float32)
-    o_ref[0] = acc.astype(o_ref.dtype)
+        acc += _slide(x, k, tile_l, stride).astype(jnp.float32) * w_ref[
+            k
+        ].astype(jnp.float32)
+    _epilogue(acc, bias_ref, o_ref, activation=activation)
 
 
 # ---------------------------------------------------------------------------
 # pallas_call wrappers
 # ---------------------------------------------------------------------------
 
-def _pad_len(L_out_total: int, tile_l: int) -> int:
-    return pl.cdiv(L_out_total, tile_l) * tile_l
+def _resolve_block(total: int, block: int | None) -> int:
+    if block is None or block <= 0:
+        return total
+    return min(block, total)
+
+
+def _pad_axis(a: jax.Array, axis: int, to: int) -> jax.Array:
+    if a.shape[axis] >= to:
+        return a
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, to - a.shape[axis])
+    return jnp.pad(a, pads)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("stride", "tile_l", "regime", "interpret"),
+    static_argnames=(
+        "stride", "tile_l", "cin_block", "cout_block", "regime",
+        "activation", "interpret",
+    ),
 )
 def conv1d_sliding_pallas(
     x: jax.Array,
     w: jax.Array,
+    bias: jax.Array | None = None,
     *,
     stride: int = 1,
     tile_l: int = DEFAULT_TILE_L,
+    cin_block: int | None = None,
+    cout_block: int | None = None,
     regime: str | None = None,
+    activation: str = "none",
     interpret: bool = False,
 ) -> jax.Array:
     """VALID 1-D sliding conv. x: (B, L, Cin), w: (K, Cin, Cout).
 
     Padding is handled by the caller (``repro.kernels.ops``) so the kernel
     grid stays rectangular. Output length: (L - K) // stride + 1.
+    ``bias`` (Cout,) and ``activation`` are fused into the kernel epilogue.
+    ``cin_block``/``cout_block`` bound the per-instance VMEM working set;
+    None means unblocked (full channel dimension).
     """
     B, L, Cin = x.shape
     K, _, Cout = w.shape
     out_len = (L - K) // stride + 1
+    if out_len < 1:
+        raise ValueError(
+            f"filter K={K} (stride {stride}) exceeds input length {L}"
+        )
     if regime is None:
         from repro.core.conv import regime_for
 
@@ -146,65 +263,118 @@ def conv1d_sliding_pallas(
     if need > L:
         x = jnp.pad(x, ((0, 0), (0, need - L), (0, 0)))
 
+    # -- channel blocking: pad Cin/Cout to block multiples (zero taps/outputs
+    #    contribute nothing / are trimmed), one grid dim per blocked axis.
+    cb = _resolve_block(Cin, cin_block)
+    ob = _resolve_block(Cout, cout_block)
+    n_ci = pl.cdiv(Cin, cb)
+    n_co = pl.cdiv(Cout, ob)
+    if n_ci * cb > Cin:
+        x = _pad_axis(x, 2, n_ci * cb)
+        w = _pad_axis(w, 1, n_ci * cb)
+    if n_co * ob > Cout:
+        w = _pad_axis(w, 2, n_co * ob)
+    has_bias = bias is not None
+    if has_bias:
+        bias2d = _pad_axis(bias.reshape(1, Cout), 1, n_co * ob)
+
+    out_dtype = x.dtype
+
     if regime == "compound":
         n_chunks = pl.cdiv(K, TAP_CHUNK)
         Kp = n_chunks * TAP_CHUNK
         if Kp > K:
             w = jnp.pad(w, ((0, Kp - K), (0, 0), (0, 0)))
             x = jnp.pad(x, ((0, 0), (0, Kp - K), (0, 0)))
+        n_red = n_ci * n_chunks
         chunk_halo = (tile_l - 1) * stride + TAP_CHUNK
         kernel = functools.partial(
-            _kernel_compound, chunk=TAP_CHUNK, tile_l=tile_l, stride=stride
+            _kernel_compound, chunk=TAP_CHUNK, tile_l=tile_l, stride=stride,
+            n_red=n_red, activation=activation, has_bias=has_bias,
         )
-        out = pl.pallas_call(
-            kernel,
-            grid=(B, n_tiles, n_chunks),
-            in_specs=[
-                pl.BlockSpec(
-                    (1, pl.Element(chunk_halo, (0, 0)), Cin),
-                    lambda b, i, c: (b, i * tile_l * stride + c * TAP_CHUNK, 0),
+        # reduction index r decomposes as (cin block, tap chunk): the tap
+        # chunk is fastest so a cin block's taps complete consecutively.
+        in_specs = [
+            pl.BlockSpec(
+                (1, chunk_halo, cb),
+                lambda b, i, co, r: (
+                    b,
+                    i * tile_l * stride + (r % n_chunks) * TAP_CHUNK,
+                    (r // n_chunks) * cb,
                 ),
-                pl.BlockSpec((TAP_CHUNK, Cin, Cout), lambda b, i, c: (c, 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, tile_l, Cout), lambda b, i, c: (b, i, 0)),
-            out_shape=jax.ShapeDtypeStruct((B, padded_out, Cout), x.dtype),
-            interpret=interpret,
-        )(x, w)
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec(
+                (TAP_CHUNK, cb, ob),
+                lambda b, i, co, r: (r % n_chunks, r // n_chunks, co),
+            ),
+        ]
     else:
+        n_red = n_ci
         body = _kernel_custom if regime == "custom" else _kernel_generic
-        kernel = functools.partial(body, taps=K, tile_l=tile_l, stride=stride)
-        out = pl.pallas_call(
-            kernel,
-            grid=(B, n_tiles),
-            in_specs=[
-                pl.BlockSpec(
-                    (1, pl.Element(halo, (0, 0)), Cin),
-                    lambda b, i: (b, i * tile_l * stride, 0),
-                ),
-                pl.BlockSpec((K, Cin, Cout), lambda b, i: (0, 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, tile_l, Cout), lambda b, i: (b, i, 0)),
-            out_shape=jax.ShapeDtypeStruct((B, padded_out, Cout), x.dtype),
-            interpret=interpret,
-        )(x, w)
-    return out[:, :out_len]
+        kernel = functools.partial(
+            body, taps=K, tile_l=tile_l, stride=stride,
+            n_red=n_red, activation=activation, has_bias=has_bias,
+        )
+        in_specs = [
+            pl.BlockSpec(
+                (1, halo, cb),
+                lambda b, i, co, r: (b, i * tile_l * stride, r * cb),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec((K, cb, ob), lambda b, i, co, r: (0, r, co)),
+        ]
+    args = [x, w]
+    if has_bias:
+        in_specs.append(
+            pl.BlockSpec((1, ob), lambda b, i, co, r: (0, co))
+        )
+        args.append(bias2d)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, n_tiles, n_co, n_red),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, tile_l, ob), lambda b, i, co, r: (b, i, co)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, padded_out, n_co * ob), out_dtype),
+        # the single-visit fast path accumulates in registers, no scratch
+        scratch_shapes=(
+            [] if n_red == 1 else [pltpu.VMEM((tile_l, ob), jnp.float32)]
+        ),
+        interpret=interpret,
+    )(*args)
+    return out[:, :out_len, :Cout]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("stride", "tile_l", "interpret")
+    jax.jit,
+    static_argnames=("stride", "tile_l", "c_block", "activation", "interpret"),
 )
 def conv1d_depthwise_pallas(
     x: jax.Array,
     w: jax.Array,
+    bias: jax.Array | None = None,
     *,
     stride: int = 1,
     tile_l: int = DEFAULT_TILE_L,
+    c_block: int | None = None,
+    activation: str = "none",
     interpret: bool = False,
 ) -> jax.Array:
-    """VALID depthwise sliding conv. x: (B, L, C), w: (K, C)."""
+    """VALID depthwise sliding conv. x: (B, L, C), w: (K, C).
+
+    ``bias`` (C,) + ``activation`` fuse into the epilogue (the Mamba conv
+    path is conv→bias→silu in one launch). ``c_block`` blocks the channel
+    axis (channels are independent in depthwise — no reduction revisits).
+    """
     B, L, C = x.shape
     K, _ = w.shape
     out_len = (L - K) // stride + 1
+    if out_len < 1:
+        raise ValueError(
+            f"filter K={K} (stride {stride}) exceeds input length {L}"
+        )
     tile_l = min(tile_l, out_len)
     n_tiles = pl.cdiv(out_len, tile_l)
     padded_out = n_tiles * tile_l
@@ -212,21 +382,34 @@ def conv1d_depthwise_pallas(
     need = (padded_out - 1) * stride + K
     if need > L:
         x = jnp.pad(x, ((0, 0), (0, need - L), (0, 0)))
+    cb = _resolve_block(C, c_block)
+    n_c = pl.cdiv(C, cb)
+    if n_c * cb > C:
+        x = _pad_axis(x, 2, n_c * cb)
+        w = _pad_axis(w, 1, n_c * cb)
+    has_bias = bias is not None
     kernel = functools.partial(
-        _kernel_depthwise, taps=K, tile_l=tile_l, stride=stride
+        _kernel_depthwise, taps=K, tile_l=tile_l, stride=stride,
+        activation=activation, has_bias=has_bias,
     )
+    in_specs = [
+        pl.BlockSpec(
+            (1, halo, cb),
+            lambda b, i, c: (b, i * tile_l * stride, c * cb),
+            indexing_mode=pl.unblocked,
+        ),
+        pl.BlockSpec((K, cb), lambda b, i, c: (0, c)),
+    ]
+    args = [x, w]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, cb), lambda b, i, c: (0, c)))
+        args.append(_pad_axis(bias.reshape(1, C), 1, n_c * cb))
     out = pl.pallas_call(
         kernel,
-        grid=(B, n_tiles),
-        in_specs=[
-            pl.BlockSpec(
-                (1, pl.Element(halo, (0, 0)), C),
-                lambda b, i: (b, i * tile_l * stride, 0),
-            ),
-            pl.BlockSpec((K, C), lambda b, i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, tile_l, C), lambda b, i: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, padded_out, C), x.dtype),
+        grid=(B, n_tiles, n_c),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, tile_l, cb), lambda b, i, c: (b, i, c)),
+        out_shape=jax.ShapeDtypeStruct((B, padded_out, n_c * cb), x.dtype),
         interpret=interpret,
-    )(x, w)
-    return out[:, :out_len]
+    )(*args)
+    return out[:, :out_len, :C]

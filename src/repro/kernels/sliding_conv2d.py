@@ -8,14 +8,23 @@ in the paper where the width determines hardware-vector fit):
   * ``custom``   (kh=kw ∈ {3,5}) — all taps stacked along channels in VMEM,
     ONE (TH·TW, kh·kw·Cin) @ (kh·kw·Cin, Cout) matmul.
   * ``generic``  (kw ≤ 17)       — unrolled tap loop, kh·kw shifted matmuls.
-  * ``compound`` (kw > 17)       — filter *rows* processed via an innermost
-    grid dimension revisiting the output block (accumulation), so the VMEM
-    working set stays bounded for large filters: chunk c covers filter rows
-    [c·ROW_CHUNK, (c+1)·ROW_CHUNK).
+  * ``compound`` (kw > 17)       — filter *rows* processed in chunks of
+    ``ROW_CHUNK`` via the reduction grid dimension revisiting the output
+    block (accumulation), so the VMEM working set stays bounded for large
+    filters: chunk c covers filter rows [c·ROW_CHUNK, (c+1)·ROW_CHUNK).
+
+Channel blocking (DESIGN.md §3): ``cin_block``/``cout_block`` add Cout-block
+and Cin-block grid dimensions; a kernel instance holds only a
+``(kh, kw, cin_block, cout_block)`` weight tile and a
+``(halo_h, halo_w, cin_block)`` input tile. Cin-block partials accumulate in
+an f32 VMEM scratch across output-block revisits (reduction innermost).
+
+Fused epilogue: ``bias`` (Cout,) + ``activation`` (none/relu/gelu/silu)
+applied on the last reduction visit — conv→bias→act in one launch.
 
 Layout NHWC, weights HWIO, f32 accumulation. Output tiling is (TH, TW);
-input blocks carry a (kh-1, kw-1) halo via ``pl.Element`` index maps. The
-im2col column tensor is never materialized — compare
+input blocks carry a (kh-1, kw-1) halo via ``pl.unblocked`` (element-offset)
+index maps. The im2col column tensor is never materialized — compare
 ``repro.kernels.im2col_gemm``.
 """
 from __future__ import annotations
@@ -25,6 +34,14 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.sliding_conv1d import (
+    _pad_axis,
+    _reduce_store,
+    _resolve_block,
+    apply_activation,
+)
 
 DEFAULT_TILE_H = 16
 DEFAULT_TILE_W = 128
@@ -38,73 +55,101 @@ def _shifted(x, i, j, th, tw, sh, sw):
     return xs
 
 
-def _kernel_generic(x_ref, w_ref, o_ref, *, kh, kw, th, tw, sh, sw):
-    x = x_ref[0]
+def _finish(acc, bias_ref, o_ref, *, th, tw, activation):
     cout = o_ref.shape[-1]
+    if bias_ref is not None:
+        acc = acc + bias_ref[0].astype(jnp.float32)
+    o_ref[0] = apply_activation(acc, activation).reshape(th, tw, cout).astype(
+        o_ref.dtype
+    )
+
+
+def _kernel_generic(
+    x_ref, w_ref, *rest, kh, kw, th, tw, sh, sw, n_red, activation, has_bias
+):
+    x = x_ref[0]
+    cout = w_ref.shape[-1]
     acc = jnp.zeros((th * tw, cout), jnp.float32)
     for i in range(kh):
         for j in range(kw):
             xs = _shifted(x, i, j, th, tw, sh, sw).reshape(th * tw, -1)
             acc += jnp.dot(xs, w_ref[i, j], preferred_element_type=jnp.float32)
-    o_ref[0] = acc.reshape(th, tw, cout).astype(o_ref.dtype)
+    _reduce_store(
+        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=4,
+        finish=functools.partial(_finish, th=th, tw=tw, activation=activation),
+    )
 
 
-def _kernel_custom(x_ref, w_ref, o_ref, *, kh, kw, th, tw, sh, sw):
+def _kernel_custom(
+    x_ref, w_ref, *rest, kh, kw, th, tw, sh, sw, n_red, activation, has_bias
+):
     x = x_ref[0]
     cin = x.shape[-1]
-    cout = o_ref.shape[-1]
+    cout = w_ref.shape[-1]
     cols = []
     for i in range(kh):
         for j in range(kw):
             cols.append(_shifted(x, i, j, th, tw, sh, sw).reshape(th * tw, cin))
-    stacked = jnp.concatenate(cols, axis=-1)  # (TH*TW, kh*kw*Cin): VMEM only
+    stacked = jnp.concatenate(cols, axis=-1)  # (TH*TW, kh*kw*cin): VMEM only
     wf = w_ref[...].reshape(kh * kw * cin, cout)
-    o_ref[0] = (
-        jnp.dot(stacked, wf, preferred_element_type=jnp.float32)
-        .reshape(th, tw, cout)
-        .astype(o_ref.dtype)
+    acc = jnp.dot(stacked, wf, preferred_element_type=jnp.float32)
+    _reduce_store(
+        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=4,
+        finish=functools.partial(_finish, th=th, tw=tw, activation=activation),
     )
 
 
-def _kernel_compound(x_ref, w_ref, o_ref, *, rows, kw, th, tw, sh, sw):
-    c = pl.program_id(3)
-
-    @pl.when(c == 0)
-    def _init():
-        o_ref[0] = jnp.zeros(o_ref.shape[1:], o_ref.dtype)
-
+def _kernel_compound(
+    x_ref, w_ref, *rest, rows, kw, th, tw, sh, sw, n_red, activation, has_bias
+):
     x = x_ref[0]
-    cout = o_ref.shape[-1]
+    cout = w_ref.shape[-1]
     acc = jnp.zeros((th * tw, cout), jnp.float32)
     for i in range(rows):  # filter rows within this chunk
         for j in range(kw):
             xs = _shifted(x, i, j, th, tw, sh, sw).reshape(th * tw, -1)
             acc += jnp.dot(xs, w_ref[i, j], preferred_element_type=jnp.float32)
-    o_ref[0] = (
-        o_ref[0].astype(jnp.float32) + acc.reshape(th, tw, cout)
-    ).astype(o_ref.dtype)
+    _reduce_store(
+        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=4,
+        finish=functools.partial(_finish, th=th, tw=tw, activation=activation),
+    )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("stride", "tile_h", "tile_w", "regime", "interpret"),
+    static_argnames=(
+        "stride", "tile_h", "tile_w", "cin_block", "cout_block", "regime",
+        "activation", "interpret",
+    ),
 )
 def conv2d_sliding_pallas(
     x: jax.Array,
     w: jax.Array,
+    bias: jax.Array | None = None,
     *,
     stride: tuple[int, int] = (1, 1),
     tile_h: int = DEFAULT_TILE_H,
     tile_w: int = DEFAULT_TILE_W,
+    cin_block: int | None = None,
+    cout_block: int | None = None,
     regime: str | None = None,
+    activation: str = "none",
     interpret: bool = False,
 ) -> jax.Array:
-    """VALID 2-D sliding conv. x: (B,H,W,Cin), w: (kh,kw,Cin,Cout)."""
+    """VALID 2-D sliding conv. x: (B,H,W,Cin), w: (kh,kw,Cin,Cout).
+
+    ``bias`` (Cout,) + ``activation`` fuse into the epilogue; ``cin_block``/
+    ``cout_block`` bound the VMEM working set (None = full channel axis).
+    """
     B, H, W, Cin = x.shape
     kh, kw, _, Cout = w.shape
     sh, sw = stride
     oh = (H - kh) // sh + 1
     ow = (W - kw) // sw + 1
+    if oh < 1 or ow < 1:
+        raise ValueError(
+            f"filter ({kh},{kw}) (stride {stride}) exceeds input ({H},{W})"
+        )
     if regime is None:
         from repro.core.conv import regime_for
 
@@ -123,49 +168,85 @@ def conv2d_sliding_pallas(
     halo_h = (th - 1) * sh + kh
     halo_w = (tw - 1) * sw + kw
 
+    cb = _resolve_block(Cin, cin_block)
+    ob = _resolve_block(Cout, cout_block)
+    n_ci = pl.cdiv(Cin, cb)
+    n_co = pl.cdiv(Cout, ob)
+    if n_ci * cb > Cin:
+        x = _pad_axis(x, 3, n_ci * cb)
+        w = _pad_axis(w, 2, n_ci * cb)
+    if n_co * ob > Cout:
+        w = _pad_axis(w, 3, n_co * ob)
+    has_bias = bias is not None
+    if has_bias:
+        bias2d = _pad_axis(bias.reshape(1, Cout), 1, n_co * ob)
+
     if regime == "compound":
         n_chunks = pl.cdiv(kh, ROW_CHUNK)
         khp = n_chunks * ROW_CHUNK
         if khp > kh:
             w = jnp.pad(w, ((0, khp - kh), (0, 0), (0, 0), (0, 0)))
             x = jnp.pad(x, ((0, 0), (0, khp - kh), (0, 0), (0, 0)))
+        n_red = n_ci * n_chunks
         chunk_halo_h = (th - 1) * sh + ROW_CHUNK
         kernel = functools.partial(
-            _kernel_compound, rows=ROW_CHUNK, kw=kw, th=th, tw=tw, sh=sh, sw=sw
+            _kernel_compound, rows=ROW_CHUNK, kw=kw, th=th, tw=tw, sh=sh,
+            sw=sw, n_red=n_red, activation=activation, has_bias=has_bias,
         )
-        out = pl.pallas_call(
-            kernel,
-            grid=(B, nh, nw, n_chunks),
-            in_specs=[
-                pl.BlockSpec(
-                    (1, pl.Element(chunk_halo_h, (0, 0)), pl.Element(halo_w, (0, 0)), Cin),
-                    lambda b, i, j, c: (b, i * th * sh + c * ROW_CHUNK, j * tw * sw, 0),
+        # reduction r = (cin block, filter-row chunk), chunk fastest
+        in_specs = [
+            pl.BlockSpec(
+                (1, chunk_halo_h, halo_w, cb),
+                lambda b, i, j, co, r: (
+                    b,
+                    i * th * sh + (r % n_chunks) * ROW_CHUNK,
+                    j * tw * sw,
+                    (r // n_chunks) * cb,
                 ),
-                pl.BlockSpec(
-                    (ROW_CHUNK, kw, Cin, Cout), lambda b, i, j, c: (c, 0, 0, 0)
-                ),
-            ],
-            out_specs=pl.BlockSpec(
-                (1, th, tw, Cout), lambda b, i, j, c: (b, i, j, 0)
+                indexing_mode=pl.unblocked,
             ),
-            out_shape=jax.ShapeDtypeStruct((B, nh * th, nw * tw, Cout), x.dtype),
-            interpret=interpret,
-        )(x, w)
+            pl.BlockSpec(
+                (ROW_CHUNK, kw, cb, ob),
+                lambda b, i, j, co, r: (r % n_chunks, 0, r // n_chunks, co),
+            ),
+        ]
     else:
+        n_red = n_ci
         body = _kernel_custom if regime == "custom" else _kernel_generic
-        kernel = functools.partial(body, kh=kh, kw=kw, th=th, tw=tw, sh=sh, sw=sw)
-        out = pl.pallas_call(
-            kernel,
-            grid=(B, nh, nw),
-            in_specs=[
-                pl.BlockSpec(
-                    (1, pl.Element(halo_h, (0, 0)), pl.Element(halo_w, (0, 0)), Cin),
-                    lambda b, i, j: (b, i * th * sh, j * tw * sw, 0),
-                ),
-                pl.BlockSpec((kh, kw, Cin, Cout), lambda b, i, j: (0, 0, 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, th, tw, Cout), lambda b, i, j: (b, i, j, 0)),
-            out_shape=jax.ShapeDtypeStruct((B, nh * th, nw * tw, Cout), x.dtype),
-            interpret=interpret,
-        )(x, w)
-    return out[:, :oh, :ow]
+        kernel = functools.partial(
+            body, kh=kh, kw=kw, th=th, tw=tw, sh=sh, sw=sw,
+            n_red=n_red, activation=activation, has_bias=has_bias,
+        )
+        in_specs = [
+            pl.BlockSpec(
+                (1, halo_h, halo_w, cb),
+                lambda b, i, j, co, r: (b, i * th * sh, j * tw * sw, r * cb),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec(
+                (kh, kw, cb, ob), lambda b, i, j, co, r: (0, 0, r, co)
+            ),
+        ]
+    args = [x, w]
+    if has_bias:
+        in_specs.append(
+            pl.BlockSpec((1, ob), lambda b, i, j, co, r: (0, co))
+        )
+        args.append(bias2d)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nw, n_co, n_red),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, th, tw, ob), lambda b, i, j, co, r: (b, i, j, co)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (B, nh * th, nw * tw, n_co * ob), x.dtype
+        ),
+        # the single-visit fast path accumulates in registers, no scratch
+        scratch_shapes=(
+            [] if n_red == 1 else [pltpu.VMEM((th * tw, ob), jnp.float32)]
+        ),
+        interpret=interpret,
+    )(*args)
+    return out[:, :oh, :ow, :Cout]

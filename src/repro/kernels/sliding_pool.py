@@ -66,7 +66,9 @@ def sliding_pool_pallas(
         grid=(B, n_tiles),
         in_specs=[
             pl.BlockSpec(
-                (1, pl.Element(halo, (0, 0)), C), lambda b, i: (b, i * tile_l, 0)
+                (1, halo, C),
+                lambda b, i: (b, i * tile_l, 0),
+                indexing_mode=pl.unblocked,
             )
         ],
         out_specs=pl.BlockSpec((1, tile_l, C), lambda b, i: (b, i, 0)),

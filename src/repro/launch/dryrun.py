@@ -199,6 +199,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path | None):
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost_raw = compiled.cost_analysis()
+            if isinstance(cost_raw, (list, tuple)):  # jax 0.4.x: per-device list
+                cost_raw = cost_raw[0] if cost_raw else {}
             hlo_text = compiled.as_text()
             coll = collective_bytes(hlo_text)
             # loop-corrected FLOPs/bytes (cost_analysis counts while bodies

@@ -7,6 +7,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro._compat import optimization_barrier
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import ParamDef, Runtime
 
@@ -44,7 +45,7 @@ def scan_blocks(
     """
 
     def barrier_body(carry, lp):
-        return body(jax.lax.optimization_barrier(carry), lp)
+        return body(optimization_barrier(carry), lp)
 
     if collect:
         fn = jax.checkpoint(barrier_body) if remat else barrier_body

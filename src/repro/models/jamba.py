@@ -17,6 +17,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro._compat import optimization_barrier
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import ParamDef, Runtime, abstract_params, init_params
 from repro.models import layers as L
@@ -96,7 +97,7 @@ class Jamba:
         cfg = self.cfg
 
         def period_body(carry, period_params):
-            carry = jax.lax.optimization_barrier(carry)  # see common.scan_blocks
+            carry = optimization_barrier(carry)  # see common.scan_blocks
             for j in range(self.period):
                 body = functools.partial(self._pos_block, pos=j)
                 if cfg.remat != "none":

@@ -48,6 +48,66 @@ def act_fn(name: str):
 
 
 # ---------------------------------------------------------------------------
+# Fused conv→bias→activation building blocks
+# ---------------------------------------------------------------------------
+# On the Pallas path (backend "sliding_pallas") the bias add and activation
+# run inside the conv kernel's epilogue — one launch, no extra HBM round
+# trips. Pure-JAX / XLA backends apply them unfused with identical
+# semantics (activations are the kernel-epilogue set: none/relu/gelu/silu).
+
+def conv1d_bias_act(
+    x: Array,
+    w: Array,
+    b: Array | None,
+    *,
+    activation: str = "none",
+    stride: int = 1,
+    padding="VALID",
+    backend: str = "sliding",
+) -> Array:
+    """Multi-channel conv1d + bias + activation. x: (B,L,Cin), w: (K,Cin,Cout)."""
+    if backend == "sliding_pallas":
+        from repro.kernels import ops
+
+        return ops.conv1d(
+            x, w, stride=stride, padding=padding, bias=b,
+            activation=activation,
+        )
+    from repro.core import conv as C
+    from repro.kernels.ops import epilogue_unfused
+
+    cb = "sliding" if backend.startswith("sliding") else backend
+    y = C.conv1d(x, w, stride=stride, padding=padding, backend=cb)
+    return epilogue_unfused(y, b, activation)
+
+
+def conv2d_bias_act(
+    x: Array,
+    w: Array,
+    b: Array | None,
+    *,
+    activation: str = "none",
+    stride: tuple[int, int] = (1, 1),
+    padding="VALID",
+    backend: str = "sliding",
+) -> Array:
+    """Multi-channel conv2d + bias + activation. x: (B,H,W,Cin), w: HWIO."""
+    if backend == "sliding_pallas":
+        from repro.kernels import ops
+
+        return ops.conv2d(
+            x, w, stride=stride, padding=padding, bias=b,
+            activation=activation,
+        )
+    from repro.core import conv as C
+    from repro.kernels.ops import epilogue_unfused
+
+    cb = "sliding" if backend.startswith("sliding") else backend
+    y = C.conv2d(x, w, stride=stride, padding=padding, backend=cb)
+    return epilogue_unfused(y, b, activation)
+
+
+# ---------------------------------------------------------------------------
 # RoPE
 # ---------------------------------------------------------------------------
 

@@ -23,15 +23,22 @@ VISION_DIM = 1152
 PATCH = 14
 
 
-def patch_embed(w: Array, images: Array, backend: str = "sliding") -> Array:
+def patch_embed(
+    w: Array, images: Array, backend: str = "sliding",
+    bias: Array | None = None,
+) -> Array:
     """images: (B, H, W, 3) -> (B, (H//14)*(W//14), VISION_DIM).
 
     conv2d k=14 s=14 == non-overlapping sliding window; routes through the
-    paper's conv2d (compound regime: width 14 ≤ 17 → generic)."""
-    from repro.core import conv as C
+    paper's conv2d (compound regime: width 14 ≤ 17 → generic). With
+    ``backend="sliding_pallas"`` the (optional) bias fuses into the kernel
+    epilogue."""
+    from repro.models.layers import conv2d_bias_act
 
-    b = "sliding" if backend.startswith("sliding") else backend
-    y = C.conv2d(images, w, stride=(PATCH, PATCH), padding="VALID", backend=b)
+    y = conv2d_bias_act(
+        images, w, bias, stride=(PATCH, PATCH), padding="VALID",
+        backend=backend,
+    )
     B, h, ww, c = y.shape
     return y.reshape(B, h * ww, c)
 

@@ -51,20 +51,25 @@ def mamba_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
     }
 
 
-def _conv(x: Array, w: Array, b: Array, backend: str) -> Array:
-    """Causal depthwise conv via the selected evaluation strategy."""
-    if backend == "sliding":
-        y = conv1d_depthwise_sliding(x, w, padding="CAUSAL")
-    elif backend == "sliding_pallas":
+def _conv_act(x: Array, w: Array, b: Array, backend: str) -> Array:
+    """Causal depthwise conv→bias→silu via the selected evaluation strategy.
+
+    On the Pallas path the bias and silu run in the kernel's fused epilogue
+    (one launch); the pure-JAX/XLA paths apply them unfused."""
+    if backend == "sliding_pallas":
         from repro.kernels import ops
 
-        y = ops.conv1d_depthwise(x, w, padding="CAUSAL")
+        return ops.conv1d_depthwise(
+            x, w, padding="CAUSAL", bias=b, activation="silu"
+        )
+    if backend == "sliding":
+        y = conv1d_depthwise_sliding(x, w, padding="CAUSAL")
     elif backend == "xla":
         y = conv1d_xla(x, w[:, None, :].reshape(w.shape[0], 1, w.shape[1]),
                        padding="CAUSAL", groups=w.shape[1])
     else:
         raise ValueError(backend)
-    return y + b.astype(y.dtype)
+    return jax.nn.silu(y + b.astype(y.dtype))
 
 
 SUBCHUNK = 32
@@ -121,14 +126,14 @@ def mamba_apply(
     xin, z = jnp.split(xz, 2, axis=-1)
 
     if state is None:
-        xc = _conv(xin, p["conv_w"].astype(dt), p["conv_b"], cfg.conv_backend)
+        xc = _conv_act(xin, p["conv_w"].astype(dt), p["conv_b"], cfg.conv_backend)
         new_conv = None
     else:
         hist = jnp.concatenate([state["conv"].astype(dt), xin], axis=1)
         w = p["conv_w"].astype(dt)
         xc = (hist * w[None]).sum(axis=1, keepdims=True) + p["conv_b"].astype(dt)
         new_conv = hist[:, 1:]
-    xc = jax.nn.silu(xc)
+        xc = jax.nn.silu(xc)
 
     A = -jnp.exp(p["A_log"])  # (di, N)
 

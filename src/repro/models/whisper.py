@@ -41,16 +41,20 @@ def frontend_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
 
 
 def conv_frontend(p, mels: Array, cfg: ModelConfig) -> Array:
-    """mels: (B, T, 80) -> (B, T//2, d_model). Sliding conv, custom k=3."""
-    from repro.core import conv as C
+    """mels: (B, T, 80) -> (B, T//2, d_model). Sliding conv, custom k=3.
 
-    backend = "sliding" if cfg.conv_backend.startswith("sliding") else cfg.conv_backend
-    x = C.conv1d(mels, p["conv1_w"].astype(mels.dtype), padding="SAME",
-                 backend=backend) + p["conv1_b"].astype(mels.dtype)
-    x = jax.nn.gelu(x)
-    x = C.conv1d(x, p["conv2_w"].astype(x.dtype), stride=2, padding="SAME",
-                 backend=backend) + p["conv2_b"].astype(x.dtype)
-    return jax.nn.gelu(x)
+    conv→bias→gelu is one fused kernel launch on the Pallas path
+    (``conv_backend="sliding_pallas"``)."""
+    x = L.conv1d_bias_act(
+        mels, p["conv1_w"].astype(mels.dtype), p["conv1_b"],
+        activation="gelu", padding="SAME", backend=cfg.conv_backend,
+    )
+    x = L.conv1d_bias_act(
+        x, p["conv2_w"].astype(x.dtype), p["conv2_b"],
+        activation="gelu", stride=2, padding="SAME",
+        backend=cfg.conv_backend,
+    )
+    return x
 
 
 class Whisper:

@@ -28,6 +28,7 @@ def test_sharded_loss_matches_single_device():
         from repro.distributed.sharding import Runtime, DEFAULT_RULES
         from repro.models import build_model
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro._compat import set_mesh
 
         cfg = smoke_config(get_config('qwen3-moe-30b-a3b')).replace(
             d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
@@ -50,7 +51,7 @@ def test_sharded_loss_matches_single_device():
             lambda x, s: jax.device_put(x, s), p1, shard)
         b2 = {k: jax.device_put(v, NamedSharding(mesh, P('data', None)))
               for k, v in batch.items()}
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             l2 = float(jax.jit(m2.loss)(p2, b2))
         print('L1', l1, 'L2', l2)
         assert abs(l1 - l2) < 5e-3, (l1, l2)
@@ -66,6 +67,7 @@ def test_ep_moe_matches_dense_fallback():
         from repro.distributed.sharding import Runtime, DEFAULT_RULES, init_params
         from repro.models import moe as moe_lib
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro._compat import set_mesh
 
         cfg = smoke_config(get_config('phi3.5-moe-42b-a6.6b')).replace(
             d_model=32, d_ff=64, num_experts=8, experts_per_token=2,
@@ -82,7 +84,7 @@ def test_ep_moe_matches_dense_fallback():
         shard = rt.param_shardings(defs)
         p2 = jax.tree.map(lambda v, s: jax.device_put(v, s), params, shard)
         x2 = jax.device_put(x, NamedSharding(mesh, P('data', None, None)))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             y2, aux2 = jax.jit(
                 lambda p, x: moe_lib.moe_apply(p, x, cfg, rt))(p2, x2)
         err = float(jnp.max(jnp.abs(y1 - y2)))
@@ -96,7 +98,7 @@ def test_ep_moe_matches_dense_fallback():
 def test_compressed_allreduce_error_feedback():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
+        from repro._compat import shard_map
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.optim.compress import ef_allreduce_grads
 

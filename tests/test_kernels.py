@@ -98,6 +98,179 @@ def test_conv2d_strided(rng, stride):
     np.testing.assert_allclose(got, ref.conv2d_ref(x, w, stride=stride), **TOL)
 
 
+# -- conv2d compound regime + halo re-padding path ----------------------------
+
+@pytest.mark.parametrize("kh,kw", [(19, 19), (21, 23), (33, 19)])
+def test_conv2d_compound_regime(rng, kh, kw):
+    """kw > 17 → compound: filter rows chunked via the reduction grid dim."""
+    x = jnp.asarray(rng.normal(size=(1, 44, 40, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(kh, kw, 4, 8)).astype(np.float32))
+    got = conv2d_sliding_pallas(
+        x, w, tile_h=8, tile_w=8, regime="compound", interpret=True
+    )
+    np.testing.assert_allclose(got, ref.conv2d_ref(x, w), **TOL)
+
+
+@pytest.mark.parametrize("stride", [(2, 2), (3, 2), (2, 3)])
+@pytest.mark.parametrize("kh,kw", [(5, 5), (19, 19)])
+def test_conv2d_strided_nondivisible(rng, kh, kw, stride):
+    """stride > 1 with output shapes NOT divisible by the tile: the halo
+    re-padding path must keep every tile's read in-bounds."""
+    x = jnp.asarray(rng.normal(size=(2, 37, 31, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(kh, kw, 4, 8)).astype(np.float32))
+    got = conv2d_sliding_pallas(
+        x, w, stride=stride, tile_h=5, tile_w=3, interpret=True
+    )
+    np.testing.assert_allclose(got, ref.conv2d_ref(x, w, stride=stride), **TOL)
+
+
+def test_conv2d_compound_strided_nondivisible(rng):
+    """compound regime + stride: chunked filter rows on the strided grid."""
+    x = jnp.asarray(rng.normal(size=(1, 41, 43, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(19, 19, 4, 8)).astype(np.float32))
+    got = conv2d_sliding_pallas(
+        x, w, stride=(2, 2), tile_h=4, tile_w=4, regime="compound",
+        interpret=True,
+    )
+    np.testing.assert_allclose(
+        got, ref.conv2d_ref(x, w, stride=(2, 2)), **TOL
+    )
+
+
+# -- channel blocking ---------------------------------------------------------
+
+@pytest.mark.parametrize("K,regime", [(3, "custom"), (9, "generic"), (20, "compound")])
+def test_conv1d_channel_blocked(rng, K, regime):
+    """Cin/Cout blocks (incl. non-divisible) match the unblocked result."""
+    x = jnp.asarray(rng.normal(size=(2, 120, 24)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, 24, 40)).astype(np.float32))
+    got = conv1d_sliding_pallas(
+        x, w, tile_l=32, cin_block=10, cout_block=16, regime=regime,
+        interpret=True,
+    )
+    np.testing.assert_allclose(got, ref.conv1d_ref(x, w), **TOL)
+
+
+def test_conv1d_512ch_blocked(rng):
+    """Acceptance shape: Cin=Cout=512, k=3 through the blocked sliding path —
+    the per-instance weight tile is (3, 128, 128), never (3, 512, 512)."""
+    x = jnp.asarray(rng.normal(size=(1, 40, 512)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 512, 512)).astype(np.float32))
+    got = conv1d_sliding_pallas(
+        x, w, tile_l=32, cin_block=128, cout_block=128, interpret=True
+    )
+    np.testing.assert_allclose(got, ref.conv1d_ref(x, w), rtol=2e-3, atol=2e-3)
+
+
+def test_conv2d_channel_blocked(rng):
+    x = jnp.asarray(rng.normal(size=(1, 24, 22, 12)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(5, 5, 12, 20)).astype(np.float32))
+    got = conv2d_sliding_pallas(
+        x, w, tile_h=8, tile_w=8, cin_block=5, cout_block=8, interpret=True
+    )
+    np.testing.assert_allclose(got, ref.conv2d_ref(x, w), **TOL)
+
+
+def test_conv1d_depthwise_channel_blocked(rng):
+    x = jnp.asarray(rng.normal(size=(2, 90, 20)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, 20)).astype(np.float32))
+    got = conv1d_depthwise_pallas(x, w, tile_l=32, c_block=8, interpret=True)
+    np.testing.assert_allclose(got, ref.conv1d_depthwise_ref(x, w), **TOL)
+
+
+# -- fused epilogue (bias + activation) ---------------------------------------
+
+def _act(name):
+    return {
+        "none": lambda v: v,
+        "relu": jax.nn.relu,
+        "gelu": lambda v: jax.nn.gelu(v, approximate=True),
+        "silu": jax.nn.silu,
+    }[name]
+
+
+@pytest.mark.parametrize("activation", ["none", "relu", "gelu", "silu"])
+def test_conv1d_fused_epilogue_f32(rng, activation):
+    """Fused conv+bias+act == unfused reference within f32 tolerance."""
+    x = jnp.asarray(rng.normal(size=(2, 100, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(5, 16, 24)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(24,)).astype(np.float32))
+    got = conv1d_sliding_pallas(
+        x, w, b, tile_l=32, activation=activation, interpret=True
+    )
+    want = _act(activation)(ref.conv1d_ref(x, w) + b)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("activation", ["relu", "gelu"])
+def test_conv1d_fused_epilogue_bf16(rng, activation):
+    x = jnp.asarray(rng.normal(size=(2, 100, 16))).astype(jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(3, 16, 16))).astype(jnp.bfloat16)
+    b = jnp.asarray(rng.normal(size=(16,))).astype(jnp.bfloat16)
+    got = conv1d_sliding_pallas(
+        x, w, b, tile_l=32, activation=activation, interpret=True
+    )
+    want = _act(activation)(
+        ref.conv1d_ref(x, w).astype(jnp.float32) + b.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **BTOL
+    )
+
+
+@pytest.mark.parametrize("activation", ["relu", "silu"])
+def test_conv2d_fused_epilogue(rng, activation):
+    x = jnp.asarray(rng.normal(size=(1, 20, 18, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 8, 16)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+    got = conv2d_sliding_pallas(
+        x, w, b, tile_h=8, tile_w=8, activation=activation, interpret=True
+    )
+    want = _act(activation)(ref.conv2d_ref(x, w) + b)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_conv2d_fused_epilogue_bf16(rng):
+    x = jnp.asarray(rng.normal(size=(1, 20, 18, 8))).astype(jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(3, 3, 8, 16))).astype(jnp.bfloat16)
+    b = jnp.asarray(rng.normal(size=(16,))).astype(jnp.bfloat16)
+    got = conv2d_sliding_pallas(
+        x, w, b, tile_h=8, tile_w=8, activation="relu", interpret=True
+    )
+    want = jax.nn.relu(
+        ref.conv2d_ref(x, w).astype(jnp.float32) + b.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **BTOL
+    )
+
+
+def test_depthwise_fused_epilogue(rng):
+    """The Mamba path: depthwise conv→bias→silu in one launch."""
+    x = jnp.asarray(rng.normal(size=(2, 80, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+    got = conv1d_depthwise_pallas(
+        x, w, b, tile_l=32, activation="silu", interpret=True
+    )
+    want = jax.nn.silu(ref.conv1d_depthwise_ref(x, w) + b)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_conv1d_fused_blocked_epilogue(rng):
+    """Blocking + epilogue compose: bias/act apply once, on the final
+    reduction visit (not once per Cin block)."""
+    x = jnp.asarray(rng.normal(size=(1, 64, 24)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(5, 24, 32)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(32,)).astype(np.float32))
+    got = conv1d_sliding_pallas(
+        x, w, b, tile_l=16, cin_block=8, cout_block=16, activation="gelu",
+        interpret=True,
+    )
+    want = jax.nn.gelu(ref.conv1d_ref(x, w) + b, approximate=True)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
 # -- im2col baselines ---------------------------------------------------------
 
 def test_matmul_tiled(rng):
@@ -149,6 +322,36 @@ def test_ops_conv1d_dispatch(rng, backend, pad):
     w = jnp.asarray(rng.normal(size=(3, 16, 32)).astype(np.float32))
     got = ops.conv1d(x, w, padding=pad, backend=backend, interpret=True)
     want = ops.conv1d(x, w, padding=pad, backend="xla")
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("backend", ["sliding", "im2col_gemm", "im2col_hbm", "xla"])
+def test_ops_conv1d_epilogue_all_backends(rng, backend):
+    """conv+bias+act agrees across backends: fused in the sliding kernel,
+    unfused elsewhere — same numerics either way."""
+    x = jnp.asarray(rng.normal(size=(2, 60, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 16, 32)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(32,)).astype(np.float32))
+    got = ops.conv1d(
+        x, w, padding="SAME", backend=backend, bias=b, activation="relu",
+        interpret=True,
+    )
+    want = jax.nn.relu(
+        ops.conv1d(x, w, padding="SAME", backend="xla") + b
+    )
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_ops_conv2d_epilogue(rng):
+    x = jnp.asarray(rng.normal(size=(1, 20, 20, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(5, 5, 8, 16)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+    got = ops.conv2d(
+        x, w, padding="SAME", bias=b, activation="gelu", interpret=True
+    )
+    want = jax.nn.gelu(
+        ops.conv2d(x, w, padding="SAME", backend="xla") + b, approximate=True
+    )
     np.testing.assert_allclose(got, want, **TOL)
 
 
