@@ -1,6 +1,6 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--autotune]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--autotune] [--grad]
 
 Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_conv.json``
 (name → us_per_call) alongside it so the perf trajectory is machine-
@@ -10,10 +10,17 @@ trackable across PRs:
   conv1d/*    companion 1-D sliding conv speedup table + pooling scan claim
   roofline/*  per-(arch×shape) dominant roofline term from the dry-run JSONs
   autotune/*  (--autotune) best-vs-default tile/block search per shape
+  grad/*      (--grad) fwd+bwd (training) timings for the fig1/fig2/conv1d
+              shapes — sliding vs im2col through ``jax.value_and_grad``
 
 ``--autotune`` runs the shape-keyed search (``repro.kernels.autotune``) over
 every fig1/fig2/conv1d conv shape, persists winners in the JSON tuning cache
 consulted by ``repro.kernels.ops``, and reports best-vs-default speedup.
+
+``--grad`` times one loss + gradient evaluation (compiled pure-JAX sliding
+vs im2col backends — the wall-clock-meaningful comparison on CPU; the
+Pallas custom-VJP kernels share the same algorithmic structure and are
+validated against these in interpret mode by ``tests/test_grads.py``).
 """
 from __future__ import annotations
 
@@ -74,9 +81,67 @@ def autotune_rows(quick: bool) -> list[str]:
     return rows
 
 
+def grad_rows(quick: bool) -> list[str]:
+    """fwd+bwd timings for the fig1/fig2/conv1d shapes (``grad/*`` rows)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks import fig1_speedup, fig2_throughput, table_conv1d
+    from benchmarks.common import row, time_fn
+    from repro.core import conv1d_im2col, conv1d_sliding, conv2d_im2col, conv2d_sliding
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    def timed_grad(fn, x, w):
+        f = jax.jit(
+            jax.value_and_grad(
+                lambda xx, ww: jnp.sum(fn(xx, ww, padding="VALID")),
+                argnums=(0, 1),
+            )
+        )
+        return time_fn(f, x, w)
+
+    # 2-D: fig1 (128²) and fig2 (96²) sweeps
+    for fig, h, cin, sizes in (
+        ("fig1", fig1_speedup.H, fig1_speedup.CIN,
+         [3, 9, 31] if quick else fig1_speedup.FILTER_SIZES),
+        ("fig2", fig2_throughput.H, fig2_throughput.CIN,
+         [3, 17] if quick else fig2_throughput.SIZES),
+    ):
+        x = jnp.asarray(rng.normal(size=(1, h, h, cin)).astype(np.float32))
+        for k in sizes:
+            w = jnp.asarray(
+                rng.normal(size=(k, k, cin, cin)).astype(np.float32)
+            )
+            t_s = timed_grad(conv2d_sliding, x, w)
+            t_g = timed_grad(conv2d_im2col, x, w)
+            rows.append(row(
+                f"grad/{fig}_conv2d_k{k}_sliding", t_s,
+                f"speedup={t_g / t_s:.2f}x",
+            ))
+            rows.append(row(f"grad/{fig}_conv2d_k{k}_im2col", t_g, ""))
+    # 1-D: the conv1d table sweep
+    L = 4096 if quick else table_conv1d.L
+    C = table_conv1d.C
+    x = jnp.asarray(rng.normal(size=(1, L, C)).astype(np.float32))
+    for k in [3, 33] if quick else table_conv1d.WIDTHS:
+        w = jnp.asarray(rng.normal(size=(k, C, C)).astype(np.float32))
+        t_s = timed_grad(conv1d_sliding, x, w)
+        t_g = timed_grad(conv1d_im2col, x, w)
+        rows.append(row(
+            f"grad/conv1d_L{L}_k{k}_sliding", t_s,
+            f"speedup={t_g / t_s:.2f}x",
+        ))
+        rows.append(row(f"grad/conv1d_L{L}_k{k}_im2col", t_g, ""))
+    return rows
+
+
 def main() -> None:
     quick = "--quick" in sys.argv
     tune = "--autotune" in sys.argv
+    grad = "--grad" in sys.argv
     from benchmarks import fig1_speedup, fig2_throughput, roofline_report, table_conv1d
 
     rows: list[str] = []
@@ -93,6 +158,8 @@ def main() -> None:
         rows.append("roofline/missing,0.0,run repro.launch.dryrun first")
     if tune:
         rows += autotune_rows(quick)
+    if grad:
+        rows += grad_rows(quick)
     print("name,us_per_call,derived")
     for r in rows:
         print(r)

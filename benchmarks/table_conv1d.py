@@ -14,6 +14,8 @@ from repro.core import (
     conv1d_im2col,
     conv1d_sliding,
     conv_flops,
+    sliding_max,
+    sliding_max_shift,
     sliding_sum_scan,
     sliding_sum_shift,
 )
@@ -51,6 +53,21 @@ def run(widths=WIDTHS) -> list[str]:
             f"shift_vs_scan={t_shift / t_scan:.2f}x",
         ))
         out.append(row(f"pool/w{wdw}_shift", t_shift, ""))
+    # max pooling: two-phase block prefix/suffix decomposition (O(n),
+    # window-independent) vs shift-and-max (O(n·w)) — the non-invertible
+    # monoid counterpart of the sum claim, mirrored by _max_pool_kernel
+    for wdw in [4, 16, 64, 256]:
+        t_scan = time_fn(
+            jax.jit(functools.partial(sliding_max, window=wdw)), xs
+        )
+        t_shift = time_fn(
+            jax.jit(functools.partial(sliding_max_shift, window=wdw)), xs
+        )
+        out.append(row(
+            f"pool/w{wdw}_max_scan", t_scan,
+            f"shift_vs_scan={t_shift / t_scan:.2f}x",
+        ))
+        out.append(row(f"pool/w{wdw}_max_shift", t_shift, ""))
     return out
 
 

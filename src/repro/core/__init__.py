@@ -23,6 +23,7 @@ from repro.core.sliding import (
     max_pool2d,
     sliding_avg,
     sliding_max,
+    sliding_max_shift,
     sliding_min,
     sliding_reduce,
     sliding_sum_scan,
@@ -47,6 +48,7 @@ __all__ = [
     "max_pool2d",
     "sliding_avg",
     "sliding_max",
+    "sliding_max_shift",
     "sliding_min",
     "sliding_reduce",
     "sliding_sum_scan",

@@ -124,6 +124,21 @@ def sliding_max(x: Array, window: int, axis: int = -1) -> Array:
     )
 
 
+def sliding_max_shift(x: Array, window: int, axis: int = -1) -> Array:
+    """Sliding max via shift-and-max — the O(n·w) baseline the two-phase
+    block decomposition (``sliding_max``) is benchmarked against."""
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    n = x.shape[axis]
+    if window > n:
+        raise ValueError(f"window {window} exceeds length {n}")
+    out_len = n - window + 1
+    acc = jax.lax.slice_in_dim(x, 0, out_len, axis=axis)
+    for k in range(1, window):
+        acc = jnp.maximum(acc, jax.lax.slice_in_dim(x, k, k + out_len, axis=axis))
+    return acc
+
+
 def sliding_min(x: Array, window: int, axis: int = -1) -> Array:
     return sliding_reduce(
         x, window, jnp.minimum, jnp.array(jnp.inf, x.dtype), axis=axis

@@ -74,7 +74,10 @@ def _load() -> dict[str, dict[str, Any]]:
 def _flush() -> None:
     p = cache_path()
     p.parent.mkdir(parents=True, exist_ok=True)
-    tmp = p.with_suffix(".tmp")
+    # per-process temp name: concurrent tuners each write their own temp and
+    # the atomic rename is last-writer-wins (a shared .tmp raced — one
+    # process could rename a half-written file from another)
+    tmp = p.parent / f".{p.name}.{os.getpid()}.tmp"
     tmp.write_text(json.dumps(_cache, indent=1, sort_keys=True))
     tmp.replace(p)
 
@@ -85,15 +88,21 @@ def invalidate() -> None:
     _cache = None
 
 
-def conv1d_key(B, L, Cin, Cout, K, stride, dtype) -> str:
-    return f"conv1d|B{B}|L{L}|Cin{Cin}|Cout{Cout}|K{K}|s{stride}|{dtype}"
+def conv1d_key(B, L, Cin, Cout, K, stride, dtype, grad: bool = False) -> str:
+    """Shape key; ``grad=True`` keys the backward (dw-kernel) entry so the
+    cache tunes forward and backward tilings independently."""
+    base = f"conv1d|B{B}|L{L}|Cin{Cin}|Cout{Cout}|K{K}|s{stride}|{dtype}"
+    return base + "|grad" if grad else base
 
 
-def conv2d_key(B, H, W, Cin, Cout, kh, kw, sh, sw, dtype) -> str:
-    return (
+def conv2d_key(
+    B, H, W, Cin, Cout, kh, kw, sh, sw, dtype, grad: bool = False
+) -> str:
+    base = (
         f"conv2d|B{B}|H{H}|W{W}|Cin{Cin}|Cout{Cout}"
         f"|K{kh}x{kw}|s{sh}x{sw}|{dtype}"
     )
+    return base + "|grad" if grad else base
 
 
 def lookup(key: str) -> dict[str, Any] | None:
@@ -255,5 +264,84 @@ def autotune_conv2d(
     default = {
         "tile_h": min(DEFAULT_TILE_H, oh), "tile_w": min(DEFAULT_TILE_W, ow),
         "cin_block": 0, "cout_block": 0, "regime": regime,
+    }
+    return _search(key, run, cands, default)
+
+
+# ---------------------------------------------------------------------------
+# backward (training) tuning — fwd+bwd timed together, winner recorded under
+# the |grad shape key consulted by the custom-VJP dw-kernel dispatch
+# ---------------------------------------------------------------------------
+
+def autotune_conv1d_grad(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    interpret: bool | None = None,
+    tile_candidates: Iterable[int] | None = None,
+) -> Result:
+    """Search the backward dw-kernel tile for a conv1d shape (times one
+    fwd+bwd through ``jax.grad``); persists the winner under the grad key."""
+    from repro.kernels import ops
+    from repro.kernels.sliding_conv1d import DEFAULT_TILE_L
+
+    B, L, Cin = x.shape
+    K, _, Cout = w.shape
+    key = conv1d_key(B, L, Cin, Cout, K, stride, x.dtype.name, grad=True)
+    out_len = (L - K) // stride + 1
+
+    def run(cfg):
+        def f(xx, ww):
+            return ops.conv1d(
+                xx, ww, stride=stride, backend="sliding",
+                bwd_tile_l=cfg["tile_l"], interpret=interpret,
+            ).sum()
+
+        return jax.grad(f, argnums=(0, 1))(x, w)
+
+    tiles = [
+        t for t in (tile_candidates or TILE_L_CANDIDATES) if t <= out_len
+    ] or [min(DEFAULT_TILE_L, out_len)]
+    default = {"tile_l": min(DEFAULT_TILE_L, out_len)}
+    return _search(key, run, [{"tile_l": t} for t in tiles], default)
+
+
+def autotune_conv2d_grad(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: tuple[int, int] = (1, 1),
+    interpret: bool | None = None,
+    tile_candidates: Iterable[tuple[int, int]] | None = None,
+) -> Result:
+    """Search the backward dw-kernel tiles for a conv2d shape."""
+    from repro.kernels import ops
+    from repro.kernels.sliding_conv2d import DEFAULT_TILE_H, DEFAULT_TILE_W
+
+    B, H, W, Cin = x.shape
+    kh, kw, _, Cout = w.shape
+    key = conv2d_key(B, H, W, Cin, Cout, kh, kw, *stride, x.dtype.name,
+                     grad=True)
+    oh = (H - kh) // stride[0] + 1
+    ow = (W - kw) // stride[1] + 1
+
+    def run(cfg):
+        def f(xx, ww):
+            return ops.conv2d(
+                xx, ww, stride=stride, backend="sliding",
+                bwd_tile_h=cfg["tile_h"], bwd_tile_w=cfg["tile_w"],
+                interpret=interpret,
+            ).sum()
+
+        return jax.grad(f, argnums=(0, 1))(x, w)
+
+    cands = [
+        {"tile_h": th, "tile_w": tw}
+        for th, tw in (tile_candidates or TILE_HW_CANDIDATES)
+        if th <= oh * 2 and tw <= ow * 2
+    ]
+    default = {
+        "tile_h": min(DEFAULT_TILE_H, oh), "tile_w": min(DEFAULT_TILE_W, ow),
     }
     return _search(key, run, cands, default)

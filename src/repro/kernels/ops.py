@@ -13,6 +13,13 @@ Call sites across the framework use these wrappers, which
     into VMEM,
   * fuse the ``bias`` + ``activation`` epilogue into the sliding kernels
     (one launch for conv→bias→act); non-sliding backends apply it unfused,
+  * make the sliding path **differentiable**: ``conv1d``, ``conv2d``,
+    ``conv1d_depthwise`` and ``pool1d`` carry a ``jax.custom_vjp`` whose
+    backward passes are themselves sliding-window Pallas kernels
+    (``repro.kernels.sliding_conv_bwd``, DESIGN.md §6) — dx as a sliding
+    correlation of the dilated gradient with flipped/transposed weights
+    (tuned under its own autotune shape key), dw/db as a halo-tiled
+    sliding reduction, d_act from the saved pre-activation residual,
   * select execution mode: real Pallas lowering on TPU, ``interpret=True``
     everywhere else (this container is CPU-only — interpret mode executes
     the kernel body in Python and is how kernels are validated here), and
@@ -25,13 +32,20 @@ Call sites across the framework use these wrappers, which
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import conv as core_conv
-from repro.kernels import autotune, im2col_gemm, sliding_conv1d, sliding_conv2d, sliding_pool
+from repro.kernels import (
+    autotune,
+    im2col_gemm,
+    sliding_conv1d,
+    sliding_conv2d,
+    sliding_conv_bwd,
+    sliding_pool,
+)
 from repro.kernels.sliding_conv1d import apply_activation
 
 Backend = Literal["sliding", "im2col_gemm", "im2col_hbm", "xla"]
@@ -84,6 +98,111 @@ def _tuned_fill(key: str, **fields):
     return fields
 
 
+# ---------------------------------------------------------------------------
+# conv1d — sliding path with custom VJP
+# ---------------------------------------------------------------------------
+
+class _Conv1dCfg(NamedTuple):
+    """Static kernel configuration threaded through the custom VJP."""
+    stride: int
+    tile_l: int
+    cin_block: int | None
+    cout_block: int | None
+    regime: str | None
+    activation: str
+    has_bias: bool
+    bwd_tile_l: int
+    interpret: bool
+
+
+def _resolve_conv1d(x, w, *, stride, tile_l, cin_block, cout_block, regime):
+    """explicit args → tuned cache entry → defaults (+ auto blocking)."""
+    B, L, Cin = x.shape
+    K, _, Cout = w.shape
+    key = autotune.conv1d_key(B, L, Cin, Cout, K, stride, x.dtype.name)
+    cfg = _tuned_fill(
+        key, tile_l=tile_l, cin_block=cin_block,
+        cout_block=cout_block, regime=regime,
+    )
+    tile_l = cfg["tile_l"]
+    if tile_l is None:
+        tile_l = sliding_conv1d.DEFAULT_TILE_L
+    return dict(
+        stride=stride, tile_l=tile_l,
+        cin_block=_auto_block(Cin, cfg["cin_block"]),
+        cout_block=_auto_block(Cout, cfg["cout_block"]),
+        regime=cfg["regime"],
+    )
+
+
+def _conv1d_sliding_dispatch(x, w, bias, *, activation, interpret, **tune):
+    """Tuned forward kernel call WITHOUT the custom VJP — used for the
+    forward primal and for dx inside the backward pass (where it picks up
+    the dx conv's own shape key from the autotune cache)."""
+    cfg = _resolve_conv1d(x, w, **tune)
+    return sliding_conv1d.conv1d_sliding_pallas(
+        x, w, bias, activation=activation, interpret=interpret, **cfg
+    )
+
+
+def _bwd_tile1d(x, w, stride, explicit):
+    """Backward dw-kernel tile: explicit arg → |grad cache entry → default."""
+    if explicit is not None:
+        return explicit
+    B, L, Cin = x.shape
+    K, _, Cout = w.shape
+    key = autotune.conv1d_key(B, L, Cin, Cout, K, stride, x.dtype.name,
+                              grad=True)
+    tuned = autotune.lookup(key) or {}
+    return tuned.get("tile_l") or sliding_conv1d.DEFAULT_TILE_L
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _conv1d_sliding_op(cfg: _Conv1dCfg, x, w, bias):
+    return sliding_conv1d.conv1d_sliding_pallas(
+        x, w, bias, stride=cfg.stride, tile_l=cfg.tile_l,
+        cin_block=cfg.cin_block, cout_block=cfg.cout_block,
+        regime=cfg.regime, activation=cfg.activation, interpret=cfg.interpret,
+    )
+
+
+def _conv1d_sliding_fwd(cfg: _Conv1dCfg, x, w, bias):
+    if cfg.activation in (None, "none"):
+        y = _conv1d_sliding_op(cfg, x, w, bias)
+        z = None  # y IS the (cast) pre-activation — nothing extra to save
+    else:
+        y, z = sliding_conv1d.conv1d_sliding_pallas(
+            x, w, bias, stride=cfg.stride, tile_l=cfg.tile_l,
+            cin_block=cfg.cin_block, cout_block=cfg.cout_block,
+            regime=cfg.regime, activation=cfg.activation,
+            interpret=cfg.interpret, save_preact=True,
+        )
+    return y, (x, w, bias, z)
+
+
+def _conv1d_sliding_bwd(cfg: _Conv1dCfg, res, dy):
+    x, w, bias, z = res
+    dz = sliding_conv_bwd.act_bwd(dy, z, cfg.activation).astype(x.dtype)
+    # dx: stride-1 sliding conv of the dilated gradient with the flipped,
+    # Cin↔Cout-transposed weights — tuned under its own shape key
+    dzp, wt = sliding_conv_bwd.conv1d_dx_operands(dz, w, stride=cfg.stride)
+    dx = _conv1d_sliding_dispatch(
+        dzp, wt, None, activation="none", interpret=cfg.interpret,
+        stride=1, tile_l=None, cin_block=None, cout_block=None, regime=None,
+    )
+    dx = sliding_conv_bwd._fit_len(dx, x.shape[1])
+    dw, db = sliding_conv_bwd.conv1d_bwd_dw_pallas(
+        x, dz, w.shape[0], stride=cfg.stride, tile_l=cfg.bwd_tile_l,
+        cin_block=cfg.cin_block, cout_block=cfg.cout_block,
+        has_bias=cfg.has_bias, interpret=cfg.interpret,
+    )
+    dbias = db.astype(bias.dtype) if cfg.has_bias else None
+    return dx, dw.astype(w.dtype), dbias
+
+
+_conv1d_sliding_op.defvjp(_conv1d_sliding_fwd, _conv1d_sliding_bwd)
+
+
 def conv1d(
     x: jax.Array,
     w: jax.Array,
@@ -98,12 +217,15 @@ def conv1d(
     cin_block: int | None = None,
     cout_block: int | None = None,
     regime: str | None = None,
+    bwd_tile_l: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Multi-channel 1-D convolution. x: (B,L,Cin), w: (K,Cin,Cout).
 
     ``bias`` (Cout,) + ``activation`` (none/relu/gelu/silu) are fused into
     the sliding kernel's epilogue; baseline backends apply them unfused.
+    The sliding path is differentiable (custom VJP with Pallas backward
+    kernels); ``bwd_tile_l`` overrides the backward dw-kernel tile.
     """
     interpret = use_interpret() if interpret is None else interpret
     if backend == "xla":
@@ -119,23 +241,16 @@ def conv1d(
         return epilogue_unfused(y, bias, activation)
     x = _pad1d(x, padding, w.shape[0], dilation)
     if backend == "sliding":
-        B, L, Cin = x.shape
-        K, _, Cout = w.shape
-        key = autotune.conv1d_key(B, L, Cin, Cout, K, stride, x.dtype.name)
-        cfg = _tuned_fill(
-            key, tile_l=tile_l, cin_block=cin_block,
+        tuned = _resolve_conv1d(
+            x, w, stride=stride, tile_l=tile_l, cin_block=cin_block,
             cout_block=cout_block, regime=regime,
         )
-        tile_l = cfg["tile_l"]
-        if tile_l is None:
-            tile_l = sliding_conv1d.DEFAULT_TILE_L
-        return sliding_conv1d.conv1d_sliding_pallas(
-            x, w, bias, stride=stride, tile_l=tile_l,
-            cin_block=_auto_block(Cin, cfg["cin_block"]),
-            cout_block=_auto_block(Cout, cfg["cout_block"]),
-            regime=cfg["regime"], activation=activation,
-            interpret=interpret,
+        cfg = _Conv1dCfg(
+            activation=activation, has_bias=bias is not None,
+            bwd_tile_l=_bwd_tile1d(x, w, stride, bwd_tile_l),
+            interpret=interpret, **tuned,
         )
+        return _conv1d_sliding_op(cfg, x, w, bias)
     tile_l = sliding_conv1d.DEFAULT_TILE_L if tile_l is None else tile_l
     if backend == "im2col_gemm":
         y = im2col_gemm.conv1d_im2col_fused_pallas(
@@ -150,6 +265,59 @@ def conv1d(
     return epilogue_unfused(y, bias, activation)
 
 
+# ---------------------------------------------------------------------------
+# depthwise conv1d — custom VJP
+# ---------------------------------------------------------------------------
+
+class _DepthwiseCfg(NamedTuple):
+    stride: int
+    tile_l: int
+    c_block: int | None
+    activation: str
+    has_bias: bool
+    bwd_tile_l: int
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _conv1d_depthwise_op(cfg: _DepthwiseCfg, x, w, bias):
+    return sliding_conv1d.conv1d_depthwise_pallas(
+        x, w, bias, stride=cfg.stride, tile_l=cfg.tile_l,
+        c_block=cfg.c_block, activation=cfg.activation,
+        interpret=cfg.interpret,
+    )
+
+
+def _conv1d_depthwise_fwd(cfg: _DepthwiseCfg, x, w, bias):
+    if cfg.activation in (None, "none"):
+        y, z = _conv1d_depthwise_op(cfg, x, w, bias), None
+    else:
+        y, z = sliding_conv1d.conv1d_depthwise_pallas(
+            x, w, bias, stride=cfg.stride, tile_l=cfg.tile_l,
+            c_block=cfg.c_block, activation=cfg.activation,
+            interpret=cfg.interpret, save_preact=True,
+        )
+    return y, (x, w, bias, z)
+
+
+def _conv1d_depthwise_bwd(cfg: _DepthwiseCfg, res, dy):
+    x, w, bias, z = res
+    dz = sliding_conv_bwd.act_bwd(dy, z, cfg.activation).astype(x.dtype)
+    dx = sliding_conv_bwd.conv1d_depthwise_dx(
+        dz, w, stride=cfg.stride, L=x.shape[1], tile_l=cfg.tile_l,
+        c_block=cfg.c_block, interpret=cfg.interpret,
+    )
+    dw, db = sliding_conv_bwd.conv1d_depthwise_bwd_dw_pallas(
+        x, dz, w.shape[0], stride=cfg.stride, tile_l=cfg.bwd_tile_l,
+        c_block=cfg.c_block, has_bias=cfg.has_bias, interpret=cfg.interpret,
+    )
+    dbias = db.astype(bias.dtype) if cfg.has_bias else None
+    return dx, dw.astype(w.dtype), dbias
+
+
+_conv1d_depthwise_op.defvjp(_conv1d_depthwise_fwd, _conv1d_depthwise_bwd)
+
+
 def conv1d_depthwise(
     x: jax.Array,
     w: jax.Array,
@@ -160,20 +328,138 @@ def conv1d_depthwise(
     activation: str = "none",
     tile_l: int | None = None,
     c_block: int | None = None,
+    bwd_tile_l: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Depthwise 1-D sliding conv (Mamba conv path). x: (B,L,C), w: (K,C).
 
-    conv→bias→activation is one kernel launch (fused epilogue).
+    conv→bias→activation is one kernel launch (fused epilogue); the path is
+    differentiable end-to-end (Pallas backward kernels).
     """
     interpret = use_interpret() if interpret is None else interpret
     x = _pad1d(x, padding, w.shape[0], 1)
     tile_l = sliding_conv1d.DEFAULT_TILE_L if tile_l is None else tile_l
-    return sliding_conv1d.conv1d_depthwise_pallas(
-        x, w, bias, stride=stride, tile_l=tile_l,
+    cfg = _DepthwiseCfg(
+        stride=stride, tile_l=tile_l,
         c_block=_auto_block(x.shape[-1], c_block), activation=activation,
+        has_bias=bias is not None,
+        bwd_tile_l=bwd_tile_l if bwd_tile_l is not None else tile_l,
         interpret=interpret,
     )
+    return _conv1d_depthwise_op(cfg, x, w, bias)
+
+
+# ---------------------------------------------------------------------------
+# conv2d — sliding path with custom VJP
+# ---------------------------------------------------------------------------
+
+class _Conv2dCfg(NamedTuple):
+    stride: tuple[int, int]
+    tile_h: int
+    tile_w: int
+    cin_block: int | None
+    cout_block: int | None
+    regime: str | None
+    activation: str
+    has_bias: bool
+    bwd_tile_h: int
+    bwd_tile_w: int
+    interpret: bool
+
+
+def _resolve_conv2d(x, w, *, stride, tile_h, tile_w, cin_block, cout_block,
+                    regime):
+    B, H, W, Cin = x.shape
+    kh, kw, _, Cout = w.shape
+    key = autotune.conv2d_key(B, H, W, Cin, Cout, kh, kw, *stride,
+                              x.dtype.name)
+    cfg = _tuned_fill(
+        key, tile_h=tile_h, tile_w=tile_w, cin_block=cin_block,
+        cout_block=cout_block, regime=regime,
+    )
+    tile_h = cfg["tile_h"]
+    tile_w = cfg["tile_w"]
+    if tile_h is None:
+        tile_h = sliding_conv2d.DEFAULT_TILE_H
+    if tile_w is None:
+        tile_w = sliding_conv2d.DEFAULT_TILE_W
+    return dict(
+        stride=stride, tile_h=tile_h, tile_w=tile_w,
+        cin_block=_auto_block(Cin, cfg["cin_block"]),
+        cout_block=_auto_block(Cout, cfg["cout_block"]),
+        regime=cfg["regime"],
+    )
+
+
+def _conv2d_sliding_dispatch(x, w, bias, *, activation, interpret, **tune):
+    cfg = _resolve_conv2d(x, w, **tune)
+    return sliding_conv2d.conv2d_sliding_pallas(
+        x, w, bias, activation=activation, interpret=interpret, **cfg
+    )
+
+
+def _bwd_tile2d(x, w, stride, explicit_h, explicit_w):
+    if explicit_h is not None and explicit_w is not None:
+        return explicit_h, explicit_w
+    B, H, W, Cin = x.shape
+    kh, kw, _, Cout = w.shape
+    key = autotune.conv2d_key(B, H, W, Cin, Cout, kh, kw, *stride,
+                              x.dtype.name, grad=True)
+    tuned = autotune.lookup(key) or {}
+    th = explicit_h if explicit_h is not None else (
+        tuned.get("tile_h") or sliding_conv2d.DEFAULT_TILE_H
+    )
+    tw = explicit_w if explicit_w is not None else (
+        tuned.get("tile_w") or sliding_conv2d.DEFAULT_TILE_W
+    )
+    return th, tw
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _conv2d_sliding_op(cfg: _Conv2dCfg, x, w, bias):
+    return sliding_conv2d.conv2d_sliding_pallas(
+        x, w, bias, stride=cfg.stride, tile_h=cfg.tile_h, tile_w=cfg.tile_w,
+        cin_block=cfg.cin_block, cout_block=cfg.cout_block,
+        regime=cfg.regime, activation=cfg.activation, interpret=cfg.interpret,
+    )
+
+
+def _conv2d_sliding_fwd(cfg: _Conv2dCfg, x, w, bias):
+    if cfg.activation in (None, "none"):
+        y, z = _conv2d_sliding_op(cfg, x, w, bias), None
+    else:
+        y, z = sliding_conv2d.conv2d_sliding_pallas(
+            x, w, bias, stride=cfg.stride, tile_h=cfg.tile_h,
+            tile_w=cfg.tile_w, cin_block=cfg.cin_block,
+            cout_block=cfg.cout_block, regime=cfg.regime,
+            activation=cfg.activation, interpret=cfg.interpret,
+            save_preact=True,
+        )
+    return y, (x, w, bias, z)
+
+
+def _conv2d_sliding_bwd(cfg: _Conv2dCfg, res, dy):
+    x, w, bias, z = res
+    dz = sliding_conv_bwd.act_bwd(dy, z, cfg.activation).astype(x.dtype)
+    dzp, wt = sliding_conv_bwd.conv2d_dx_operands(dz, w, stride=cfg.stride)
+    dx = _conv2d_sliding_dispatch(
+        dzp, wt, None, activation="none", interpret=cfg.interpret,
+        stride=(1, 1), tile_h=None, tile_w=None, cin_block=None,
+        cout_block=None, regime=None,
+    )
+    dx = sliding_conv_bwd._fit_len(dx, x.shape[1], 1)
+    dx = sliding_conv_bwd._fit_len(dx, x.shape[2], 2)
+    dw, db = sliding_conv_bwd.conv2d_bwd_dw_pallas(
+        x, dz, w.shape[:2], stride=cfg.stride, tile_h=cfg.bwd_tile_h,
+        tile_w=cfg.bwd_tile_w, cin_block=cfg.cin_block,
+        cout_block=cfg.cout_block, has_bias=cfg.has_bias,
+        interpret=cfg.interpret,
+    )
+    dbias = db.astype(bias.dtype) if cfg.has_bias else None
+    return dx, dw.astype(w.dtype), dbias
+
+
+_conv2d_sliding_op.defvjp(_conv2d_sliding_fwd, _conv2d_sliding_bwd)
 
 
 def conv2d(
@@ -191,11 +477,14 @@ def conv2d(
     cin_block: int | None = None,
     cout_block: int | None = None,
     regime: str | None = None,
+    bwd_tile_h: int | None = None,
+    bwd_tile_w: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Multi-channel 2-D convolution. x: (B,H,W,Cin), w: (kh,kw,Cin,Cout).
 
-    ``bias``/``activation`` fuse into the sliding kernel epilogue.
+    ``bias``/``activation`` fuse into the sliding kernel epilogue; the
+    sliding path is differentiable (custom VJP, Pallas backward kernels).
     """
     interpret = use_interpret() if interpret is None else interpret
     if backend == "xla":
@@ -216,28 +505,24 @@ def conv2d(
     if plo_h or phi_h or plo_w or phi_w:
         x = jnp.pad(x, ((0, 0), (plo_h, phi_h), (plo_w, phi_w), (0, 0)))
     if backend == "sliding":
-        B, H, W, Cin = x.shape
-        Cout = w.shape[3]
-        key = autotune.conv2d_key(
-            B, H, W, Cin, Cout, kh, kw, *stride, x.dtype.name
+        tuned = _resolve_conv2d(
+            x, w, stride=stride, tile_h=tile_h, tile_w=tile_w,
+            cin_block=cin_block, cout_block=cout_block, regime=regime,
         )
-        cfg = _tuned_fill(
-            key, tile_h=tile_h, tile_w=tile_w, cin_block=cin_block,
-            cout_block=cout_block, regime=regime,
+        bth, btw = _bwd_tile2d(x, w, stride, bwd_tile_h, bwd_tile_w)
+        cfg = _Conv2dCfg(
+            activation=activation, has_bias=bias is not None,
+            bwd_tile_h=bth, bwd_tile_w=btw, interpret=interpret, **tuned,
         )
-        tile_h = cfg["tile_h"]
-        tile_w = cfg["tile_w"]
-        if tile_h is None:
-            tile_h = sliding_conv2d.DEFAULT_TILE_H
-        if tile_w is None:
-            tile_w = sliding_conv2d.DEFAULT_TILE_W
-        return sliding_conv2d.conv2d_sliding_pallas(
-            x, w, bias, stride=stride, tile_h=tile_h, tile_w=tile_w,
-            cin_block=_auto_block(Cin, cfg["cin_block"]),
-            cout_block=_auto_block(Cout, cfg["cout_block"]),
-            regime=cfg["regime"], activation=activation, interpret=interpret,
+        return _conv2d_sliding_op(cfg, x, w, bias)
+    if backend == "im2col_gemm":
+        # the fused-VMEM baseline — NOT the HBM-bloat one (which previously
+        # shadowed it here, mislabeling fig1/fig2 "im2col" numbers)
+        y = im2col_gemm.conv2d_im2col_fused_pallas(
+            x, w, stride=stride, interpret=interpret
         )
-    if backend == "im2col_hbm" or backend == "im2col_gemm":
+        return epilogue_unfused(y, bias, activation)
+    if backend == "im2col_hbm":
         y = im2col_gemm.conv2d_im2col_hbm(x, w, stride=stride, interpret=interpret)
         return epilogue_unfused(y, bias, activation)
     raise ValueError(backend)
@@ -248,6 +533,42 @@ def matmul(a: jax.Array, b: jax.Array, *, interpret: bool | None = None) -> jax.
     return im2col_gemm.matmul_pallas(a, b, interpret=interpret)
 
 
+# ---------------------------------------------------------------------------
+# pool1d — custom VJP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _pool1d_op(window: int, op: str, interpret: bool, x):
+    return sliding_pool.sliding_pool_pallas(
+        x, window=window, op=op, interpret=interpret
+    )
+
+
+def _pool1d_fwd(window, op, interpret, x):
+    y = sliding_pool.sliding_pool_pallas(
+        x, window=window, op=op, interpret=interpret
+    )
+    # sum/avg backward needs no residual; max needs (x, y) as argmax witness
+    return y, ((x, y) if op == "max" else None)
+
+
+def _pool1d_bwd(window, op, interpret, res, dy):
+    if op == "max":
+        x, y = res
+        dx = sliding_pool.max_pool_bwd_pallas(
+            x, y, dy, window=window, interpret=interpret
+        )
+        return (dx,)
+    g = dy
+    if op == "avg":
+        g = (dy.astype(jnp.float32) / window).astype(dy.dtype)
+    dx = sliding_pool.sum_pool_bwd(g, window=window, interpret=interpret)
+    return (dx.astype(dy.dtype),)
+
+
+_pool1d_op.defvjp(_pool1d_fwd, _pool1d_bwd)
+
+
 def pool1d(
     x: jax.Array,
     *,
@@ -255,8 +576,8 @@ def pool1d(
     op: str = "sum",
     interpret: bool | None = None,
 ) -> jax.Array:
-    """VALID sliding pooling along axis 1. x: (B,L,C)."""
+    """VALID sliding pooling along axis 1. x: (B,L,C). Differentiable:
+    sum/avg backward reuses the two-phase scan kernel on the padded
+    gradient; max backward is the shift-and-select Pallas kernel."""
     interpret = use_interpret() if interpret is None else interpret
-    return sliding_pool.sliding_pool_pallas(
-        x, window=window, op=op, interpret=interpret
-    )
+    return _pool1d_op(window, op, interpret, x)

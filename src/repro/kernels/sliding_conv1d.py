@@ -32,6 +32,12 @@ Fused epilogue: ``bias`` (Cout,) and ``activation`` (none/relu/gelu/silu)
 are applied inside the kernel on the final reduction visit — conv→bias→act
 is one kernel launch, not three HBM round-trips.
 
+Training residuals: with ``save_preact=True`` the kernels emit a SECOND
+output ``z = acc + bias`` (the post-bias, pre-activation value, cast to the
+output dtype) on the same final reduction visit. The custom-VJP layer in
+``repro.kernels.ops`` saves ``z`` so the backward pass can form
+``dz = dy · act'(z)`` without recomputing the convolution (DESIGN.md §6).
+
 All kernels: NLC layout, stride ≥ 1 (loaded-tile register slicing), f32
 accumulation, bf16/f32 in/out. HBM traffic is O(input + output) — the im2col
 column matrix is never materialized (compare ``repro.kernels.im2col_gemm``).
@@ -64,10 +70,15 @@ def apply_activation(x: jax.Array, activation: str) -> jax.Array:
     raise ValueError(f"unknown activation {activation!r}")
 
 
-def _epilogue(acc, bias_ref, o_ref, *, activation: str):
-    """bias-add + activation on the f32 accumulator, cast, store."""
+def _epilogue(acc, bias_ref, o_ref, z_ref=None, *, activation: str):
+    """bias-add + activation on the f32 accumulator, cast, store.
+
+    ``z_ref``, when present, receives the post-bias pre-activation value —
+    the residual the backward pass needs for ``dz = dy · act'(z)``."""
     if bias_ref is not None:
         acc = acc + bias_ref[0].astype(jnp.float32)
+    if z_ref is not None:
+        z_ref[0] = acc.astype(z_ref.dtype)
     o_ref[0] = apply_activation(acc, activation).astype(o_ref.dtype)
 
 
@@ -86,31 +97,29 @@ def _slide(x, k: int, tile: int, stride: int):
 # reduction dimension (Cin blocks × tap chunks) innermost. acc_ref is an f32
 # VMEM scratch persisting across the reduction sweep of one output block.
 
-def _unpack(rest, has_bias: bool):
-    if has_bias:
-        bias_ref, o_ref, acc_ref = rest
-    else:
-        (o_ref, acc_ref), bias_ref = rest, None
-    return bias_ref, o_ref, acc_ref
+def _unpack(rest, has_bias: bool, n_out: int, has_scratch: bool):
+    """Split the trailing kernel refs into (bias_ref, output refs, scratch)."""
+    i = 1 if has_bias else 0
+    bias_ref = rest[0] if has_bias else None
+    outs = rest[i : i + n_out]
+    acc_ref = rest[i + n_out] if has_scratch else None
+    return bias_ref, outs, acc_ref
 
 
-def _reduce_store(acc, rest, *, has_bias, n_red, red_axis, finish):
+def _reduce_store(acc, rest, *, has_bias, n_red, red_axis, finish, n_out=1):
     """Fold this visit's partial product into the output block.
 
     n_red == 1 (unblocked channels, single tap chunk — the common hot path):
     no scratch is allocated and the register accumulator goes straight
     through the epilogue. Otherwise the f32 scratch carries partials across
     output-block revisits: first visit stores, later visits add, last visit
-    runs ``finish(acc, bias_ref, o_ref)``.
+    runs ``finish(acc, bias_ref, *outs)``. ``n_out`` is 2 when the kernel
+    also emits the pre-activation residual (save_preact).
     """
+    bias_ref, outs, acc_ref = _unpack(rest, has_bias, n_out, n_red > 1)
     if n_red == 1:
-        if has_bias:
-            bias_ref, o_ref = rest
-        else:
-            (o_ref,), bias_ref = rest, None
-        finish(acc, bias_ref, o_ref)
+        finish(acc, bias_ref, *outs)
         return
-    bias_ref, o_ref, acc_ref = _unpack(rest, has_bias)
     r = pl.program_id(red_axis)
 
     @pl.when(r == 0)
@@ -123,11 +132,12 @@ def _reduce_store(acc, rest, *, has_bias, n_red, red_axis, finish):
 
     @pl.when(r == n_red - 1)
     def _done():
-        finish(acc_ref[...], bias_ref, o_ref)
+        finish(acc_ref[...], bias_ref, *outs)
 
 
 def _kernel_generic(
-    x_ref, w_ref, *rest, taps, tile_l, stride, n_red, activation, has_bias
+    x_ref, w_ref, *rest, taps, tile_l, stride, n_red, activation, has_bias,
+    n_out,
 ):
     """Unrolled shift-and-MXU-matmul over taps (generic / vector-slide)."""
     x = x_ref[0]  # ((TL-1)*s + K, cin_block) halo tile, VMEM-resident
@@ -139,13 +149,14 @@ def _kernel_generic(
             preferred_element_type=jnp.float32,
         )
     _reduce_store(
-        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=3,
+        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=3, n_out=n_out,
         finish=functools.partial(_epilogue, activation=activation),
     )
 
 
 def _kernel_custom(
-    x_ref, w_ref, *rest, taps, tile_l, stride, n_red, activation, has_bias
+    x_ref, w_ref, *rest, taps, tile_l, stride, n_red, activation, has_bias,
+    n_out,
 ):
     """Tap-stacked single-matmul kernel for K in {3, 5} (custom regime)."""
     x = x_ref[0]
@@ -154,13 +165,14 @@ def _kernel_custom(
     wf = w_ref[...].reshape(taps * w_ref.shape[1], w_ref.shape[2])
     acc = jnp.dot(stacked, wf, preferred_element_type=jnp.float32)
     _reduce_store(
-        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=3,
+        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=3, n_out=n_out,
         finish=functools.partial(_epilogue, activation=activation),
     )
 
 
 def _kernel_compound(
-    x_ref, w_ref, *rest, chunk, tile_l, stride, n_red, activation, has_bias
+    x_ref, w_ref, *rest, chunk, tile_l, stride, n_red, activation, has_bias,
+    n_out,
 ):
     """Tap-chunked accumulation (compound regime): the reduction dimension
     sweeps Cin blocks × tap chunks; chunk c covers taps [c·chunk, (c+1)·chunk).
@@ -174,27 +186,25 @@ def _kernel_compound(
             preferred_element_type=jnp.float32,
         )
     _reduce_store(
-        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=3,
+        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=3, n_out=n_out,
         finish=functools.partial(_epilogue, activation=activation),
     )
 
 
 def _kernel_depthwise(
-    x_ref, w_ref, *rest, taps, tile_l, stride, activation, has_bias
+    x_ref, w_ref, *rest, taps, tile_l, stride, activation, has_bias, n_out
 ):
     """Depthwise (VPU) kernel: per-tap shifted elementwise FMA — the most
     literal TPU transcription of the paper's vector-slide inner loop."""
-    if has_bias:
-        bias_ref, o_ref = rest
-    else:
-        (o_ref,), bias_ref = rest, None
+    bias_ref, outs, _ = _unpack(rest, has_bias, n_out, False)
+    o_ref = outs[0]
     x = x_ref[0]
     acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
     for k in range(taps):
         acc += _slide(x, k, tile_l, stride).astype(jnp.float32) * w_ref[
             k
         ].astype(jnp.float32)
-    _epilogue(acc, bias_ref, o_ref, activation=activation)
+    _epilogue(acc, bias_ref, *outs, activation=activation)
 
 
 # ---------------------------------------------------------------------------
@@ -219,7 +229,7 @@ def _pad_axis(a: jax.Array, axis: int, to: int) -> jax.Array:
     jax.jit,
     static_argnames=(
         "stride", "tile_l", "cin_block", "cout_block", "regime",
-        "activation", "interpret",
+        "activation", "interpret", "save_preact",
     ),
 )
 def conv1d_sliding_pallas(
@@ -234,6 +244,7 @@ def conv1d_sliding_pallas(
     regime: str | None = None,
     activation: str = "none",
     interpret: bool = False,
+    save_preact: bool = False,
 ) -> jax.Array:
     """VALID 1-D sliding conv. x: (B, L, Cin), w: (K, Cin, Cout).
 
@@ -242,6 +253,8 @@ def conv1d_sliding_pallas(
     ``bias`` (Cout,) and ``activation`` are fused into the kernel epilogue.
     ``cin_block``/``cout_block`` bound the per-instance VMEM working set;
     None means unblocked (full channel dimension).
+    ``save_preact=True`` returns ``(y, z)`` where ``z`` is the post-bias
+    pre-activation residual for the backward pass.
     """
     B, L, Cin = x.shape
     K, _, Cout = w.shape
@@ -279,6 +292,7 @@ def conv1d_sliding_pallas(
         bias2d = _pad_axis(bias.reshape(1, Cout), 1, n_co * ob)
 
     out_dtype = x.dtype
+    n_out = 2 if save_preact else 1
 
     if regime == "compound":
         n_chunks = pl.cdiv(K, TAP_CHUNK)
@@ -291,6 +305,7 @@ def conv1d_sliding_pallas(
         kernel = functools.partial(
             _kernel_compound, chunk=TAP_CHUNK, tile_l=tile_l, stride=stride,
             n_red=n_red, activation=activation, has_bias=has_bias,
+            n_out=n_out,
         )
         # reduction index r decomposes as (cin block, tap chunk): the tap
         # chunk is fastest so a cin block's taps complete consecutively.
@@ -315,6 +330,7 @@ def conv1d_sliding_pallas(
         kernel = functools.partial(
             body, taps=K, tile_l=tile_l, stride=stride,
             n_red=n_red, activation=activation, has_bias=has_bias,
+            n_out=n_out,
         )
         in_specs = [
             pl.BlockSpec(
@@ -330,26 +346,32 @@ def conv1d_sliding_pallas(
             pl.BlockSpec((1, ob), lambda b, i, co, r: (0, co))
         )
         args.append(bias2d)
+    out_spec = pl.BlockSpec((1, tile_l, ob), lambda b, i, co, r: (b, i, co))
+    out_sds = jax.ShapeDtypeStruct((B, padded_out, n_co * ob), out_dtype)
     out = pl.pallas_call(
         kernel,
         grid=(B, n_tiles, n_co, n_red),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec(
-            (1, tile_l, ob), lambda b, i, co, r: (b, i, co)
-        ),
-        out_shape=jax.ShapeDtypeStruct((B, padded_out, n_co * ob), out_dtype),
+        out_specs=[out_spec] * n_out,
+        out_shape=[out_sds] * n_out,
         # the single-visit fast path accumulates in registers, no scratch
         scratch_shapes=(
             [] if n_red == 1 else [pltpu.VMEM((tile_l, ob), jnp.float32)]
         ),
         interpret=interpret,
     )(*args)
-    return out[:, :out_len, :Cout]
+    if save_preact:
+        y, z = out
+        return y[:, :out_len, :Cout], z[:, :out_len, :Cout]
+    return out[0][:, :out_len, :Cout]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("stride", "tile_l", "c_block", "activation", "interpret"),
+    static_argnames=(
+        "stride", "tile_l", "c_block", "activation", "interpret",
+        "save_preact",
+    ),
 )
 def conv1d_depthwise_pallas(
     x: jax.Array,
@@ -361,12 +383,14 @@ def conv1d_depthwise_pallas(
     c_block: int | None = None,
     activation: str = "none",
     interpret: bool = False,
+    save_preact: bool = False,
 ) -> jax.Array:
     """VALID depthwise sliding conv. x: (B, L, C), w: (K, C).
 
     ``bias`` (C,) + ``activation`` fuse into the epilogue (the Mamba conv
     path is conv→bias→silu in one launch). ``c_block`` blocks the channel
     axis (channels are independent in depthwise — no reduction revisits).
+    ``save_preact=True`` additionally returns the pre-activation residual.
     """
     B, L, C = x.shape
     K, _ = w.shape
@@ -388,9 +412,10 @@ def conv1d_depthwise_pallas(
         x = _pad_axis(x, 2, n_c * cb)
         w = _pad_axis(w, 1, n_c * cb)
     has_bias = bias is not None
+    n_out = 2 if save_preact else 1
     kernel = functools.partial(
         _kernel_depthwise, taps=K, tile_l=tile_l, stride=stride,
-        activation=activation, has_bias=has_bias,
+        activation=activation, has_bias=has_bias, n_out=n_out,
     )
     in_specs = [
         pl.BlockSpec(
@@ -404,12 +429,17 @@ def conv1d_depthwise_pallas(
     if has_bias:
         in_specs.append(pl.BlockSpec((1, cb), lambda b, i, c: (0, c)))
         args.append(_pad_axis(bias.reshape(1, C), 1, n_c * cb))
+    out_spec = pl.BlockSpec((1, tile_l, cb), lambda b, i, c: (b, i, c))
+    out_sds = jax.ShapeDtypeStruct((B, padded_out, n_c * cb), x.dtype)
     out = pl.pallas_call(
         kernel,
         grid=(B, n_tiles, n_c),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, tile_l, cb), lambda b, i, c: (b, i, c)),
-        out_shape=jax.ShapeDtypeStruct((B, padded_out, n_c * cb), x.dtype),
+        out_specs=[out_spec] * n_out,
+        out_shape=[out_sds] * n_out,
         interpret=interpret,
     )(*args)
-    return out[:, :out_len, :C]
+    if save_preact:
+        y, z = out
+        return y[:, :out_len, :C], z[:, :out_len, :C]
+    return out[0][:, :out_len, :C]

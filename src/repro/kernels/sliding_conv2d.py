@@ -55,17 +55,20 @@ def _shifted(x, i, j, th, tw, sh, sw):
     return xs
 
 
-def _finish(acc, bias_ref, o_ref, *, th, tw, activation):
+def _finish(acc, bias_ref, o_ref, z_ref=None, *, th, tw, activation):
     cout = o_ref.shape[-1]
     if bias_ref is not None:
         acc = acc + bias_ref[0].astype(jnp.float32)
+    if z_ref is not None:  # pre-activation residual for the backward pass
+        z_ref[0] = acc.reshape(th, tw, cout).astype(z_ref.dtype)
     o_ref[0] = apply_activation(acc, activation).reshape(th, tw, cout).astype(
         o_ref.dtype
     )
 
 
 def _kernel_generic(
-    x_ref, w_ref, *rest, kh, kw, th, tw, sh, sw, n_red, activation, has_bias
+    x_ref, w_ref, *rest, kh, kw, th, tw, sh, sw, n_red, activation, has_bias,
+    n_out,
 ):
     x = x_ref[0]
     cout = w_ref.shape[-1]
@@ -75,13 +78,14 @@ def _kernel_generic(
             xs = _shifted(x, i, j, th, tw, sh, sw).reshape(th * tw, -1)
             acc += jnp.dot(xs, w_ref[i, j], preferred_element_type=jnp.float32)
     _reduce_store(
-        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=4,
+        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=4, n_out=n_out,
         finish=functools.partial(_finish, th=th, tw=tw, activation=activation),
     )
 
 
 def _kernel_custom(
-    x_ref, w_ref, *rest, kh, kw, th, tw, sh, sw, n_red, activation, has_bias
+    x_ref, w_ref, *rest, kh, kw, th, tw, sh, sw, n_red, activation, has_bias,
+    n_out,
 ):
     x = x_ref[0]
     cin = x.shape[-1]
@@ -94,13 +98,14 @@ def _kernel_custom(
     wf = w_ref[...].reshape(kh * kw * cin, cout)
     acc = jnp.dot(stacked, wf, preferred_element_type=jnp.float32)
     _reduce_store(
-        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=4,
+        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=4, n_out=n_out,
         finish=functools.partial(_finish, th=th, tw=tw, activation=activation),
     )
 
 
 def _kernel_compound(
-    x_ref, w_ref, *rest, rows, kw, th, tw, sh, sw, n_red, activation, has_bias
+    x_ref, w_ref, *rest, rows, kw, th, tw, sh, sw, n_red, activation, has_bias,
+    n_out,
 ):
     x = x_ref[0]
     cout = w_ref.shape[-1]
@@ -110,7 +115,7 @@ def _kernel_compound(
             xs = _shifted(x, i, j, th, tw, sh, sw).reshape(th * tw, -1)
             acc += jnp.dot(xs, w_ref[i, j], preferred_element_type=jnp.float32)
     _reduce_store(
-        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=4,
+        acc, rest, has_bias=has_bias, n_red=n_red, red_axis=4, n_out=n_out,
         finish=functools.partial(_finish, th=th, tw=tw, activation=activation),
     )
 
@@ -119,7 +124,7 @@ def _kernel_compound(
     jax.jit,
     static_argnames=(
         "stride", "tile_h", "tile_w", "cin_block", "cout_block", "regime",
-        "activation", "interpret",
+        "activation", "interpret", "save_preact",
     ),
 )
 def conv2d_sliding_pallas(
@@ -135,11 +140,13 @@ def conv2d_sliding_pallas(
     regime: str | None = None,
     activation: str = "none",
     interpret: bool = False,
+    save_preact: bool = False,
 ) -> jax.Array:
     """VALID 2-D sliding conv. x: (B,H,W,Cin), w: (kh,kw,Cin,Cout).
 
     ``bias`` (Cout,) + ``activation`` fuse into the epilogue; ``cin_block``/
     ``cout_block`` bound the VMEM working set (None = full channel axis).
+    ``save_preact=True`` returns ``(y, z)`` with the pre-activation residual.
     """
     B, H, W, Cin = x.shape
     kh, kw, _, Cout = w.shape
@@ -181,6 +188,7 @@ def conv2d_sliding_pallas(
     if has_bias:
         bias2d = _pad_axis(bias.reshape(1, Cout), 1, n_co * ob)
 
+    n_out = 2 if save_preact else 1
     if regime == "compound":
         n_chunks = pl.cdiv(kh, ROW_CHUNK)
         khp = n_chunks * ROW_CHUNK
@@ -192,6 +200,7 @@ def conv2d_sliding_pallas(
         kernel = functools.partial(
             _kernel_compound, rows=ROW_CHUNK, kw=kw, th=th, tw=tw, sh=sh,
             sw=sw, n_red=n_red, activation=activation, has_bias=has_bias,
+            n_out=n_out,
         )
         # reduction r = (cin block, filter-row chunk), chunk fastest
         in_specs = [
@@ -216,6 +225,7 @@ def conv2d_sliding_pallas(
         kernel = functools.partial(
             body, kh=kh, kw=kw, th=th, tw=tw, sh=sh, sw=sw,
             n_red=n_red, activation=activation, has_bias=has_bias,
+            n_out=n_out,
         )
         in_specs = [
             pl.BlockSpec(
@@ -233,20 +243,23 @@ def conv2d_sliding_pallas(
             pl.BlockSpec((1, ob), lambda b, i, j, co, r: (0, co))
         )
         args.append(bias2d)
+    out_spec = pl.BlockSpec(
+        (1, th, tw, ob), lambda b, i, j, co, r: (b, i, j, co)
+    )
+    out_sds = jax.ShapeDtypeStruct((B, nh * th, nw * tw, n_co * ob), x.dtype)
     out = pl.pallas_call(
         kernel,
         grid=(B, nh, nw, n_co, n_red),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec(
-            (1, th, tw, ob), lambda b, i, j, co, r: (b, i, j, co)
-        ),
-        out_shape=jax.ShapeDtypeStruct(
-            (B, nh * th, nw * tw, n_co * ob), x.dtype
-        ),
+        out_specs=[out_spec] * n_out,
+        out_shape=[out_sds] * n_out,
         # the single-visit fast path accumulates in registers, no scratch
         scratch_shapes=(
             [] if n_red == 1 else [pltpu.VMEM((th * tw, ob), jnp.float32)]
         ),
         interpret=interpret,
     )(*args)
-    return out[:, :oh, :ow, :Cout]
+    if save_preact:
+        y, z = out
+        return y[:, :oh, :ow, :Cout], z[:, :oh, :ow, :Cout]
+    return out[0][:, :oh, :ow, :Cout]

@@ -2,9 +2,21 @@
 
 The companion-paper (arXiv:2305.16513) kernel structure shared by pooling
 and 1-D convolution: phase 1 computes an in-VMEM prefix scan along the
-window axis; phase 2 emits the strided difference (sum/avg) or uses the
-block pre/suffix decomposition (max). Work is O(n) per tile independent of
-window size — the property the paper exploits for large-window pooling.
+window axis; phase 2 emits the strided difference (sum/avg) or combines the
+block prefix/suffix scans (max — the van Herk / Gil-Werman decomposition).
+Work is O(n) per tile independent of window size — the property the paper
+exploits for large-window pooling.
+
+Backward kernels (DESIGN.md §6):
+
+  * sum/avg — the gradient is itself a sliding sum: every input row j is
+    covered by the windows [j-w+1, j], so ``dx = sum-pool(pad(dy, w-1))``
+    and the forward two-phase kernel is REUSED on the padded gradient
+    (scaled by 1/w for avg).
+  * max — ``dx[j] = Σ_k dy[j-k] · [x[j] == y[j-k]]``: a shift-and-select
+    over the w windows covering j, using the saved forward output y as the
+    argmax witness (``_max_pool_bwd_kernel``). Zero-padded dy rows gate out
+    out-of-range windows.
 """
 from __future__ import annotations
 
@@ -28,11 +40,32 @@ def _sum_pool_kernel(x_ref, o_ref, *, window, tile_l):
 
 
 def _max_pool_kernel(x_ref, o_ref, *, window, tile_l):
+    """Two-phase max: block prefix/suffix cummax (van Herk / Gil-Werman).
+
+    The halo tile is split into window-aligned blocks; phase 1 computes the
+    within-block prefix max P and suffix max S (log-depth scans), phase 2
+    emits ``y[j] = max(S[j], P[j+w-1])`` — O(n) comparisons per tile
+    independent of the window size (vs the O(n·w) shift-and-max loop).
+    """
     x = x_ref[0]
-    acc = x[:tile_l]
-    for k in range(1, window):  # shift-and-max (windows here are small)
-        acc = jnp.maximum(acc, x[k : k + tile_l])
-    o_ref[0] = acc
+    if window == 1:
+        o_ref[0] = x[:tile_l]
+        return
+    halo = tile_l + window - 1
+    nb = pl.cdiv(halo, window)
+    pad = nb * window - halo
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.full((pad,) + x.shape[1:], -jnp.inf, x.dtype)], axis=0
+        )
+    blocks = x.reshape(nb, window, -1)
+    pre = jax.lax.cummax(blocks, axis=1).reshape(nb * window, -1)
+    suf = jax.lax.cummax(blocks[:, ::-1], axis=1)[:, ::-1].reshape(
+        nb * window, -1
+    )
+    o_ref[0] = jnp.maximum(
+        suf[:tile_l], pre[window - 1 : window - 1 + tile_l]
+    ).reshape(o_ref.shape[1:])
 
 
 @functools.partial(
@@ -79,3 +112,124 @@ def sliding_pool_pallas(
     if op == "avg":
         out = (out.astype(jnp.float32) / window).astype(x.dtype)
     return out
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def sum_pool_bwd(dy: jax.Array, *, window: int, interpret: bool = False):
+    """dx of sum pooling: a sliding sum of dy over the w windows covering
+    each input row — the forward two-phase kernel on the padded gradient."""
+    dyp = jnp.pad(dy, ((0, 0), (window - 1, window - 1), (0, 0)))
+    return sliding_pool_pallas(dyp, window=window, op="sum", interpret=interpret)
+
+
+def _max_pool_count_kernel(x_ref, y_ref, cnt_ref, *, window, tile_l):
+    """cnt[i] = #{m ∈ [0, w) : x[i+m] == y[i]} — ties per window, used to
+    split the window's gradient so total mass stays dy (a valid
+    subgradient; crediting every tie in full would inflate it ×ties)."""
+    x = x_ref[0]  # (tile_l + w - 1, C) input halo
+    y = y_ref[0]  # (tile_l, C) forward maxima
+    cnt = jnp.zeros(y.shape, jnp.float32)
+    for m in range(window):
+        cnt += (x[m : m + tile_l] == y).astype(jnp.float32)
+    cnt_ref[0] = cnt
+
+
+def _max_pool_bwd_kernel(x_ref, y_ref, dy_ref, o_ref, *, window, tile_l):
+    """dx[j] = Σ_k dy[j-k] · [x[j] == y[j-k]], k ∈ [0, w): shift-and-select
+    against the saved forward max y (zero-padded dy gates invalid windows;
+    dy arrives pre-divided by the window tie count)."""
+    x = x_ref[0]
+    y = y_ref[0]   # (tile_l + w - 1, C) halo of the zero-padded forward out
+    dy = dy_ref[0]
+    acc = jnp.zeros(x.shape, jnp.float32)
+    for k in range(window):
+        off = window - 1 - k
+        ys = y[off : off + tile_l]
+        dys = dy[off : off + tile_l].astype(jnp.float32)
+        acc += jnp.where(x == ys, dys, 0.0)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "tile_l", "interpret")
+)
+def max_pool_bwd_pallas(
+    x: jax.Array,
+    y: jax.Array,
+    dy: jax.Array,
+    *,
+    window: int,
+    tile_l: int = DEFAULT_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """dx of max pooling. x: (B, L, C) forward input, y/dy: (B, out_len, C)
+    forward output and upstream gradient. Each window's gradient is split
+    evenly across its tied maxima (total mass per window == dy)."""
+    B, L, C = x.shape
+    out_len = y.shape[1]
+    tile_l = min(tile_l, L)
+    n_tiles = pl.cdiv(L, tile_l)
+    padded = n_tiles * tile_l
+    if padded > L:
+        x = jnp.pad(x, ((0, 0), (0, padded - L), (0, 0)))
+
+    # pass 1: per-window tie count (≥ 1: the max always occurs), then split
+    to = min(tile_l, out_len)
+    nt_o = pl.cdiv(out_len, to)
+    pad_o = nt_o * to - out_len
+    need_x = nt_o * to + window - 1  # last tile's halo end
+    xp = x
+    if need_x > padded:
+        xp = jnp.pad(x, ((0, 0), (0, need_x - padded), (0, 0)))
+    yp = jnp.pad(y, ((0, 0), (0, pad_o), (0, 0))) if pad_o else y
+    cnt = pl.pallas_call(
+        functools.partial(_max_pool_count_kernel, window=window, tile_l=to),
+        grid=(B, nt_o),
+        in_specs=[
+            pl.BlockSpec(
+                (1, to + window - 1, C),
+                lambda b, i: (b, i * to, 0),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec((1, to, C), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, to, C), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nt_o * to, C), jnp.float32),
+        interpret=interpret,
+    )(xp, yp)[:, :out_len]
+    dy = (dy.astype(jnp.float32) / jnp.maximum(cnt, 1.0)).astype(dy.dtype)
+
+    # pass 2: scatter each window's (split) gradient onto its argmaxes.
+    # front pad (w-1) aligns dy[j-k] reads; zero dy rows nullify windows that
+    # fall outside [0, out_len) regardless of the y pad value.
+    rear = padded - out_len
+    y = jnp.pad(y, ((0, 0), (window - 1, rear), (0, 0)))
+    dy = jnp.pad(dy, ((0, 0), (window - 1, rear), (0, 0)))
+    kernel = functools.partial(
+        _max_pool_bwd_kernel, window=window, tile_l=tile_l
+    )
+    halo = tile_l + window - 1
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, tile_l, C), lambda b, i: (b, i, 0)),
+            pl.BlockSpec(
+                (1, halo, C),
+                lambda b, i: (b, i * tile_l, 0),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec(
+                (1, halo, C),
+                lambda b, i: (b, i * tile_l, 0),
+                indexing_mode=pl.unblocked,
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, tile_l, C), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, padded, C), jnp.float32),
+        interpret=interpret,
+    )(x, y, dy)
+    return out[:, :L].astype(x.dtype)

@@ -33,6 +33,26 @@ def init_cache_concrete(model, B, S):
     )
 
 
+def pad_cache_to_defs(cache, full, defs):
+    """Pad each prefill cache leaf up to the decode cache shape along its
+    **sequence axis**, identified by the ``"kv_seq"`` name in the leaf's
+    ``ParamDef.axes`` — not by guessing which axis happens to equal the
+    prompt length (a shape-coincidence heuristic misfires whenever another
+    axis equals it). Leaves without a ``kv_seq`` axis (recurrent conv/ssm
+    states) pass through unchanged."""
+
+    def pad(c, d, df):
+        if "kv_seq" in df.axes:
+            ax = df.axes.index("kv_seq")
+            if c.shape[ax] != d.shape[ax]:
+                pads = [(0, 0)] * c.ndim
+                pads[ax] = (0, d.shape[ax] - c.shape[ax])
+                c = jnp.pad(c, pads)
+        return c.astype(d.dtype)
+
+    return jax.tree.map(pad, cache, full, defs)
+
+
 def generate(model, params, prompts, *, gen_len: int, cache_len: int,
              temperature: float = 0.0, seed: int = 0):
     """prompts: (B, P) int32 -> (B, gen_len) int32."""
@@ -48,16 +68,10 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
     logits, cache = prefill(params, batch)
 
     # prefill emitted per-layer KV of length P (or recurrent states); decode
-    # continues into a cache padded to cache_len for attention families
-    def pad_cache(c, d):
-        if c.ndim >= 3 and c.shape[2] == P and d.shape[2] != P:
-            pad = [(0, 0)] * c.ndim
-            pad[2] = (0, d.shape[2] - P)
-            return jnp.pad(c, pad)
-        return c
-
+    # continues into a cache padded to cache_len along each leaf's kv_seq
+    # axis (taken from the cache defs, not inferred from shapes)
     full = init_cache_concrete(model, B, cache_len)
-    cache = jax.tree.map(lambda c, d: pad_cache(c, d).astype(d.dtype), cache, full)
+    cache = pad_cache_to_defs(cache, full, model.cache_defs(B, cache_len))
 
     key = jax.random.key(seed)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]

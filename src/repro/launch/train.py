@@ -29,8 +29,22 @@ from repro.models import build_model
 from repro.optim import OptConfig, init_opt_state
 
 
+# Per-step modality streams: tags keep the frames/patches streams disjoint
+# from each other and from the token pipeline's SeedSequence([seed, row]).
+_TAG_FRAMES = 1_000_003
+_TAG_PATCHES = 1_000_033
+
+
+def step_stream(seed: int, step: int, tag: int) -> np.random.Generator:
+    """RNG that is a pure function of (seed, step) — resumed runs replay the
+    exact modality inputs an uninterrupted run saw at every step (a
+    process-lifetime generator diverges after restart: the resumed process
+    draws its step-N sample from a fresh stream position)."""
+    return np.random.default_rng(np.random.SeedSequence([seed, tag, step]))
+
+
 def build_batch_extras(cfg, B, rng):
-    """Synthetic modality inputs for vlm/audio archs."""
+    """Synthetic modality inputs for vlm archs (one draw per step)."""
     extras = {}
     if cfg.family == "vlm":
         extras["patches"] = jnp.asarray(
@@ -44,6 +58,8 @@ def train_loop(args) -> dict:
     if args.smoke:
         cfg = smoke_config(cfg)
     cfg = cfg.replace(grad_accum=args.grad_accum or cfg.grad_accum)
+    if getattr(args, "conv_backend", None):
+        cfg = cfg.replace(conv_backend=args.conv_backend)
     rt = Runtime()  # single host; multi-device handled by the dry-run path
     model = build_model(cfg, rt)
     opt_cfg = OptConfig(
@@ -60,8 +76,14 @@ def train_loop(args) -> dict:
         vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
         seed=args.seed,
     )
-    rng = np.random.default_rng(args.seed)
-    extras = build_batch_extras(cfg, args.batch, rng)
+    # audio frontend: "stub" feeds precomputed (B, S, d_model) frame
+    # embeddings; "mels" feeds (B, S, 80) mel frames so the sliding-conv
+    # frontend (and its backward kernels under sliding_pallas) trains.
+    frame_dim = cfg.d_model
+    if cfg.family == "audio" and getattr(args, "audio_frontend", "stub") == "mels":
+        from repro.models.whisper import N_MELS
+
+        frame_dim = N_MELS
 
     start = latest_step(ckpt.dir)
     if start is not None and not args.no_resume:
@@ -91,10 +113,15 @@ def train_loop(args) -> dict:
         batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
         if cfg.family == "audio":
             half = args.seq  # encoder frames mirror the token length
+            srng = step_stream(args.seed, step, _TAG_FRAMES)
             batch["frames"] = jnp.asarray(
-                rng.normal(size=(args.batch, half, cfg.d_model)).astype(np.float32)
+                srng.normal(size=(args.batch, half, frame_dim)).astype(np.float32)
             )
-        batch.update(extras)
+        batch.update(
+            build_batch_extras(
+                cfg, args.batch, step_stream(args.seed, step, _TAG_PATCHES)
+            )
+        )
         t0 = time.time()
         state, metrics = step_fn(state, batch)
         loss = float(metrics["loss"])
@@ -130,6 +157,14 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--conv-backend", default=None,
+                    choices=["sliding", "sliding_pallas", "im2col_gemm", "xla"],
+                    help="override cfg.conv_backend (sliding_pallas trains "
+                         "through the Pallas custom-VJP kernels)")
+    ap.add_argument("--audio-frontend", default="stub",
+                    choices=["stub", "mels"],
+                    help="audio archs: stub frame embeddings, or mel frames "
+                         "through the sliding-conv frontend")
     ap.add_argument("--no-resume", action="store_true")
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a crash at this step (FT testing)")

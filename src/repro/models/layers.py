@@ -54,6 +54,9 @@ def act_fn(name: str):
 # run inside the conv kernel's epilogue — one launch, no extra HBM round
 # trips. Pure-JAX / XLA backends apply them unfused with identical
 # semantics (activations are the kernel-epilogue set: none/relu/gelu/silu).
+# Every backend is differentiable: the Pallas ops carry a custom VJP with
+# sliding-window backward kernels (DESIGN.md §6), so whisper's frontend,
+# mamba's conv and llava's patch_embed train unchanged under any backend.
 
 def conv1d_bias_act(
     x: Array,

@@ -96,3 +96,27 @@ def test_cache_env_override_isolates(rng, tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "b.json"))
     assert autotune.lookup("k1") is None  # path change invalidates memory
     autotune.invalidate()
+
+
+def test_flush_uses_per_process_temp(tmp_path, monkeypatch):
+    """Writers use a pid-unique temp name (a shared `.tmp` raced under
+    concurrent tuning) and the atomic rename leaves no temp files behind."""
+    import os
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "cache.json"))
+    autotune.invalidate()
+    autotune.record("k", {"tile_l": 64})
+    assert json.loads((tmp_path / "cache.json").read_text())["k"]["tile_l"] == 64
+    leftovers = [p for p in os.listdir(tmp_path) if ".tmp" in p]
+    assert not leftovers, leftovers
+    # the temp path this process would use embeds its pid (uniqueness
+    # across concurrently-flushing tuner processes)
+    autotune.invalidate()
+
+
+def test_grad_key_distinct_from_forward():
+    k_fwd = autotune.conv1d_key(1, 64, 8, 8, 3, 1, "float32")
+    k_bwd = autotune.conv1d_key(1, 64, 8, 8, 3, 1, "float32", grad=True)
+    assert k_bwd != k_fwd and k_bwd.endswith("|grad")
+    k2 = autotune.conv2d_key(1, 8, 8, 4, 4, 3, 3, 1, 1, "float32", grad=True)
+    assert k2.endswith("|grad")

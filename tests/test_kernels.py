@@ -8,6 +8,7 @@ from repro.kernels import ops, ref
 from repro.kernels.im2col_gemm import (
     conv1d_im2col_fused_pallas,
     conv1d_im2col_hbm,
+    conv2d_im2col_fused_pallas,
     conv2d_im2col_hbm,
     matmul_pallas,
 )
@@ -301,6 +302,20 @@ def test_im2col_hbm_2d(rng):
     )
 
 
+@pytest.mark.parametrize(
+    "kh,kw,stride", [(3, 3, (1, 1)), (5, 5, (2, 2)), (7, 5, (2, 3))]
+)
+def test_im2col_fused_2d(rng, kh, kw, stride):
+    """The fused-VMEM 2-D im2col baseline (column tile in scratch, one GEMM)
+    — previously ops silently substituted the HBM-bloat variant for it."""
+    x = jnp.asarray(rng.normal(size=(2, 33, 29, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(kh, kw, 4, 8)).astype(np.float32))
+    got = conv2d_im2col_fused_pallas(
+        x, w, stride=stride, tile_h=8, tile_w=8, interpret=True
+    )
+    np.testing.assert_allclose(got, ref.conv2d_ref(x, w, stride=stride), **TOL)
+
+
 # -- pooling -------------------------------------------------------------------
 
 @pytest.mark.parametrize("op", ["sum", "avg", "max"])
@@ -310,6 +325,17 @@ def test_pool_kernel(rng, op, window):
     got = ops.pool1d(x, window=window, op=op, interpret=True)
     np.testing.assert_allclose(
         got, ref.pool_ref(x, window=window, op=op), rtol=2e-4, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("window", [100, 256])
+def test_max_pool_large_window(rng, window):
+    """Windows larger than the output tile: the two-phase block
+    prefix/suffix decomposition (incl. its -inf pad branch) stays exact."""
+    x = jnp.asarray(rng.normal(size=(1, 300, 8)).astype(np.float32))
+    got = ops.pool1d(x, window=window, op="max", interpret=True)
+    np.testing.assert_allclose(
+        got, ref.pool_ref(x, window=window, op="max"), rtol=2e-4, atol=2e-4
     )
 
 
@@ -355,7 +381,9 @@ def test_ops_conv2d_epilogue(rng):
     np.testing.assert_allclose(got, want, **TOL)
 
 
-@pytest.mark.parametrize("backend", ["sliding", "im2col_hbm", "xla"])
+@pytest.mark.parametrize(
+    "backend", ["sliding", "im2col_gemm", "im2col_hbm", "xla"]
+)
 def test_ops_conv2d_dispatch(rng, backend):
     x = jnp.asarray(rng.normal(size=(1, 32, 32, 8)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(5, 5, 8, 16)).astype(np.float32))

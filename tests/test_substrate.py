@@ -112,6 +112,9 @@ def test_checkpoint_atomicity(tmp_path, rng):
     assert latest_step(tmp_path) == 1
 
 
+REPO_ROOT = str(Path(__file__).resolve().parents[1])
+
+
 def test_train_resume_determinism(tmp_path):
     """Crash + resume reproduces the uninterrupted run exactly (same data,
     same state) — the checkpoint/restart fault-tolerance contract."""
@@ -125,14 +128,14 @@ def test_train_resume_determinism(tmp_path):
     r1 = subprocess.run(
         base + ["--steps", "8", "--run-dir", str(tmp_path / "ref"),
                 "--no-resume"],
-        capture_output=True, text=True, env=env, cwd="/root/repo",
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT,
     )
     assert r1.returncode == 0, r1.stderr[-2000:]
     # crash at step 5, then resume
     r2 = subprocess.run(
         base + ["--steps", "8", "--run-dir", str(tmp_path / "ft"),
                 "--fail-at", "5", "--max-restarts", "1"],
-        capture_output=True, text=True, env=env, cwd="/root/repo",
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT,
     )
     assert r2.returncode == 0, r2.stderr[-2000:]
     assert "restarting" in r2.stdout
@@ -193,3 +196,57 @@ def test_heartbeats(tmp_path):
     assert stale_hosts(tmp_path, timeout_s=60) == []
     time.sleep(0.05)
     assert stale_hosts(tmp_path, timeout_s=0.01) == [0, 1]
+
+
+def test_train_resume_determinism_audio(tmp_path):
+    """Audio-family resume: encoder `frames` come from the (seed, step)
+    stream, so crash + resume reproduces the uninterrupted run bit-for-bit
+    (a process-lifetime rng diverged after restart)."""
+    import subprocess, sys, os
+
+    env = dict(os.environ, PYTHONPATH="src")
+    base = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "whisper-medium", "--smoke", "--batch", "2", "--seq", "64",
+            "--log-every", "100", "--ckpt-every", "2", "--seed", "3"]
+    r1 = subprocess.run(
+        base + ["--steps", "6", "--run-dir", str(tmp_path / "ref"),
+                "--no-resume"],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT,
+    )
+    assert r1.returncode == 0, r1.stderr[-2000:]
+    r2 = subprocess.run(
+        base + ["--steps", "6", "--run-dir", str(tmp_path / "ft"),
+                "--fail-at", "4", "--max-restarts", "1"],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT,
+    )
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "restarting" in r2.stdout
+    get = lambda r: float(
+        [l for l in r.stdout.splitlines() if "final loss" in l][0]
+        .split("final loss")[1]
+    )
+    l1, l2 = get(r1), get(r2)
+    assert abs(l1 - l2) < 1e-6, (l1, l2)
+
+
+def test_serve_pad_cache_uses_def_axes():
+    """pad_cache keys on the cache-def `kv_seq` axis name — a leaf whose
+    sequence axis is NOT at position 2 (where a shape-equality heuristic
+    looked) still gets padded correctly."""
+    from repro.distributed.sharding import ParamDef
+    from repro.launch.serve import pad_cache_to_defs
+
+    P = 4
+    defs = {
+        # seq axis at position 1; axis 2 (=P here) must NOT be padded
+        "k": ParamDef((2, P, P), ("batch", "kv_seq", None), init="zeros"),
+        # recurrent state: no kv_seq axis → untouched
+        "s": ParamDef((2, 3), ("batch", None), init="zeros"),
+    }
+    cache = {"k": jnp.ones((2, P, P)), "s": jnp.full((2, 3), 2.0)}
+    full = {"k": jnp.zeros((2, 16, P)), "s": jnp.zeros((2, 3))}
+    out = pad_cache_to_defs(cache, full, defs)
+    assert out["k"].shape == (2, 16, P)
+    assert bool((out["k"][:, :P] == 1).all())
+    assert bool((out["k"][:, P:] == 0).all())
+    assert bool((out["s"] == 2.0).all())
