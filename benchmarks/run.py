@@ -1,6 +1,7 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--autotune] [--grad]
+        [--quant]
 
 Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_conv.json``
 (name → us_per_call) alongside it so the perf trajectory is machine-
@@ -12,6 +13,9 @@ trackable across PRs:
   autotune/*  (--autotune) best-vs-default tile/block search per shape
   grad/*      (--grad) fwd+bwd (training) timings for the fig1/fig2/conv1d
               shapes — sliding vs im2col through ``jax.value_and_grad``
+  quant/*     (--quant) int8 PTQ inference (repro.quant) vs bf16 vs f32
+              sliding, and vs int8 im2col — the paper's conclusion claim
+              that compression methods compose with the technique
 
 ``--autotune`` runs the shape-keyed search (``repro.kernels.autotune``) over
 every fig1/fig2/conv1d conv shape, persists winners in the JSON tuning cache
@@ -21,6 +25,14 @@ consulted by ``repro.kernels.ops``, and reports best-vs-default speedup.
 vs im2col backends — the wall-clock-meaningful comparison on CPU; the
 Pallas custom-VJP kernels share the same algorithmic structure and are
 validated against these in interpret mode by ``tests/test_grads.py``).
+
+``--quant`` times the compiled pure-JAX quantized evaluations
+(``repro.quant.qconv`` fast path: int8 operands dequantized at the matmul
+inputs — XLA CPU has no native int8 GEMM, so int8 buys 4× smaller operand
+traffic and the fast f32 GEMM instead of bf16's convert-heavy path;
+activation quantization is ON the clock). The Pallas int8 kernels carry
+the true int8×int8→int32 contract and are validated in interpret mode by
+``tests/test_quant.py``.
 """
 from __future__ import annotations
 
@@ -138,10 +150,108 @@ def grad_rows(quick: bool) -> list[str]:
     return rows
 
 
+def _race(fns: dict, iters: int = 8) -> dict:
+    """Interleaved min-of-N seconds per candidate. The quant rows are
+    precision *comparisons*, so candidates are timed round-robin (back-to-
+    back sequential medians inherit multi-second machine-load drift and
+    have produced 3× swings on this box) and min is taken — the standard
+    noise-robust estimator when the quantity of interest is a ratio."""
+    import time as _time
+
+    import jax
+
+    for fn, args in fns.values():
+        jax.block_until_ready(fn(*args))
+        jax.block_until_ready(fn(*args))
+    best = {name: float("inf") for name in fns}
+    for _ in range(iters):
+        for name, (fn, args) in fns.items():
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best[name] = min(best[name], _time.perf_counter() - t0)
+    return best
+
+
+def quant_rows(quick: bool) -> list[str]:
+    """int8 PTQ rows (``quant/*``): int8 vs bf16 vs f32 sliding + int8
+    im2col, on the fig1 2-D sweep and the conv1d table sweep. Activation
+    quantization is ON the int8 clock (weights are pre-quantized, as in
+    serving)."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks import fig1_speedup, table_conv1d
+    from benchmarks.common import row
+    from repro import quant
+    from repro.core import conv1d_sliding, conv2d_sliding
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    def emit(name, t, t_col=None):
+        rows.append(row(
+            f"{name}_int8_sliding", t["int8"],
+            f"speedup_vs_bf16={t['bf16'] / t['int8']:.2f}x "
+            f"speedup_vs_f32={t['f32'] / t['int8']:.2f}x",
+        ))
+        rows.append(row(f"{name}_bf16_sliding", t["bf16"], ""))
+        rows.append(row(f"{name}_f32_sliding", t["f32"], ""))
+        if t_col is not None:
+            rows.append(row(
+                f"{name}_int8_im2col", t_col,
+                f"sliding_vs_im2col={t_col / t['int8']:.2f}x",
+            ))
+
+    # 2-D: the fig1 128² sweep (k=5 is the acceptance shape)
+    h, cin = fig1_speedup.H, fig1_speedup.CIN
+    x = jnp.asarray(rng.normal(size=(1, h, h, cin)).astype(np.float32))
+    sx = quant.act_scale(x)
+    for k in [3, 5, 9] if quick else fig1_speedup.FILTER_SIZES:
+        w = jnp.asarray(rng.normal(size=(k, k, cin, cin)).astype(np.float32))
+        qw = quant.quantize_weight(w, sx)
+        i8 = jax.jit(functools.partial(
+            quant.conv2d_q, qw=qw, mode="w8a8", accumulate="fast"
+        ))
+        i8_col = jax.jit(functools.partial(
+            quant.conv2d_q_im2col, qw=qw, x_scale=sx, accumulate="fast"
+        ))
+        bf = jax.jit(functools.partial(conv2d_sliding, padding="VALID"))
+        t = _race({
+            "int8": (i8, (x,)),
+            "col": (i8_col, (x,)),
+            "bf16": (bf, (x.astype(jnp.bfloat16), w.astype(jnp.bfloat16))),
+            "f32": (bf, (x, w)),
+        })
+        emit(f"quant/fig1_conv2d_k{k}", t, t["col"])
+    # 1-D: the conv1d table sweep
+    L = 4096 if quick else table_conv1d.L
+    C = table_conv1d.C
+    x = jnp.asarray(rng.normal(size=(1, L, C)).astype(np.float32))
+    sx = quant.act_scale(x)
+    for k in [3, 33] if quick else table_conv1d.WIDTHS:
+        w = jnp.asarray(rng.normal(size=(k, C, C)).astype(np.float32))
+        qw = quant.quantize_weight(w, sx)
+        i8 = jax.jit(functools.partial(
+            quant.conv1d_q, qw=qw, mode="w8a8", accumulate="fast"
+        ))
+        bf = jax.jit(functools.partial(conv1d_sliding, padding="VALID"))
+        t = _race({
+            "int8": (i8, (x,)),
+            "bf16": (bf, (x.astype(jnp.bfloat16), w.astype(jnp.bfloat16))),
+            "f32": (bf, (x, w)),
+        })
+        emit(f"quant/conv1d_L{L}_k{k}", t)
+    return rows
+
+
 def main() -> None:
     quick = "--quick" in sys.argv
     tune = "--autotune" in sys.argv
     grad = "--grad" in sys.argv
+    qnt = "--quant" in sys.argv
     from benchmarks import fig1_speedup, fig2_throughput, roofline_report, table_conv1d
 
     rows: list[str] = []
@@ -160,6 +270,8 @@ def main() -> None:
         rows += autotune_rows(quick)
     if grad:
         rows += grad_rows(quick)
+    if qnt:
+        rows += quant_rows(quick)
     print("name,us_per_call,derived")
     for r in rows:
         print(r)

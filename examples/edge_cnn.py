@@ -9,18 +9,23 @@ convolution backend selectable exactly as the paper compares them:
     PYTHONPATH=src python examples/edge_cnn.py --backend xla
 
 Both backends train to the same accuracy (same math); wall-clock differs.
+
+``--quant int8`` exercises the post-training-quantization subsystem
+(``repro.quant``, DESIGN.md §7) end-to-end on the trained net: calibrate
+activation scales on a sample batch, quantize the conv weights to int8
+(per-output-channel absmax), and evaluate the w8a8 forward — the paper's
+"compression methods compose with the Sliding Window technique" claim on
+its own target workload. Quantized accuracy must stay within 2% of f32.
 """
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
+import jax
+import jax.numpy as jnp
+import numpy as np
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro import core  # noqa: E402
+from repro import core, quant
+from repro.models import layers as L
 
 
 def init_params(key, backend):
@@ -29,17 +34,28 @@ def init_params(key, backend):
     return {
         "c1": s(k1, (5, 5, 1, 16)),     # the paper's custom k=5 regime
         "c2": s(k2, (3, 3, 16, 32)),    # custom k=3 regime
-        "head": s(k3, (32, 10)),
+        "head": s(k3, (7 * 7 * 32, 10)),
         "b": jnp.zeros((10,)),
     }
 
 
-def forward(p, x, backend):
-    h = jax.nn.relu(core.conv2d(x, p["c1"], padding="SAME", backend=backend))
+def forward(p, x, backend, precision="fp"):
+    # conv→relu through the shared conv2d_bias_act entry point: the f32
+    # path is the same math as before; with precision="w8a8" and
+    # QuantizedWeight params it runs the int8 PTQ path, and the `site`
+    # names key the calibration spec.
+    h = L.conv2d_bias_act(x, p["c1"], None, activation="relu",
+                          padding="SAME", backend=backend,
+                          precision=precision, site="edge/c1")
     h = core.max_pool2d(h, (2, 2))
-    h = jax.nn.relu(core.conv2d(h, p["c2"], padding="SAME", backend=backend))
+    h = L.conv2d_bias_act(h, p["c2"], None, activation="relu",
+                          padding="SAME", backend=backend,
+                          precision=precision, site="edge/c2")
     h = core.max_pool2d(h, (2, 2))
-    h = h.mean(axis=(1, 2))  # global average pool
+    # flatten, NOT global-average-pool: conv+GAP is translation-invariant,
+    # which makes the which-quadrant task unlearnable by construction (the
+    # seed's GAP head plateaued ~45%) — position must survive to the head
+    h = h.reshape(h.shape[0], -1)
     return h @ p["head"] + p["b"]
 
 
@@ -54,11 +70,26 @@ def synthetic_task(rng, n, res=28):
     return jnp.asarray(x), jnp.asarray(y % 10)
 
 
+def quantize_net(params, calib_x, backend):
+    """PTQ of the two convs: eager calibration forward → per-site
+    activation scales → int8 weights with the scales folded in."""
+    calib = quant.Calibration()
+    with quant.collecting(calib):
+        forward(params, calib_x, backend)  # eager — observers see values
+    spec = calib.spec()
+    qp = dict(params)
+    for key, site in (("c1", "edge/c1"), ("c2", "edge/c2")):
+        qp[key] = quant.quantize_weight(params[key], spec[site]["x_scale"])
+    return qp
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="sliding",
                     choices=["sliding", "im2col_gemm", "xla"])
     ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--quant", choices=["int8"], default=None,
+                    help="evaluate an int8 (w8a8) PTQ of the trained net")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -88,6 +119,17 @@ def main():
     print(f"[cnn/{args.backend}] test acc {acc:.2%} "
           f"({time.time() - t0:.1f}s for {args.steps} steps)")
     assert acc > 0.9, "conv net should solve the quadrant task"
+
+    if args.quant:
+        calib_x, _ = synthetic_task(rng, 64)
+        qp = quantize_net(params, calib_x, args.backend)
+        acc_q = float(
+            (forward(qp, xt, args.backend, precision="w8a8").argmax(-1) == yt)
+            .mean()
+        )
+        print(f"[cnn/{args.backend}] int8 (w8a8) test acc {acc_q:.2%} "
+              f"(f32 {acc:.2%})")
+        assert abs(acc - acc_q) <= 0.02, "int8 accuracy drifted >2% from f32"
 
 
 if __name__ == "__main__":

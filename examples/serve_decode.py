@@ -5,19 +5,16 @@ KV cache (the serve_step the decode_* dry-run shapes lower).
     PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-1.6b   # O(1) state
 """
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
+import jax
+import jax.numpy as jnp
+import numpy as np
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro.configs import get_config, smoke_config  # noqa: E402
-from repro.distributed.sharding import Runtime  # noqa: E402
-from repro.launch.serve import generate  # noqa: E402
-from repro.models import build_model  # noqa: E402
+from repro.configs import get_config, smoke_config
+from repro.distributed.sharding import Runtime
+from repro.launch.serve import generate
+from repro.models import build_model
 
 
 def main():
@@ -36,17 +33,18 @@ def main():
         rng.integers(2, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
     )
     t0 = time.time()
-    toks = generate(
+    toks, done = generate(
         model, params, prompts, gen_len=args.gen,
         cache_len=args.prompt_len + args.gen,
     )
     dt = time.time() - t0
     print(f"[serve] {args.arch}: {toks.shape} tokens in {dt:.1f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s, incl. compile)")
+          f"({args.batch * args.gen / dt:.1f} tok/s, incl. compile); "
+          f"{int(done.sum())}/{args.batch} slots hit eos={cfg.eos_id}")
     print("[serve] greedy sample:", np.asarray(toks[0][:12]))
     # decode determinism: same prompt -> same continuation
-    toks2 = generate(model, params, prompts, gen_len=args.gen,
-                     cache_len=args.prompt_len + args.gen)
+    toks2, _ = generate(model, params, prompts, gen_len=args.gen,
+                        cache_len=args.prompt_len + args.gen)
     assert (np.asarray(toks) == np.asarray(toks2)).all()
     print("[serve] determinism check passed")
 

@@ -9,12 +9,9 @@ assignment names (same code path; budget the wall-clock accordingly on CPU).
     PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 200
 """
 import argparse
-import sys
 
-sys.path.insert(0, "src")
-
-from repro.configs import get_config  # noqa: E402
-from repro.launch.train import train_loop  # noqa: E402
+from repro.configs import get_config
+from repro.launch.train import train_loop
 
 
 PRESETS = {

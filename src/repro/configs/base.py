@@ -56,6 +56,12 @@ class ModelConfig:
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
     conv_backend: str = "sliding"  # the paper's technique toggle
+    # int8 PTQ of the conv path: "fp" | "w8a8" | "w8a16" (repro.quant);
+    # quantized weights are swapped into params by quant.apply
+    conv_precision: str = "fp"
+    # tokenizer EOS id for serving slot recycling (per-arch; 1 is the
+    # llama-family convention and the synthetic-data default)
+    eos_id: int = 1
     remat: str = "block"  # "none" | "block"
     attn_chunk: int = 1024  # flash-style KV/Q chunking threshold & size
     loss_chunk: int = 512  # sequence chunking of the CE loss

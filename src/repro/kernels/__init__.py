@@ -5,6 +5,9 @@
   sliding_conv2d.py  — 2-D sliding conv (the paper's main experiment)
   im2col_gemm.py     — the GEMM-conv BASELINE (fused-VMEM + true HBM-bloat
                        variants) and a tiled MXU GEMM
+  sliding_conv_quant.py — int8 (w8a8 / w8a16) sliding conv with int32 VMEM
+                       accumulation and fused dequant→bias→act→requant
+                       epilogue (PTQ inference; repro.quant, DESIGN.md §7)
   sliding_pool.py    — two-phase scan pooling kernel
   ssm_scan.py        — selective-SSM scan with VMEM-resident state (the
                        paper's streaming insight applied to Mamba; forward)

@@ -180,15 +180,20 @@ def autotune_conv1d(
     stride: int = 1,
     interpret: bool | None = None,
     tile_candidates: Iterable[int] | None = None,
+    precision: str = "fp",
 ) -> Result:
-    """Search tile/block/regime space for a conv1d shape; persist winner."""
+    """Search tile/block/regime space for a conv1d shape; persist winner.
+
+    ``precision`` "w8a8"/"w8a16" tunes the quantized kernel path under its
+    precision-named shape key (the dtype field of the key scheme)."""
     from repro.core.conv import regime_for
     from repro.kernels import ops
     from repro.kernels.sliding_conv1d import DEFAULT_TILE_L
 
     B, L, Cin = x.shape
     K, _, Cout = w.shape
-    key = conv1d_key(B, L, Cin, Cout, K, stride, x.dtype.name)
+    dtype_key = precision if precision != "fp" else x.dtype.name
+    key = conv1d_key(B, L, Cin, Cout, K, stride, dtype_key)
     out_len = (L - K) // stride + 1
 
     def run(cfg):
@@ -201,6 +206,7 @@ def autotune_conv1d(
             cin_block=cfg["cin_block"],
             cout_block=cfg["cout_block"],
             regime=cfg["regime"], interpret=interpret,
+            precision=precision,
         )
 
     tiles = [
@@ -230,6 +236,7 @@ def autotune_conv2d(
     stride: tuple[int, int] = (1, 1),
     interpret: bool | None = None,
     tile_candidates: Iterable[tuple[int, int]] | None = None,
+    precision: str = "fp",
 ) -> Result:
     """Search tile/block space for a conv2d shape; persist winner."""
     from repro.core.conv import regime_for
@@ -238,7 +245,8 @@ def autotune_conv2d(
 
     B, H, W, Cin = x.shape
     kh, kw, _, Cout = w.shape
-    key = conv2d_key(B, H, W, Cin, Cout, kh, kw, *stride, x.dtype.name)
+    dtype_key = precision if precision != "fp" else x.dtype.name
+    key = conv2d_key(B, H, W, Cin, Cout, kh, kw, *stride, dtype_key)
     oh = (H - kh) // stride[0] + 1
     ow = (W - kw) // stride[1] + 1
 
@@ -250,6 +258,7 @@ def autotune_conv2d(
             cin_block=cfg["cin_block"],
             cout_block=cfg["cout_block"],
             regime=cfg["regime"], interpret=interpret,
+            precision=precision,
         )
 
     regime = "custom" if (kh == kw and kh in (3, 5)) else regime_for(kw)

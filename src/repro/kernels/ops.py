@@ -44,11 +44,15 @@ from repro.kernels import (
     sliding_conv1d,
     sliding_conv2d,
     sliding_conv_bwd,
+    sliding_conv_quant,
     sliding_pool,
 )
 from repro.kernels.sliding_conv1d import apply_activation
 
 Backend = Literal["sliding", "im2col_gemm", "im2col_hbm", "xla"]
+# "fp" = full-precision path; the int8 modes dispatch to the quantized
+# sliding kernels (repro.kernels.sliding_conv_quant, DESIGN.md §7)
+Precision = Literal["fp", "w8a8", "w8a16"]
 
 
 def use_interpret() -> bool:
@@ -115,11 +119,18 @@ class _Conv1dCfg(NamedTuple):
     interpret: bool
 
 
-def _resolve_conv1d(x, w, *, stride, tile_l, cin_block, cout_block, regime):
-    """explicit args → tuned cache entry → defaults (+ auto blocking)."""
+def _resolve_conv1d(x, w, *, stride, tile_l, cin_block, cout_block, regime,
+                    dtype_key: str | None = None):
+    """explicit args → tuned cache entry → defaults (+ auto blocking).
+
+    ``dtype_key`` overrides the dtype field of the autotune shape key —
+    the quantized paths tune under their precision name ("w8a8"/"w8a16")
+    so int8 tilings never collide with float ones."""
     B, L, Cin = x.shape
     K, _, Cout = w.shape
-    key = autotune.conv1d_key(B, L, Cin, Cout, K, stride, x.dtype.name)
+    key = autotune.conv1d_key(
+        B, L, Cin, Cout, K, stride, dtype_key or x.dtype.name
+    )
     cfg = _tuned_fill(
         key, tile_l=tile_l, cin_block=cin_block,
         cout_block=cout_block, regime=regime,
@@ -155,6 +166,34 @@ def _bwd_tile1d(x, w, stride, explicit):
                               grad=True)
     tuned = autotune.lookup(key) or {}
     return tuned.get("tile_l") or sliding_conv1d.DEFAULT_TILE_L
+
+
+def _quant_operands(x, w, w_scale, x_scale, precision):
+    """Quantize any float operands onto their int8 grids (weights per-cout,
+    activations per-tensor). Returns (x, w_q, w_scale, x_scale, out_dtype)."""
+    from repro.quant import qconv
+
+    out_dtype = jnp.float32 if x.dtype == jnp.int8 else x.dtype
+    if w.dtype != jnp.int8:
+        qw = qconv.quantize_weight(w)
+        w, w_scale = qw.q, qw.scale
+    elif w_scale is None:
+        raise ValueError("int8 weights need their w_scale")
+    if precision == "w8a8" and x.dtype != jnp.int8:
+        x_scale = qconv.act_scale(x) if x_scale is None else x_scale
+        x = qconv.quantize_act(x, x_scale)
+    return x, w, w_scale, x_scale, out_dtype
+
+
+def _check_quant_dispatch(precision, backend, dilation):
+    if backend != "sliding":
+        raise ValueError(
+            f"precision={precision!r} is implemented for the sliding "
+            f"backend only (got backend={backend!r})"
+        )
+    dilated = dilation > 1 if isinstance(dilation, int) else dilation != (1, 1)
+    if dilated:
+        raise ValueError("quantized convs cover dilation == 1 only")
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -219,6 +258,10 @@ def conv1d(
     regime: str | None = None,
     bwd_tile_l: int | None = None,
     interpret: bool | None = None,
+    precision: Precision = "fp",
+    w_scale: jax.Array | None = None,
+    x_scale: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Multi-channel 1-D convolution. x: (B,L,Cin), w: (K,Cin,Cout).
 
@@ -226,8 +269,30 @@ def conv1d(
     the sliding kernel's epilogue; baseline backends apply them unfused.
     The sliding path is differentiable (custom VJP with Pallas backward
     kernels); ``bwd_tile_l`` overrides the backward dw-kernel tile.
+
+    ``precision`` ∈ {"fp", "w8a8", "w8a16"} selects the int8 quantized
+    sliding kernels (inference-only, no VJP): ``w`` may be pre-quantized
+    int8 (+ ``w_scale`` per-Cout) or float (quantized here); for w8a8,
+    ``x`` is quantized onto ``x_scale`` (dynamic absmax when None) and
+    ``out_scale`` fuses an int8 requant after the activation. Tuned under
+    the precision-suffixed autotune shape key.
     """
     interpret = use_interpret() if interpret is None else interpret
+    if precision != "fp":
+        _check_quant_dispatch(precision, backend, dilation)
+        x = _pad1d(x, padding, w.shape[0], 1)
+        x, w, w_scale, x_scale, out_dtype = _quant_operands(
+            x, w, w_scale, x_scale, precision
+        )
+        tuned = _resolve_conv1d(
+            x, w, stride=stride, tile_l=tile_l, cin_block=cin_block,
+            cout_block=cout_block, regime=regime, dtype_key=precision,
+        )
+        return sliding_conv_quant.conv1d_quant_pallas(
+            x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
+            mode=precision, activation=activation, out_dtype=out_dtype,
+            interpret=interpret, **tuned,
+        )
     if backend == "xla":
         y = core_conv.conv1d_xla(
             x, w, stride=stride, padding=padding, dilation=dilation
@@ -368,11 +433,11 @@ class _Conv2dCfg(NamedTuple):
 
 
 def _resolve_conv2d(x, w, *, stride, tile_h, tile_w, cin_block, cout_block,
-                    regime):
+                    regime, dtype_key: str | None = None):
     B, H, W, Cin = x.shape
     kh, kw, _, Cout = w.shape
     key = autotune.conv2d_key(B, H, W, Cin, Cout, kh, kw, *stride,
-                              x.dtype.name)
+                              dtype_key or x.dtype.name)
     cfg = _tuned_fill(
         key, tile_h=tile_h, tile_w=tile_w, cin_block=cin_block,
         cout_block=cout_block, regime=regime,
@@ -480,13 +545,39 @@ def conv2d(
     bwd_tile_h: int | None = None,
     bwd_tile_w: int | None = None,
     interpret: bool | None = None,
+    precision: Precision = "fp",
+    w_scale: jax.Array | None = None,
+    x_scale: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Multi-channel 2-D convolution. x: (B,H,W,Cin), w: (kh,kw,Cin,Cout).
 
     ``bias``/``activation`` fuse into the sliding kernel epilogue; the
     sliding path is differentiable (custom VJP, Pallas backward kernels).
+    ``precision`` selects the int8 quantized kernels — see ``conv1d``.
     """
     interpret = use_interpret() if interpret is None else interpret
+    if precision != "fp":
+        _check_quant_dispatch(precision, backend, dilation)
+        kh_, kw_ = w.shape[:2]
+        (plo_h, phi_h), (plo_w, phi_w) = core_conv._resolve_pad_2d(
+            padding, kh_, kw_, (1, 1)
+        )
+        if plo_h or phi_h or plo_w or phi_w:
+            x = jnp.pad(x, ((0, 0), (plo_h, phi_h), (plo_w, phi_w), (0, 0)))
+        x, w, w_scale, x_scale, out_dtype = _quant_operands(
+            x, w, w_scale, x_scale, precision
+        )
+        tuned = _resolve_conv2d(
+            x, w, stride=stride, tile_h=tile_h, tile_w=tile_w,
+            cin_block=cin_block, cout_block=cout_block, regime=regime,
+            dtype_key=precision,
+        )
+        return sliding_conv_quant.conv2d_quant_pallas(
+            x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
+            mode=precision, activation=activation, out_dtype=out_dtype,
+            interpret=interpret, **tuned,
+        )
     if backend == "xla":
         y = core_conv.conv2d_xla(
             x, w, stride=stride, padding=padding, dilation=dilation

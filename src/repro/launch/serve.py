@@ -1,13 +1,20 @@
 """Serving driver: batched prefill + decode with a static KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
-        --batch 4 --prompt-len 32 --gen 16
+        --batch 4 --prompt-len 32 --gen 16 [--quant int8]
 
 Implements the standard two-phase serving flow the decode_* dry-run shapes
 lower: one prefill per batch of requests, then token-by-token decode with
 greedy/temperature sampling. Continuous batching is approximated by slot
-recycling: finished sequences (EOS) keep decoding into masked positions and
-their slots are refilled between generation rounds.
+recycling: finished sequences keep decoding into masked positions and
+their slots are refilled between generation rounds. The EOS id that marks
+a slot finished comes from the model config (``cfg.eos_id``, per-arch —
+hardcoding 1 broke recycling for tokenizers where 1 is a real token).
+
+``--quant int8`` runs the conv path (whisper frontend, mamba convs) w8a8:
+an eager calibration prefill collects activation scales, ``repro.quant``
+swaps int8 weights into the params, and decode runs with
+``conv_precision="w8a8"``. Conv-free archs pass through unchanged.
 """
 from __future__ import annotations
 
@@ -21,8 +28,6 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.distributed.sharding import ParamDef, Runtime
 from repro.models import build_model
-
-EOS = 1
 
 
 def init_cache_concrete(model, B, S):
@@ -53,16 +58,35 @@ def pad_cache_to_defs(cache, full, defs):
     return jax.tree.map(pad, cache, full, defs)
 
 
-def generate(model, params, prompts, *, gen_len: int, cache_len: int,
-             temperature: float = 0.0, seed: int = 0):
-    """prompts: (B, P) int32 -> (B, gen_len) int32."""
-    cfg = model.cfg
-    B, P = prompts.shape
+def serve_batch(model, B, P, prompts):
     batch = {"tokens": prompts}
+    cfg = model.cfg
     if cfg.family == "audio":
         batch["frames"] = jnp.zeros((B, P, cfg.d_model), jnp.float32)
     if cfg.family == "vlm":
         batch["patches"] = jnp.zeros((B, cfg.num_patches, 1152), jnp.float32)
+    return batch
+
+
+def generate(model, params, prompts, *, gen_len: int, cache_len: int,
+             temperature: float = 0.0, seed: int = 0):
+    """prompts: (B, P) int32 -> ((B, gen_len) int32, done mask (B,) bool).
+
+    Slots whose sequence hit ``cfg.eos_id`` are finished: they keep
+    decoding into masked positions (their tokens pinned to eos) so the
+    static batch shape holds, and the returned ``done`` mask tells the
+    caller which slots are recyclable.
+    """
+    cfg = model.cfg
+    eos = jnp.int32(cfg.eos_id)
+    B, P = prompts.shape
+    if cfg.encoder_layers:
+        # enc-dec cache defs split `seq` evenly between encoder frames and
+        # decoder tokens — the decoder half alone must hold prompt + gen
+        # (clamped here so EVERY generate() caller is covered; the seed
+        # crashed whisper serving on a negative cache pad)
+        cache_len = max(cache_len, 2 * (P + gen_len))
+    batch = serve_batch(model, B, P, prompts)
     prefill = jax.jit(model.prefill)
     decode = jax.jit(model.decode_step)
     logits, cache = prefill(params, batch)
@@ -75,6 +99,7 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
 
     key = jax.random.key(seed)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    done = tok[:, 0] == eos
     out = [tok]
     for i in range(gen_len - 1):
         logits, cache = decode(params, cache, tok, jnp.int32(P + i))
@@ -85,8 +110,30 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
             ).astype(jnp.int32)[:, None]
         else:
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        tok = jnp.where(done[:, None], eos, tok)  # finished slots: masked
         out.append(tok)
-    return jnp.concatenate(out, axis=1)
+        done = done | (tok[:, 0] == eos)
+    return jnp.concatenate(out, axis=1), done
+
+
+def quantize_for_serving(model, params, prompts):
+    """int8 PTQ of the model's conv path: eager calibration prefill →
+    activation scales → int8 weight leaves. Returns (cfg', params')."""
+    from repro import quant
+
+    cfg = model.cfg
+    B, P = prompts.shape
+    calib = quant.Calibration()
+    with quant.collecting(calib):
+        model.prefill(params, serve_batch(model, B, P, prompts))  # eager
+    qparams = quant.quantize_params(params, spec=calib.spec())
+    n = quant.quantized_site_count(qparams)
+    if n == 0:
+        print(f"[serve] --quant: {cfg.name} has no conv sites; unchanged")
+        return cfg, params
+    print(f"[serve] --quant: {n} conv weight(s) int8, "
+          f"{len(calib.seen)} calibrated site(s)")
+    return cfg.replace(conv_precision="w8a8"), qparams
 
 
 def main():
@@ -98,6 +145,8 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quant", choices=["int8"], default=None,
+                    help="post-training-quantize the conv path (w8a8)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -111,15 +160,20 @@ def main():
         rng.integers(2, cfg.vocab_size, size=(args.batch, args.prompt_len)),
         jnp.int32,
     )
+    if args.quant:
+        cfg, params = quantize_for_serving(model, params, prompts)
+        model = build_model(cfg, rt)
     cache_len = args.prompt_len + args.gen + (args.prompt_len + args.gen) % 2
     t0 = time.time()
-    toks = generate(
+    toks, done = generate(
         model, params, prompts, gen_len=args.gen,
         cache_len=cache_len, temperature=args.temperature, seed=args.seed,
     )
     dt = time.time() - t0
     print(f"[serve] generated {toks.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
+          f"({args.batch * args.gen / dt:.1f} tok/s); "
+          f"{int(done.sum())}/{args.batch} slots recyclable "
+          f"(eos={cfg.eos_id})")
     print("[serve] sample:", np.asarray(toks[0][:16]))
 
 

@@ -57,6 +57,25 @@ def act_fn(name: str):
 # Every backend is differentiable: the Pallas ops carry a custom VJP with
 # sliding-window backward kernels (DESIGN.md §6), so whisper's frontend,
 # mamba's conv and llava's patch_embed train unchanged under any backend.
+#
+# Quantized inference (DESIGN.md §7): ``w`` may be a
+# ``repro.quant.QuantizedWeight`` (int8 + scales, from quant.apply) and/or
+# ``precision`` ∈ {"w8a8", "w8a16"} may be set (float weights quantize on
+# the fly). The Pallas backend then runs the fused int8 kernels; pure-JAX
+# backends run ``repro.quant.qconv`` with the same int32 arithmetic. Both
+# entry points are calibration sites: under ``quant.calibrate.collecting``
+# the input activation is observed (eagerly) under ``site``.
+
+
+def _quant_mode(w, precision: str) -> str | None:
+    from repro.quant.qconv import QuantizedWeight
+
+    if precision in ("w8a8", "w8a16"):
+        return precision
+    if isinstance(w, QuantizedWeight):  # quantized leaf, default weight-only
+        return "w8a16"
+    return None
+
 
 def conv1d_bias_act(
     x: Array,
@@ -67,8 +86,36 @@ def conv1d_bias_act(
     stride: int = 1,
     padding="VALID",
     backend: str = "sliding",
+    precision: str = "fp",
+    site: str | None = None,
 ) -> Array:
-    """Multi-channel conv1d + bias + activation. x: (B,L,Cin), w: (K,Cin,Cout)."""
+    """Multi-channel conv1d + bias + activation. x: (B,L,Cin), w: (K,Cin,Cout)
+    float or ``QuantizedWeight``."""
+    from repro.quant import calibrate, qconv
+
+    k, cout = (w.q if isinstance(w, qconv.QuantizedWeight) else w).shape[::2]
+    calibrate.observe(
+        site or calibrate.conv_site("conv1d", x.shape[-1], cout, k), x
+    )
+    mode = _quant_mode(w, precision)
+    if mode is not None:
+        qw = w if isinstance(w, qconv.QuantizedWeight) else qconv.quantize_weight(w)
+        if backend == "sliding_pallas":
+            from repro.kernels import ops
+
+            return ops.conv1d(
+                x, qw.q, stride=stride, padding=padding, bias=b,
+                activation=activation, precision=mode, w_scale=qw.scale,
+                x_scale=qw.x_scale,
+            )
+        # accumulate="fast": the compiled CPU evaluation (int8 storage,
+        # f32 GEMMs) — the exact-int32 default is the test oracle, ~4×
+        # slower than f32 through XLA CPU's integer matmul
+        return qconv.conv1d_q(
+            x, qw, b, mode=mode, stride=stride, padding=padding,
+            activation=activation, out_dtype=x.dtype, accumulate="fast",
+        )
+    w = w.astype(x.dtype)
     if backend == "sliding_pallas":
         from repro.kernels import ops
 
@@ -93,8 +140,37 @@ def conv2d_bias_act(
     stride: tuple[int, int] = (1, 1),
     padding="VALID",
     backend: str = "sliding",
+    precision: str = "fp",
+    site: str | None = None,
 ) -> Array:
-    """Multi-channel conv2d + bias + activation. x: (B,H,W,Cin), w: HWIO."""
+    """Multi-channel conv2d + bias + activation. x: (B,H,W,Cin), w: HWIO
+    float or ``QuantizedWeight``."""
+    from repro.quant import calibrate, qconv
+
+    wq = w.q if isinstance(w, qconv.QuantizedWeight) else w
+    calibrate.observe(
+        site
+        or calibrate.conv_site(
+            "conv2d", x.shape[-1], wq.shape[-1], f"{wq.shape[0]}x{wq.shape[1]}"
+        ),
+        x,
+    )
+    mode = _quant_mode(w, precision)
+    if mode is not None:
+        qw = w if isinstance(w, qconv.QuantizedWeight) else qconv.quantize_weight(w)
+        if backend == "sliding_pallas":
+            from repro.kernels import ops
+
+            return ops.conv2d(
+                x, qw.q, stride=stride, padding=padding, bias=b,
+                activation=activation, precision=mode, w_scale=qw.scale,
+                x_scale=qw.x_scale,
+            )
+        return qconv.conv2d_q(
+            x, qw, b, mode=mode, stride=stride, padding=padding,
+            activation=activation, out_dtype=x.dtype, accumulate="fast",
+        )
+    w = w.astype(x.dtype)
     if backend == "sliding_pallas":
         from repro.kernels import ops
 

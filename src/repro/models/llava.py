@@ -25,19 +25,20 @@ PATCH = 14
 
 def patch_embed(
     w: Array, images: Array, backend: str = "sliding",
-    bias: Array | None = None,
+    bias: Array | None = None, precision: str = "fp",
 ) -> Array:
     """images: (B, H, W, 3) -> (B, (H//14)*(W//14), VISION_DIM).
 
     conv2d k=14 s=14 == non-overlapping sliding window; routes through the
     paper's conv2d (compound regime: width 14 ≤ 17 → generic). With
     ``backend="sliding_pallas"`` the (optional) bias fuses into the kernel
-    epilogue."""
+    epilogue. ``w`` may be a ``repro.quant.QuantizedWeight`` (and/or
+    ``precision`` "w8a8"/"w8a16") for int8 PTQ inference."""
     from repro.models.layers import conv2d_bias_act
 
     y = conv2d_bias_act(
         images, w, bias, stride=(PATCH, PATCH), padding="VALID",
-        backend=backend,
+        backend=backend, precision=precision, site="llava/patch_embed",
     )
     B, h, ww, c = y.shape
     return y.reshape(B, h * ww, c)

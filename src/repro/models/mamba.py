@@ -51,11 +51,29 @@ def mamba_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
     }
 
 
+def _resolve_conv_w(p, dt) -> Array:
+    """The depthwise conv weight, dequantized if ``repro.quant.apply``
+    swapped in a weight-only int8 leaf (the K×C weight dequantizes in
+    registers — a dedicated int8 depthwise kernel is a ROADMAP item)."""
+    from repro.quant.qconv import QuantizedWeight
+
+    w = p["conv_w"]
+    if isinstance(w, QuantizedWeight):
+        return w.dequant(dt)
+    return w.astype(dt)
+
+
 def _conv_act(x: Array, w: Array, b: Array, backend: str) -> Array:
     """Causal depthwise conv→bias→silu via the selected evaluation strategy.
 
     On the Pallas path the bias and silu run in the kernel's fused epilogue
     (one launch); the pure-JAX/XLA paths apply them unfused."""
+    from repro.quant import calibrate
+
+    calibrate.observe(
+        calibrate.conv_site("conv1d_dw", x.shape[-1], x.shape[-1], w.shape[0]),
+        x,
+    )
     if backend == "sliding_pallas":
         from repro.kernels import ops
 
@@ -126,11 +144,11 @@ def mamba_apply(
     xin, z = jnp.split(xz, 2, axis=-1)
 
     if state is None:
-        xc = _conv_act(xin, p["conv_w"].astype(dt), p["conv_b"], cfg.conv_backend)
+        xc = _conv_act(xin, _resolve_conv_w(p, dt), p["conv_b"], cfg.conv_backend)
         new_conv = None
     else:
         hist = jnp.concatenate([state["conv"].astype(dt), xin], axis=1)
-        w = p["conv_w"].astype(dt)
+        w = _resolve_conv_w(p, dt)
         xc = (hist * w[None]).sum(axis=1, keepdims=True) + p["conv_b"].astype(dt)
         new_conv = hist[:, 1:]
         xc = jax.nn.silu(xc)

@@ -44,15 +44,19 @@ def conv_frontend(p, mels: Array, cfg: ModelConfig) -> Array:
     """mels: (B, T, 80) -> (B, T//2, d_model). Sliding conv, custom k=3.
 
     conv→bias→gelu is one fused kernel launch on the Pallas path
-    (``conv_backend="sliding_pallas"``)."""
+    (``conv_backend="sliding_pallas"``). With ``cfg.conv_precision`` set
+    (and int8 weights swapped in by ``repro.quant.apply``) the convs run
+    the quantized kernels; the site names here key the calibration spec."""
+    precision = cfg.conv_precision
     x = L.conv1d_bias_act(
-        mels, p["conv1_w"].astype(mels.dtype), p["conv1_b"],
+        mels, p["conv1_w"], p["conv1_b"],
         activation="gelu", padding="SAME", backend=cfg.conv_backend,
+        precision=precision, site="whisper/conv1",
     )
     x = L.conv1d_bias_act(
-        x, p["conv2_w"].astype(x.dtype), p["conv2_b"],
+        x, p["conv2_w"], p["conv2_b"],
         activation="gelu", stride=2, padding="SAME",
-        backend=cfg.conv_backend,
+        backend=cfg.conv_backend, precision=precision, site="whisper/conv2",
     )
     return x
 

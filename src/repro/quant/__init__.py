@@ -1,0 +1,45 @@
+"""repro.quant — int8 post-training quantization of the sliding-conv path.
+
+Subsystem layout (DESIGN.md §7):
+  * ``qconv``     — quantizers, ``QuantizedWeight``, pure-JAX quantized
+                    sliding convs (exact int32 kernel oracle + the
+                    compiled CPU fast path) and the int8 im2col baseline.
+  * ``calibrate`` — activation-statistics collection → ``QuantSpec``.
+  * ``apply``     — swap quantized weights into model params.
+
+The Pallas int8 kernels live with the other kernels in
+``repro.kernels.sliding_conv_quant`` and dispatch through
+``repro.kernels.ops.conv1d/conv2d(precision=...)``.
+"""
+from repro.quant.apply import (
+    quantize_depthwise_weight,
+    quantize_params,
+    quantized_site_count,
+)
+from repro.quant.calibrate import Calibration, QuantSpec, collecting, observe
+from repro.quant.qconv import (
+    QuantizedWeight,
+    act_scale,
+    conv1d_q,
+    conv2d_q,
+    conv2d_q_im2col,
+    quantize_act,
+    quantize_weight,
+)
+
+__all__ = [
+    "Calibration",
+    "QuantSpec",
+    "QuantizedWeight",
+    "act_scale",
+    "collecting",
+    "conv1d_q",
+    "conv2d_q",
+    "conv2d_q_im2col",
+    "observe",
+    "quantize_act",
+    "quantize_depthwise_weight",
+    "quantize_params",
+    "quantize_weight",
+    "quantized_site_count",
+]

@@ -1,0 +1,103 @@
+"""Model-level PTQ wiring: swap ``QuantizedWeight`` leaves into params.
+
+``quantize_params`` walks a model's params pytree and replaces the conv
+weights the sliding-kernel path consumes with int8 ``QuantizedWeight``
+leaves (per-output-channel scales), folding each site's calibrated
+activation scale in so inference needs no side-channel spec:
+
+  * whisper frontend  — ``frontend/conv{1,2}_w``: full w8a8/w8a16 through
+    the quantized sliding-conv kernels (sites ``whisper/conv1``,
+    ``whisper/conv2``).
+  * mamba (jamba)     — ``…/mamba/conv_w``: weight-only int8 (the K×C
+    depthwise weight dequantizes in registers at the call site; a
+    dedicated int8 depthwise kernel is a ROADMAP item).
+  * llava patch_embed — the weight is an argument, not a params leaf:
+    quantize it with :func:`repro.quant.quantize_weight` and pass the
+    ``QuantizedWeight`` straight to ``patch_embed``.
+
+Because ``QuantizedWeight`` is a NamedTuple (a pytree node), the swapped
+params still flatten/scan/jit like any other params tree — jamba's
+per-period ``lax.scan`` slices ``q`` and ``scale`` together.
+
+End-to-end::
+
+    calib = Calibration()
+    with collecting(calib):
+        model.loss(params, sample_batch)       # eager calibration pass
+    qparams = quantize_params(params, spec=calib.spec(), mode="w8a8")
+    # run with cfg.replace(conv_precision="w8a8")
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.quant.calibrate import QuantSpec
+from repro.quant.qconv import QuantizedWeight, quantize_weight
+
+# params-tree key → calibration site for the fully-quantized conv sites
+SITE_FOR_KEY = {
+    "conv1_w": "whisper/conv1",
+    "conv2_w": "whisper/conv2",
+}
+# depthwise conv weights: weight-only int8 (dequantized at the call site)
+WEIGHT_ONLY_KEYS = ("conv_w",)
+
+
+def quantize_depthwise_weight(w) -> QuantizedWeight:
+    """Weight-only int8 for depthwise (…, K, C) weights: per-channel scale
+    over the tap axis, keepdims so ``q * scale`` broadcasts under any
+    leading stacking (jamba stacks periods ahead of K)."""
+    wf = w.astype(jnp.float32)
+    s = jnp.max(jnp.abs(wf), axis=-2, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(wf / s), -127, 127).astype(jnp.int8)
+    return QuantizedWeight(q, s)
+
+
+def quantize_params(
+    params: Any, spec: QuantSpec | None = None, *, mode: str = "w8a8"
+) -> Any:
+    """Return a copy of ``params`` with known conv weights quantized.
+
+    ``spec`` (from ``Calibration.spec()``) provides per-site activation
+    scales for the w8a8 sites; missing sites fall back to dynamic absmax
+    at inference (``QuantizedWeight.x_scale = None``). ``mode`` is stored
+    implicitly: the precision argument at the call sites decides w8a8 vs
+    w8a16 — this function only prepares the int8 leaves.
+    """
+    spec = spec or {}
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for key, val in node.items():
+            if isinstance(val, dict):
+                out[key] = walk(val)
+            elif key in SITE_FOR_KEY:
+                entry = spec.get(SITE_FOR_KEY[key], {})
+                out[key] = quantize_weight(val, entry.get("x_scale"))
+            elif key in WEIGHT_ONLY_KEYS:
+                out[key] = quantize_depthwise_weight(val)
+            else:
+                out[key] = val
+        return out
+
+    return walk(params)
+
+
+def quantized_site_count(params: Any) -> int:
+    """Number of QuantizedWeight leaves in a params tree (diagnostics)."""
+    n = 0
+
+    def walk(node):
+        nonlocal n
+        if isinstance(node, QuantizedWeight):
+            n += 1
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+
+    walk(params)
+    return n

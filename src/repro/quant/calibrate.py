@@ -1,0 +1,125 @@
+"""Calibration pipeline: per-site activation statistics → ``QuantSpec``.
+
+Post-training quantization needs a *static* per-tensor scale for each conv
+site's input activations (w8a8 quantizes onto that grid at runtime; a
+dynamic per-batch absmax would re-scan every activation tensor). The flow:
+
+    calib = Calibration(percentile=99.9)
+    with collecting(calib):
+        for batch in sample_batches:
+            model.loss(params, batch)        # EAGER — no jax.jit
+    spec = calib.spec()                      # site → {"x_scale": f32[]}
+
+``repro.models.layers.conv1d/2d_bias_act`` (and any other instrumented
+site) call :func:`observe` on their input activation; while a
+``collecting`` context is active and the value is concrete (eager), the
+observer records per-channel absmax and a subsampled |x| reservoir. The
+emitted ``QuantSpec`` maps site name → scale entry; ``quant.apply`` folds
+the scales into the quantized weight leaves.
+
+Under ``jax.jit`` activations are tracers and observation is skipped
+silently — calibration runs must be eager (document + asserted via
+``Calibration.seen``). Percentile clipping (vs plain absmax) trades a
+little saturation error for much smaller rounding error on heavy-tailed
+activations; ``percentile=None`` keeps pure absmax.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# site name -> {"x_scale": f32 scalar array}; a plain-dict pytree so specs
+# jit/serialize like any other params structure
+QuantSpec = dict[str, dict[str, Array]]
+
+
+@dataclasses.dataclass
+class _SiteStats:
+    """Running per-channel absmax + reservoir of |x| samples for one site."""
+
+    absmax: np.ndarray | None = None  # (C,) running per-channel max
+    samples: list[np.ndarray] = dataclasses.field(default_factory=list)
+    batches: int = 0
+
+    def update(self, x: np.ndarray, reservoir: int) -> None:
+        a = np.abs(x.astype(np.float32)).reshape(-1, x.shape[-1])
+        cmax = a.max(axis=0)
+        self.absmax = cmax if self.absmax is None else np.maximum(self.absmax, cmax)
+        flat = a.reshape(-1)
+        if flat.size > reservoir:  # deterministic stride subsample
+            flat = flat[:: max(1, flat.size // reservoir)][:reservoir]
+        self.samples.append(flat)
+        self.batches += 1
+
+
+class Calibration:
+    """Collects activation stats per conv site; emits a QuantSpec."""
+
+    def __init__(self, percentile: float | None = 99.9, reservoir: int = 8192):
+        self.percentile = percentile
+        self.reservoir = reservoir
+        self.stats: dict[str, _SiteStats] = {}
+
+    def observe(self, site: str, x: Any) -> None:
+        if isinstance(x, jax.core.Tracer):  # inside jit: can't read values
+            return
+        self.stats.setdefault(site, _SiteStats()).update(
+            np.asarray(x), self.reservoir
+        )
+
+    @property
+    def seen(self) -> list[str]:
+        return sorted(self.stats)
+
+    def site_scale(self, site: str) -> Array:
+        """Per-tensor activation scale for a site: percentile (or absmax)
+        of |x| over all calibration batches, mapped onto the int8 grid."""
+        st = self.stats[site]
+        if self.percentile is None:
+            hi = float(st.absmax.max())
+        else:
+            allx = np.concatenate(st.samples)
+            hi = float(np.percentile(allx, self.percentile))
+            hi = max(hi, 1e-8)  # all-zero calibration data
+        return jnp.asarray(hi / 127.0 + 1e-12, jnp.float32)
+
+    def channel_absmax(self, site: str) -> Array:
+        """Per-channel absmax (diagnostics / future per-channel modes)."""
+        return jnp.asarray(self.stats[site].absmax, jnp.float32)
+
+    def spec(self) -> QuantSpec:
+        return {s: {"x_scale": self.site_scale(s)} for s in self.seen}
+
+
+_ACTIVE: Calibration | None = None
+
+
+@contextlib.contextmanager
+def collecting(calib: Calibration) -> Iterator[Calibration]:
+    """Route :func:`observe` calls into ``calib`` for the duration."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, calib
+    try:
+        yield calib
+    finally:
+        _ACTIVE = prev
+
+
+def observe(site: str, x: Any) -> None:
+    """Instrumentation hook for conv call sites (no-op unless collecting)."""
+    if _ACTIVE is not None:
+        _ACTIVE.observe(site, x)
+
+
+def conv_site(kind: str, cin: int, cout: int, k) -> str:
+    """Default site name when the caller doesn't pass one — shape-derived,
+    so identical layers share a scale (fine for calibration, and the only
+    option when the call site has no stable name)."""
+    return f"{kind}|Cin{cin}|Cout{cout}|K{k}"

@@ -1,0 +1,265 @@
+"""Quantization primitives + pure-JAX quantized sliding convs.
+
+The building blocks of the PTQ subsystem (DESIGN.md §7):
+
+  * ``QuantizedWeight`` — the pytree leaf ``quant.apply`` swaps into model
+    params: int8 values + per-output-channel f32 scale (+ the calibrated
+    activation scale for the weight's conv site, when known).
+  * ``quantize_weight`` / ``quantize_act`` / ``act_scale`` — symmetric
+    absmax int8 quantizers (weights per-cout, activations per-tensor —
+    per-channel activation scales don't commute with the conv's Cin
+    reduction; see ``repro.optim.compress`` for the per-row primitive the
+    optimizer/gradient paths share).
+  * ``conv1d_q`` / ``conv2d_q`` — pure-JAX quantized sliding convs.
+    ``accumulate="int32"`` is the **exact oracle** for the Pallas kernels
+    (same integer arithmetic tap-by-tap, same f32 dequant epilogue);
+    ``accumulate="fast"`` upcasts the int8 operands to f32 at the matmul
+    inputs — the wall-clock-meaningful CPU evaluation (XLA CPU has no
+    native int8 GEMM; int8 here buys 4× smaller operand traffic and the
+    fast f32 GEMM instead of bf16's convert-heavy path).
+  * ``conv2d_q_im2col`` — the int8 im2col+GEMM baseline (column matrix
+    materialized, k²×-bloated, in int8) for the quant benchmark rows.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class QuantizedWeight(NamedTuple):
+    """int8 conv weight + scales. ``q``: int8, layout of the f32 weight it
+    replaces; ``scale``: f32 (Cout,) absmax/127 per output channel;
+    ``x_scale``: calibrated per-tensor activation scale for this weight's
+    conv site (None → dynamic absmax at call time)."""
+
+    q: Array
+    scale: Array
+    x_scale: Array | None = None
+
+    def dequant(self, dtype=jnp.float32) -> Array:
+        return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+
+def quantize_weight(w: Array, x_scale: Array | None = None) -> QuantizedWeight:
+    """Symmetric per-output-channel (last axis) absmax int8 quantization."""
+    wf = w.astype(jnp.float32)
+    red = tuple(range(w.ndim - 1))
+    s = jnp.max(jnp.abs(wf), axis=red) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(wf / s), -127, 127).astype(jnp.int8)
+    return QuantizedWeight(q, s, x_scale)
+
+
+def act_scale(x: Array) -> Array:
+    """Dynamic per-tensor absmax activation scale (f32 scalar)."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0 + 1e-12
+
+
+def quantize_act(x: Array, scale: Array) -> Array:
+    """Quantize activations onto a per-tensor int8 grid."""
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def _apply_act(y: Array, activation: str) -> Array:
+    from repro.kernels.sliding_conv1d import apply_activation
+
+    return apply_activation(y, activation)
+
+
+def _epilogue(
+    acc_f32: Array, bias: Array | None, activation: str,
+    out_scale: Array | None, out_dtype,
+) -> Array:
+    """Shared dequantized epilogue: bias → activation → optional requant.
+    Matches the Pallas kernels' f32 epilogue numerics."""
+    if bias is not None:
+        acc_f32 = acc_f32 + bias.astype(jnp.float32)
+    y = _apply_act(acc_f32, activation)
+    if out_scale is not None:
+        return jnp.clip(jnp.round(y / out_scale), -127, 127).astype(jnp.int8)
+    return y.astype(out_dtype)
+
+
+def _resolve_in(x, qw: QuantizedWeight, mode: str, x_scale):
+    """(x-as-matmul-operand, per-cout dequant scale) for a mode."""
+    if mode == "w8a8":
+        if x.dtype != jnp.int8:
+            x_scale = x_scale if x_scale is not None else (
+                qw.x_scale if qw.x_scale is not None else act_scale(x)
+            )
+            x = quantize_act(x, x_scale)
+        elif x_scale is None:
+            raise ValueError("int8 input needs its x_scale")
+        return x, qw.scale * jnp.asarray(x_scale, jnp.float32)
+    if mode == "w8a16":
+        return x, qw.scale
+    raise ValueError(f"unknown quant mode {mode!r}")
+
+
+# 2-D taps stacked per GEMM (when the filter has > 3×3 taps): the pure-JAX
+# analogue of the custom/compound regimes' in-VMEM tap stacking. Each chunk
+# concatenates ≤TAP_STACK shifted slices of one filter row in the STORAGE
+# dtype (int8 ⇒ 4× less concat traffic) and runs ONE (spatial, chunk·Cin)
+# @ (chunk·Cin, Cout) GEMM — so the f32 accumulator round-trips
+# taps/TAP_STACK times instead of taps. Measured on the fig1 shapes:
+# per-tap loops are accumulator-traffic-bound from k=5 up (stacking is ~3×
+# wall-clock there); at 3×3 and in 1-D, XLA already fuses the per-tap loop
+# optimally and stacking only adds concat traffic — hence the policies in
+# conv1d_q (always per-tap) and conv2d_q (stack above 9 taps).
+TAP_STACK = 8
+
+
+def _chunk_gemm(cols, wf, exact: bool, eq: str):
+    """Stacked-chunk GEMM: concat slices, upcast once (fast path), matmul.
+    ``exact`` keeps int8 operands with int32 accumulation (kernel oracle)."""
+    col = cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=-1)
+    if exact:
+        return jnp.einsum(eq, col, wf, preferred_element_type=jnp.int32)
+    return jnp.einsum(
+        eq, col.astype(jnp.float32), wf.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def conv1d_q(
+    x: Array,
+    qw: QuantizedWeight,
+    bias: Array | None = None,
+    *,
+    mode: str = "w8a8",
+    x_scale: Array | None = None,
+    out_scale: Array | None = None,
+    stride: int = 1,
+    padding="VALID",
+    activation: str = "none",
+    accumulate: str = "int32",
+    out_dtype=jnp.float32,
+) -> Array:
+    """Quantized sliding conv1d. x: (B,L,Cin) float (or int8 w8a8 with
+    ``x_scale``); qw.q: (K,Cin,Cout). ``accumulate="int32"`` is the exact
+    kernel oracle; ``"fast"`` the compiled CPU evaluation."""
+    from repro.core.conv import _resolve_pad_1d
+
+    K, _, Cout = qw.q.shape
+    lo, hi = _resolve_pad_1d(padding, K, 1)
+    if lo or hi:
+        x = jnp.pad(x, ((0, 0), (lo, hi), (0, 0)))
+    x, dq = _resolve_in(x, qw, mode, x_scale)
+    exact = mode == "w8a8" and accumulate == "int32"
+    # 1-D: per-tap loop (XLA fuses it well; stacking measured slower here),
+    # operands upcast ONCE on the fast path
+    wm = qw.q if exact else qw.q.astype(jnp.float32)
+    if not exact:
+        x = x.astype(jnp.float32)
+    adt = jnp.int32 if exact else jnp.float32
+    B, L, Cin = x.shape
+    out_len = (L - K) // stride + 1
+    span = (out_len - 1) * stride + 1
+    acc = None
+    for k in range(K):
+        xs = jax.lax.slice_in_dim(x, k, k + span, axis=1)
+        if stride > 1:
+            xs = xs[:, ::stride]
+        t = jnp.einsum("blc,cd->bld", xs, wm[k], preferred_element_type=adt)
+        acc = t if acc is None else acc + t
+    return _epilogue(
+        acc.astype(jnp.float32) * dq, bias, activation, out_scale, out_dtype
+    )
+
+
+def conv2d_q(
+    x: Array,
+    qw: QuantizedWeight,
+    bias: Array | None = None,
+    *,
+    mode: str = "w8a8",
+    x_scale: Array | None = None,
+    out_scale: Array | None = None,
+    stride: tuple[int, int] = (1, 1),
+    padding="VALID",
+    activation: str = "none",
+    accumulate: str = "int32",
+    out_dtype=jnp.float32,
+) -> Array:
+    """Quantized sliding conv2d. x: (B,H,W,Cin); qw.q: (kh,kw,Cin,Cout)."""
+    from repro.core.conv import _resolve_pad_2d
+
+    kh, kw, _, Cout = qw.q.shape
+    (plo_h, phi_h), (plo_w, phi_w) = _resolve_pad_2d(padding, kh, kw, (1, 1))
+    if plo_h or phi_h or plo_w or phi_w:
+        x = jnp.pad(x, ((0, 0), (plo_h, phi_h), (plo_w, phi_w), (0, 0)))
+    x, dq = _resolve_in(x, qw, mode, x_scale)
+    exact = mode == "w8a8" and accumulate == "int32"
+    # stack taps above 3×3 (accumulator-traffic-bound regime); per-tap with
+    # once-upcast operands below (XLA fuses the small loop optimally)
+    stack = TAP_STACK if (exact or kh * kw > 9) else 1
+    if stack == 1 and not exact:
+        x = x.astype(jnp.float32)
+    B, H, W, Cin = x.shape
+    sh, sw = stride
+    oh = (H - kh) // sh + 1
+    ow = (W - kw) // sw + 1
+    span_h = (oh - 1) * sh + 1
+    span_w = (ow - 1) * sw + 1
+    acc = None
+    for i in range(kh):  # filter rows; taps within a row stacked per GEMM
+        for j0 in range(0, kw, stack):
+            j1 = min(j0 + stack, kw)
+            cols = []
+            for j in range(j0, j1):
+                xs = jax.lax.dynamic_slice(
+                    x, (0, i, j, 0), (B, span_h, span_w, Cin)
+                )
+                if stride != (1, 1):
+                    xs = xs[:, ::sh, ::sw]
+                cols.append(xs)
+            wf = qw.q[i, j0:j1].reshape((j1 - j0) * Cin, Cout)
+            t = _chunk_gemm(cols, wf, exact, "bhwc,cd->bhwd")
+            acc = t if acc is None else acc + t
+    return _epilogue(
+        acc.astype(jnp.float32) * dq, bias, activation, out_scale, out_dtype
+    )
+
+
+def conv2d_q_im2col(
+    x: Array,
+    qw: QuantizedWeight,
+    *,
+    x_scale: Array | None = None,
+    stride: tuple[int, int] = (1, 1),
+    accumulate: str = "fast",
+    out_dtype=jnp.float32,
+) -> Array:
+    """int8 im2col+GEMM baseline: the (oh·ow, kh·kw·Cin) int8 column matrix
+    IS materialized (the k²× memory bloat the sliding path avoids), then
+    one dequantized GEMM. VALID padding."""
+    kh, kw, Cin, Cout = qw.q.shape
+    sh, sw = stride
+    if x.dtype == jnp.int8:
+        if x_scale is None:  # absmax of int8 CODES is not a scale
+            raise ValueError("int8 input needs its x_scale")
+        xq, sx = x, x_scale
+    else:
+        sx = x_scale if x_scale is not None else act_scale(x)
+        xq = quantize_act(x, sx)
+    B, H, W, _ = xq.shape
+    oh = (H - kh) // sh + 1
+    ow = (W - kw) // sw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            xs = jax.lax.dynamic_slice(
+                xq, (0, i, j, 0), (B, (oh - 1) * sh + 1, (ow - 1) * sw + 1, Cin)
+            )
+            if stride != (1, 1):
+                xs = xs[:, ::sh, ::sw]
+            cols.append(xs)
+    col = jnp.concatenate(cols, axis=-1).reshape(B, oh * ow, kh * kw * Cin)
+    wf = qw.q.reshape(kh * kw * Cin, Cout)
+    y = _chunk_gemm([col], wf, accumulate == "int32", "bpc,cd->bpd")
+    dq = qw.scale * jnp.asarray(sx, jnp.float32)
+    return (y.astype(jnp.float32) * dq).reshape(B, oh, ow, Cout).astype(out_dtype)

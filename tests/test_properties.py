@@ -109,6 +109,51 @@ def test_quantize_roundtrip_error_bound(data):
 
 
 @given(st.data())
+def test_quantize_roundtrip_ndim_sweep(data):
+    """The optim/compress int8 primitive (shared contract with the quant
+    subsystem): round-trip error ≤ scale/2 per element at ndim 0, 1, 2;
+    values stay on the int8 grid; dequantized shape matches."""
+    from repro.optim import dequantize_int8, quantize_int8
+
+    ndim = data.draw(st.integers(0, 2), label="ndim")
+    dims = tuple(
+        data.draw(st.integers(1, 12), label=f"d{i}") for i in range(ndim)
+    )
+    x = (
+        jnp.asarray(data.draw(st.floats(-50, 50, width=32)), jnp.float32)
+        if ndim == 0
+        else arr(data.draw, dims, lo=-50, hi=50)
+    )
+    q, s = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    assert bool((jnp.abs(q.astype(jnp.int32)) <= 127).all())
+    back = dequantize_int8(q, s)
+    assert back.shape == x.shape
+    err = jnp.abs(back - x)
+    assert bool((err <= s * 0.5 + 1e-6).all())
+
+
+@given(st.data())
+def test_quantize_zero_rows_exact(data):
+    """All-zero rows quantize to exactly zero (the tiny-epsilon scale must
+    not manufacture nonzero values), and mixed rows keep per-row scales
+    independent — a huge row can't destroy a small row's resolution."""
+    from repro.optim import dequantize_int8, quantize_int8
+
+    n = data.draw(st.integers(1, 16), label="n")
+    big = data.draw(st.floats(100, 1e4, width=32), label="big")
+    x = np.zeros((3, n), np.float32)
+    x[1, :] = big  # rows: zero, big, zero
+    q, s = quantize_int8(jnp.asarray(x))
+    back = np.asarray(dequantize_int8(q, s))
+    np.testing.assert_array_equal(back[0], np.zeros(n, np.float32))
+    np.testing.assert_array_equal(back[2], np.zeros(n, np.float32))
+    assert np.all(np.abs(back[1] - big) <= float(s[1, 0]) * 0.5 + 1e-3)
+    # zero input quantizes to zero codes, not garbage
+    assert np.all(np.asarray(q)[0] == 0) and np.all(np.asarray(q)[2] == 0)
+
+
+@given(st.data())
 def test_data_pipeline_determinism_and_masking(data):
     from repro.data import SyntheticLMData
 

@@ -1,0 +1,364 @@
+"""int8 PTQ subsystem (repro.quant + kernels.sliding_conv_quant).
+
+Three layers of validation:
+
+  1. **Exact oracle** — the Pallas int8 kernels (interpret mode) must match
+     ``repro.quant.qconv`` with int32 accumulation bit-for-bit in the
+     integer part (same taps, same int32 sums, same f32 epilogue): tight
+     allclose. The "fast" (CPU wall-clock) evaluation must equal the exact
+     one too — it reorders integer sums only.
+  2. **Calibrated tolerance vs the f32 reference** — symmetric absmax
+     quantization admits an analytic per-element error bound
+     ``0.5·s_x·Σ|w| + 0.5·s_w·Σ|x| + 0.25·s_x·s_w·N`` over a conv window
+     (activations are ≤1.1-Lipschitz), so quantized outputs are asserted
+     within that *computed* bound of the f32 oracle — across stride > 1,
+     channel-blocked 512ch, and fused-epilogue cases (the acceptance set).
+  3. **Model wiring** — calibration context → QuantSpec → quantize_params
+     → whisper frontend / mamba / llava / layers entry points.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import quant
+from repro.kernels import autotune, ops, ref
+from repro.kernels.sliding_conv_quant import (
+    conv1d_quant_pallas,
+    conv2d_quant_pallas,
+)
+from repro.quant import qconv
+
+TIGHT = dict(rtol=1e-5, atol=1e-5)
+
+
+def _quant_bound(x, w, sx, sw, lipschitz=1.1):
+    """Analytic per-element |quant - f32| bound for a VALID conv window:
+    error per product ≤ |x|·(s_w/2) + |w|·(s_x/2) + (s_x·s_w)/4, summed
+    over the window with worst-case |x| and per-cout Σ|w|."""
+    n = int(np.prod(w.shape[:-1]))
+    l1w = float(jnp.max(jnp.sum(jnp.abs(w), axis=tuple(range(w.ndim - 1)))))
+    xmax = float(jnp.max(jnp.abs(x)))
+    swm = float(jnp.max(sw))
+    sxf = float(sx)
+    return lipschitz * (
+        0.5 * sxf * l1w + 0.5 * swm * xmax * n + 0.25 * sxf * swm * n
+    )
+
+
+def _qops(x, w):
+    qw = qconv.quantize_weight(w)
+    sx = qconv.act_scale(x)
+    return qw, sx, qconv.quantize_act(x, sx)
+
+
+# -- 1-D kernels vs oracle + f32 bound ----------------------------------------
+
+@pytest.mark.parametrize("K,regime", [(3, "custom"), (7, "generic")])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv1d_w8a8_kernel(rng, K, regime, stride):
+    x = jnp.asarray(rng.normal(size=(2, 130, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, 8, 16)).astype(np.float32))
+    qw, sx, xq = _qops(x, w)
+    got = conv1d_quant_pallas(
+        xq, qw.q, qw.scale, None, x_scale=sx, mode="w8a8", stride=stride,
+        tile_l=48, regime=regime, interpret=True,
+    )
+    want = qconv.conv1d_q(x, qw, None, mode="w8a8", x_scale=sx, stride=stride)
+    np.testing.assert_allclose(got, want, **TIGHT)
+    f32 = ref.conv1d_ref(x, w, stride=stride)
+    bound = _quant_bound(x, w, sx, qw.scale)
+    assert float(jnp.max(jnp.abs(got - f32))) <= bound
+
+
+@pytest.mark.parametrize("K", [3, 33])
+def test_conv1d_w8a16_kernel(rng, K):
+    """Weight-only mode: f32 accumulation over register-dequantized taps."""
+    x = jnp.asarray(rng.normal(size=(1, 100, 6)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, 6, 10)).astype(np.float32))
+    qw = qconv.quantize_weight(w)
+    got = conv1d_quant_pallas(
+        x, qw.q, qw.scale, None, mode="w8a16", tile_l=32, interpret=True
+    )
+    want = qconv.conv1d_q(x, qw, None, mode="w8a16")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # weight-only error ≤ 0.5·s_w·Σ|x| per window (no activation term)
+    f32 = ref.conv1d_ref(x, w)
+    bound = float(jnp.max(qw.scale)) * 0.5 * float(
+        jnp.max(jnp.abs(x))
+    ) * K * 6 + 1e-4
+    assert float(jnp.max(jnp.abs(got - f32))) <= bound
+
+
+def test_conv1d_w8a8_blocked_512ch(rng):
+    """Channel-blocked path: Cin = Cout = 512 forces auto-blocking through
+    ops dispatch (int32 VMEM scratch revisits)."""
+    x = jnp.asarray(rng.normal(size=(1, 40, 512)).astype(np.float32) * 0.5)
+    w = jnp.asarray(rng.normal(size=(3, 512, 512)).astype(np.float32) * 0.05)
+    qw, sx, _ = _qops(x, w)
+    got = ops.conv1d(x, w, precision="w8a8", x_scale=sx, tile_l=16)
+    want = qconv.conv1d_q(x, qw, None, mode="w8a8", x_scale=sx)
+    np.testing.assert_allclose(got, want, **TIGHT)
+    f32 = ref.conv1d_ref(x, w)
+    assert float(jnp.max(jnp.abs(got - f32))) <= _quant_bound(
+        x, w, sx, qw.scale
+    )
+
+
+@pytest.mark.parametrize("activation", ["relu", "gelu", "silu"])
+def test_conv1d_w8a8_fused_epilogue(rng, activation):
+    """dequant→bias→activation fused on the final visit, incl. blocked."""
+    x = jnp.asarray(rng.normal(size=(2, 64, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(5, 8, 12)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(12,)).astype(np.float32))
+    qw, sx, xq = _qops(x, w)
+    got = conv1d_quant_pallas(
+        xq, qw.q, qw.scale, b, x_scale=sx, mode="w8a8",
+        activation=activation, tile_l=32, cin_block=4, interpret=True,
+    )
+    want = qconv.conv1d_q(
+        x, qw, b, mode="w8a8", x_scale=sx, activation=activation
+    )
+    np.testing.assert_allclose(got, want, **TIGHT)
+    f32 = ops.conv1d(x, w, bias=b, activation=activation)
+    assert float(jnp.max(jnp.abs(got - f32))) <= _quant_bound(
+        x, w, sx, qw.scale
+    )
+
+
+def test_conv1d_requant_chain(rng):
+    """out_scale fuses an int8 requant after the activation — chained
+    quantized convs never materialize f32 activations."""
+    x = jnp.asarray(rng.normal(size=(1, 60, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 8, 8)).astype(np.float32))
+    qw, sx, xq = _qops(x, w)
+    out_scale = jnp.float32(0.05)
+    got = conv1d_quant_pallas(
+        xq, qw.q, qw.scale, None, x_scale=sx, mode="w8a8",
+        activation="relu", out_scale=out_scale, tile_l=32, interpret=True,
+    )
+    assert got.dtype == jnp.int8
+    want = qconv.conv1d_q(
+        x, qw, None, mode="w8a8", x_scale=sx, activation="relu",
+        out_scale=out_scale,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -- 2-D kernels --------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "kh,kw,stride",
+    [(3, 3, (1, 1)), (5, 5, (2, 2)), (5, 5, (2, 3)), (19, 19, (1, 1))],
+)
+def test_conv2d_w8a8_kernel(rng, kh, kw, stride):
+    x = jnp.asarray(rng.normal(size=(2, 37, 31, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(kh, kw, 4, 8)).astype(np.float32))
+    qw, sx, xq = _qops(x, w)
+    got = conv2d_quant_pallas(
+        xq, qw.q, qw.scale, None, x_scale=sx, mode="w8a8", stride=stride,
+        tile_h=8, tile_w=8, interpret=True,
+    )
+    want = qconv.conv2d_q(x, qw, None, mode="w8a8", x_scale=sx, stride=stride)
+    np.testing.assert_allclose(got, want, **TIGHT)
+    f32 = ref.conv2d_ref(x, w, stride=stride)
+    assert float(jnp.max(jnp.abs(got - f32))) <= _quant_bound(
+        x, w, sx, qw.scale
+    )
+
+
+def test_conv2d_w8a8_blocked_epilogue(rng):
+    """Blocked channels + fused bias/silu through the ops dispatch."""
+    x = jnp.asarray(rng.normal(size=(1, 20, 20, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 16, 24)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(24,)).astype(np.float32))
+    qw, sx, _ = _qops(x, w)
+    got = ops.conv2d(
+        x, w, bias=b, activation="silu", precision="w8a8", x_scale=sx,
+        tile_h=8, tile_w=8, cin_block=8, cout_block=8,
+    )
+    want = qconv.conv2d_q(
+        x, qw, b, mode="w8a8", x_scale=sx, activation="silu"
+    )
+    np.testing.assert_allclose(got, want, **TIGHT)
+
+
+def test_conv2d_w8a16_kernel(rng):
+    x = jnp.asarray(rng.normal(size=(1, 24, 24, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(5, 5, 4, 8)).astype(np.float32))
+    qw = qconv.quantize_weight(w)
+    got = conv2d_quant_pallas(
+        x, qw.q, qw.scale, None, mode="w8a16", tile_h=8, tile_w=8,
+        interpret=True,
+    )
+    want = qconv.conv2d_q(x, qw, None, mode="w8a16")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fast_path_equals_exact(rng):
+    """The CPU wall-clock evaluation reorders integer sums only."""
+    x = jnp.asarray(rng.normal(size=(1, 18, 18, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(5, 5, 4, 8)).astype(np.float32))
+    qw, sx, _ = _qops(x, w)
+    a = qconv.conv2d_q(x, qw, None, mode="w8a8", x_scale=sx)
+    b = qconv.conv2d_q(x, qw, None, mode="w8a8", x_scale=sx,
+                       accumulate="fast")
+    np.testing.assert_allclose(a, b, **TIGHT)
+    c = qconv.conv2d_q_im2col(x, qw, x_scale=sx)
+    np.testing.assert_allclose(a, c, **TIGHT)
+
+
+# -- quantizers / calibration -------------------------------------------------
+
+def test_quantize_weight_per_cout(rng):
+    w = jnp.asarray(rng.normal(size=(3, 4, 6)).astype(np.float32))
+    qw = qconv.quantize_weight(w)
+    assert qw.q.dtype == jnp.int8 and qw.scale.shape == (6,)
+    err = jnp.abs(qw.dequant() - w)
+    assert bool((err <= qw.scale * 0.5 + 1e-6).all())
+
+
+def test_calibration_spec_and_context(rng):
+    calib = quant.Calibration(percentile=None)  # pure absmax
+    x = jnp.asarray(rng.normal(size=(2, 16, 4)).astype(np.float32))
+    with quant.collecting(calib):
+        quant.observe("site/a", x)
+        quant.observe("site/a", 2 * x)
+    quant.observe("site/a", 100 * x)  # outside context: ignored
+    assert calib.seen == ["site/a"]
+    spec = calib.spec()
+    want = 2 * float(jnp.max(jnp.abs(x))) / 127.0
+    np.testing.assert_allclose(float(spec["site/a"]["x_scale"]), want,
+                               rtol=1e-5)
+    assert calib.channel_absmax("site/a").shape == (4,)
+
+
+def test_calibration_skips_tracers(rng):
+    """Under jit the activation is a tracer — observation must no-op, not
+    crash (calibration passes are documented eager-only)."""
+    calib = quant.Calibration()
+
+    @jax.jit
+    def f(x):
+        quant.observe("site/jit", x)
+        return x * 2
+
+    with quant.collecting(calib):
+        f(jnp.ones((2, 3)))
+    assert calib.seen == []
+
+
+def test_calibration_percentile_clips_outliers(rng):
+    calib = quant.Calibration(percentile=99.0)
+    x = np.asarray(rng.normal(size=(1, 1000, 4)), np.float32)
+    x[0, 0, 0] = 1e6  # a single outlier must not blow up the scale
+    with quant.collecting(calib):
+        quant.observe("s", jnp.asarray(x))
+    assert float(calib.spec()["s"]["x_scale"]) < 100.0
+
+
+# -- model-level wiring -------------------------------------------------------
+
+def test_whisper_frontend_quantized(rng):
+    from repro.configs import get_config, smoke_config
+    from repro.models.whisper import Whisper, conv_frontend
+
+    cfg = smoke_config(get_config("whisper-medium")).replace(
+        conv_backend="sliding_pallas"
+    )
+    model = Whisper(cfg)
+    params = model.init(jax.random.key(0))
+    mels = jnp.asarray(rng.normal(size=(1, 32, 80)).astype(np.float32))
+
+    calib = quant.Calibration()
+    with quant.collecting(calib):
+        f32 = conv_frontend(params["frontend"], mels, cfg)
+    assert set(calib.seen) == {"whisper/conv1", "whisper/conv2"}
+
+    qparams = quant.quantize_params(params, spec=calib.spec())
+    assert quant.quantized_site_count(qparams) == 2
+    qcfg = cfg.replace(conv_precision="w8a8")
+    got = conv_frontend(qparams["frontend"], mels, qcfg)
+    assert got.shape == f32.shape
+    rel = float(jnp.max(jnp.abs(got - f32))) / (
+        float(jnp.max(jnp.abs(f32))) + 1e-9
+    )
+    assert rel < 0.1, f"w8a8 frontend drifted {rel:.3f} from f32"
+
+
+def test_quantize_params_scans_and_serves(rng):
+    """QuantizedWeight leaves flatten/scan like arrays: the jamba/mamba
+    stacked conv_w quantizes weight-only and still evaluates."""
+    from repro.models.mamba import mamba_defs, mamba_apply
+    from repro.configs import get_config, smoke_config
+    from repro.distributed.sharding import Runtime, init_params
+
+    cfg = smoke_config(get_config("jamba-1.5-large-398b"))
+    p = init_params(mamba_defs(cfg), jax.random.key(0), "float32")
+    x = jnp.asarray(rng.normal(size=(1, 16, cfg.d_model)).astype(np.float32))
+    y32, _ = mamba_apply(p, x, cfg, Runtime())
+    qp = quant.quantize_params({"mamba": p})["mamba"]
+    assert isinstance(qp["conv_w"], quant.QuantizedWeight)
+    yq, _ = mamba_apply(qp, x, cfg, Runtime())
+    rel = float(jnp.max(jnp.abs(yq - y32))) / (
+        float(jnp.max(jnp.abs(y32))) + 1e-9
+    )
+    assert rel < 0.05  # weight-only int8 on a k=4 depthwise conv
+
+
+def test_llava_patch_embed_quantized(rng):
+    from repro.models.llava import patch_embed
+
+    w = jnp.asarray(rng.normal(size=(14, 14, 3, 32)).astype(np.float32) * 0.1)
+    img = jnp.asarray(rng.normal(size=(1, 28, 28, 3)).astype(np.float32))
+    f32 = patch_embed(w, img)
+    got = patch_embed(qconv.quantize_weight(w), img, precision="w8a8")
+    rel = float(jnp.max(jnp.abs(got - f32))) / (
+        float(jnp.max(jnp.abs(f32))) + 1e-9
+    )
+    assert got.shape == f32.shape and rel < 0.1
+
+
+def test_layers_conv2d_bias_act_quant_backends_agree(rng):
+    """The pure-JAX backend's quant path and the Pallas interpret path
+    compute the same int8 contract."""
+    from repro.models import layers as L
+
+    x = jnp.asarray(rng.normal(size=(1, 16, 16, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    qw = qconv.quantize_weight(w, qconv.act_scale(x))
+    a = L.conv2d_bias_act(x, qw, None, activation="relu", padding="SAME",
+                          backend="sliding", precision="w8a8")
+    b = L.conv2d_bias_act(x, qw, None, activation="relu", padding="SAME",
+                          backend="sliding_pallas", precision="w8a8")
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# -- autotune key integration -------------------------------------------------
+
+def test_quant_autotune_key_consulted(rng, tmp_path, monkeypatch):
+    """The quant dispatch resolves tilings under the precision-named shape
+    key — a tuned entry there must be honored (and not collide with the
+    float key for the same shape)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "t.json"))
+    autotune.invalidate()
+    key = autotune.conv1d_key(1, 64, 8, 8, 3, 1, "w8a8")
+    assert key.endswith("|w8a8")
+    autotune.record(key, {"tile_l": 16, "cin_block": 4, "cout_block": 0,
+                          "regime": "generic"})
+    x = jnp.asarray(rng.normal(size=(1, 64, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 8, 8)).astype(np.float32))
+    qw, sx, _ = _qops(x, w)
+    got = ops.conv1d(x, w, precision="w8a8", x_scale=sx)  # uses tuned entry
+    want = qconv.conv1d_q(x, qw, None, mode="w8a8", x_scale=sx)
+    np.testing.assert_allclose(got, want, **TIGHT)
+    autotune.invalidate()
+
+
+def test_quant_rejects_non_sliding_backends(rng):
+    x = jnp.asarray(rng.normal(size=(1, 16, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 4, 4)).astype(np.float32))
+    with pytest.raises(ValueError):
+        ops.conv1d(x, w, backend="im2col_gemm", precision="w8a8")
+    with pytest.raises(ValueError):
+        ops.conv1d(x, w, precision="w8a8", dilation=2)
