@@ -20,19 +20,23 @@ CIN = COUT = 32
 SIZES = [3, 5, 9, 13, 17, 25, 31]
 
 
-def machine_peak_gflops() -> float:
-    """Dense f32 GEMM throughput — the practical roofline on this core."""
+def machine_peak_gflops() -> tuple[float, float]:
+    """Dense f32 GEMM throughput — the practical roofline on this core.
+    Returns (seconds_per_gemm, gflops) so the BENCH row records the real
+    measured probe time (a hardcoded 0.0 us_per_call made the JSON row a
+    silent zero — rows must carry their measurement)."""
     n = 1024
     a = jnp.ones((n, n), jnp.float32)
     f = jax.jit(lambda a, b: a @ b)
     t = time_fn(f, a, a)
-    return 2 * n ** 3 / t / 1e9
+    return t, 2 * n ** 3 / t / 1e9
 
 
 def run(sizes=SIZES) -> list[str]:
     rng = np.random.default_rng(0)
-    peak = machine_peak_gflops()
-    out = [row("fig2/machine_peak_gemm", 0.0, f"gflops={peak:.1f}")]
+    t_peak, peak = machine_peak_gflops()
+    out = [row("fig2/machine_peak_gemm", t_peak,
+               f"gflops={peak:.1f} n=1024 f32")]
     x = jnp.asarray(rng.normal(size=(1, H, W, CIN)).astype(np.float32))
     for k in sizes:
         wgt = jnp.asarray(rng.normal(size=(k, k, CIN, COUT)).astype(np.float32))

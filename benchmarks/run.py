@@ -1,7 +1,7 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--autotune] [--grad]
-        [--quant]
+        [--quant] [--serve]
 
 Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_conv.json``
 (name → us_per_call) alongside it so the perf trajectory is machine-
@@ -16,6 +16,9 @@ trackable across PRs:
   quant/*     (--quant) int8 PTQ inference (repro.quant) vs bf16 vs f32
               sliding, and vs int8 im2col — the paper's conclusion claim
               that compression methods compose with the technique
+  serve/*     (--serve) smoke-config greedy decode with the fp KV cache vs
+              the int8 (kv_quant) cache: per-token time, cache bytes, and
+              greedy-tokens-match check
 
 ``--autotune`` runs the shape-keyed search (``repro.kernels.autotune``) over
 every fig1/fig2/conv1d conv shape, persists winners in the JSON tuning cache
@@ -90,6 +93,23 @@ def autotune_rows(quick: bool) -> list[str]:
         w = jnp.asarray(rng.normal(size=(k, C, C)).astype(np.float32))
         r = autotune.autotune_conv1d(x, w)
         rows.append(f"autotune/conv1d_L{L}_k{k},{r.best_us:.1f},{fmt(r)}")
+        # the quant key for the same shape: with BOTH keys measured, the
+        # ops.conv1d dispatch can fall back to the faster precision path
+        # for shapes where 1-D int8 regresses (per-tap accumulator-bound)
+        rq = autotune.autotune_conv1d(x, w, precision="w8a8")
+        rows.append(
+            f"autotune/conv1d_L{L}_k{k}_w8a8,{rq.best_us:.1f},"
+            f"{fmt(rq)} vs_fp={r.best_us / rq.best_us:.2f}x"
+        )
+    # max-pool evaluation method (scan vs shift): the crossover is
+    # window-dependent — tuned entries feed ops.pool1d's backend selection
+    xp = jnp.asarray(rng.normal(size=(1, L, C)).astype(np.float32))
+    for wdw in [4, 256] if quick else [4, 16, 64, 256]:
+        r = autotune.autotune_pool1d(xp, window=wdw, op="max")
+        rows.append(
+            f"autotune/pool1d_L{L}_w{wdw},{r.best_us:.1f},"
+            f"best={r.best['method']} speedup_vs_default={r.speedup:.2f}x"
+        )
     return rows
 
 
@@ -205,11 +225,12 @@ def quant_rows(quick: bool) -> list[str]:
                 f"sliding_vs_im2col={t_col / t['int8']:.2f}x",
             ))
 
-    # 2-D: the fig1 128² sweep (k=5 is the acceptance shape)
+    # 2-D: the fig1 128² sweep (k=5 is the acceptance shape; k=31 runs the
+    # int8 compound regime — chunked reduction, no unrolled-tap fallback)
     h, cin = fig1_speedup.H, fig1_speedup.CIN
     x = jnp.asarray(rng.normal(size=(1, h, h, cin)).astype(np.float32))
     sx = quant.act_scale(x)
-    for k in [3, 5, 9] if quick else fig1_speedup.FILTER_SIZES:
+    for k in [3, 5, 9, 31] if quick else fig1_speedup.FILTER_SIZES:
         w = jnp.asarray(rng.normal(size=(k, k, cin, cin)).astype(np.float32))
         qw = quant.quantize_weight(w, sx)
         i8 = jax.jit(functools.partial(
@@ -247,11 +268,67 @@ def quant_rows(quick: bool) -> list[str]:
     return rows
 
 
+def serve_rows(quick: bool) -> list[str]:
+    """``serve/*`` rows: smoke-config greedy decode, fp KV cache vs int8
+    (``kv_quant``) — per-token decode wall time, cache bytes, and a
+    tokens-match check (the int8 cache must not change greedy output)."""
+    import time as _time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import row
+    from repro.configs import get_config, smoke_config
+    from repro.distributed.sharding import Runtime
+    from repro.launch import serve as S
+    from repro.models import build_model
+
+    rows = []
+    B, P, G = 2, 16, 8
+    base = smoke_config(get_config("qwen3-1.7b"))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(2, base.vocab_size, size=(B, P)), jnp.int32
+    )
+    cache_len = P + G
+    toks, nbytes, times = {}, {}, {}
+    for tag, kvq in (("fp", "fp"), ("kv8", "int8")):
+        cfg = base.replace(kv_quant=kvq)
+        model = build_model(cfg, Runtime())
+        params = model.init(jax.random.key(0))
+        tk = None
+        for it in range(2):  # first run pays jit compile; time the second
+            t0 = _time.perf_counter()
+            tk, _ = S.generate(
+                model, params, prompts, gen_len=G, cache_len=cache_len
+            )
+            jax.block_until_ready(tk)
+            times[tag] = _time.perf_counter() - t0
+        toks[tag] = np.asarray(tk)
+        nbytes[tag] = S.cache_nbytes(
+            model.cache_defs(B, cache_len), cfg.param_dtype
+        )
+    match = bool((toks["fp"] == toks["kv8"]).all())
+    rows.append(row(
+        "serve/qwen3_smoke_decode_fp", times["fp"] / (B * G),
+        f"cache_bytes={nbytes['fp']}",
+    ))
+    rows.append(row(
+        "serve/qwen3_smoke_decode_kv8", times["kv8"] / (B * G),
+        f"cache_bytes={nbytes['kv8']} "
+        f"bytes_ratio={nbytes['fp'] / nbytes['kv8']:.2f}x "
+        f"tokens_match={match}",
+    ))
+    return rows
+
+
 def main() -> None:
     quick = "--quick" in sys.argv
     tune = "--autotune" in sys.argv
     grad = "--grad" in sys.argv
     qnt = "--quant" in sys.argv
+    srv = "--serve" in sys.argv
     from benchmarks import fig1_speedup, fig2_throughput, roofline_report, table_conv1d
 
     rows: list[str] = []
@@ -272,6 +349,8 @@ def main() -> None:
         rows += grad_rows(quick)
     if qnt:
         rows += quant_rows(quick)
+    if srv:
+        rows += serve_rows(quick)
     print("name,us_per_call,derived")
     for r in rows:
         print(r)

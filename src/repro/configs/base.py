@@ -59,6 +59,10 @@ class ModelConfig:
     # int8 PTQ of the conv path: "fp" | "w8a8" | "w8a16" (repro.quant);
     # quantized weights are swapped into params by quant.apply
     conv_precision: str = "fp"
+    # serving KV-cache storage: "fp" (param_dtype) | "int8" (per-head-dim-row
+    # absmax int8 + f32 scale leaves; dequantized at attention read —
+    # DESIGN.md §8, `serve --kv-quant int8`)
+    kv_quant: str = "fp"
     # tokenizer EOS id for serving slot recycling (per-arch; 1 is the
     # llama-family convention and the synthetic-data default)
     eos_id: int = 1

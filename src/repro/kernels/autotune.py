@@ -105,6 +105,19 @@ def conv2d_key(
     return base + "|grad" if grad else base
 
 
+def conv1d_dw_key(B, L, C, K, stride, dtype) -> str:
+    """Depthwise conv1d shape key (the mamba conv path; ``dtype`` is the
+    precision name for the quantized kernels, e.g. "w8a8")."""
+    return f"conv1ddw|B{B}|L{L}|C{C}|K{K}|s{stride}|{dtype}"
+
+
+def pool1d_key(B, L, C, window, op, dtype) -> str:
+    """Sliding-pool shape key; the tuned entry's ``method`` field selects
+    the kernel evaluation (``scan`` two-phase vs ``shift`` O(n·w) loop —
+    the crossover is shape-dependent, see ``autotune_pool1d``)."""
+    return f"pool1d|B{B}|L{L}|C{C}|w{window}|{op}|{dtype}"
+
+
 def lookup(key: str) -> dict[str, Any] | None:
     """Tuned config for a shape key, or None if never tuned."""
     return _load().get(key)
@@ -196,17 +209,36 @@ def autotune_conv1d(
     key = conv1d_key(B, L, Cin, Cout, K, stride, dtype_key)
     out_len = (L - K) // stride + 1
 
+    # quant tuning is PINNED to the quant path: ops.conv1d exempts calls
+    # with explicit tile/block/regime arguments (every candidate here) from
+    # its measured-regression fallback — otherwise a second tuning pass
+    # over a persistent cache would time the float kernel and record it
+    # under the quant key, disarming the very comparison it feeds. w8a8
+    # additionally pre-quantizes the operands so every candidate measures
+    # the kernel on identical int8 inputs (the excluded quantize-act pass
+    # is one elementwise op, negligible vs the conv itself).
+    kw = {}
+    xx, ww = x, w
+    if precision == "w8a8":
+        from repro.quant import qconv
+
+        qw = qconv.quantize_weight(w)
+        sx = qconv.act_scale(x)
+        xx = qconv.quantize_act(x, sx)
+        ww = qw.q
+        kw = dict(w_scale=qw.scale, x_scale=sx)
+
     def run(cfg):
         # pass blocks through verbatim: explicit 0 means force-unblocked in
         # ops (None would re-consult the cache / auto-block heuristic and
         # measure a different config than the one recorded)
         return ops.conv1d(
-            x, w, stride=stride, backend="sliding",
+            xx, ww, stride=stride, backend="sliding",
             tile_l=cfg["tile_l"],
             cin_block=cfg["cin_block"],
             cout_block=cfg["cout_block"],
             regime=cfg["regime"], interpret=interpret,
-            precision=precision,
+            precision=precision, **kw,
         )
 
     tiles = [
@@ -275,6 +307,73 @@ def autotune_conv2d(
         "cin_block": 0, "cout_block": 0, "regime": regime,
     }
     return _search(key, run, cands, default)
+
+
+def autotune_conv1d_depthwise(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    interpret: bool | None = None,
+    tile_candidates: Iterable[int] | None = None,
+    precision: str = "w8a8",
+) -> Result:
+    """Search tile/block space for the quantized depthwise conv1d kernel;
+    persists the winner under the ``conv1ddw|…|<precision>`` key."""
+    from repro.kernels import ops
+    from repro.kernels.sliding_conv1d import DEFAULT_TILE_L
+
+    B, L, C = x.shape
+    K = w.shape[0]
+    key = conv1d_dw_key(B, L, C, K, stride, precision)
+    out_len = (L - K) // stride + 1
+
+    def run(cfg):
+        return ops.conv1d_depthwise(
+            x, w, stride=stride, padding="VALID", tile_l=cfg["tile_l"],
+            c_block=cfg["c_block"], interpret=interpret, precision=precision,
+        )
+
+    tiles = [
+        t for t in (tile_candidates or TILE_L_CANDIDATES) if t <= out_len
+    ] or [min(DEFAULT_TILE_L, out_len)]
+    cands = [
+        {"tile_l": t, "c_block": cb}
+        for t in tiles
+        for cb in _blocks_for(C)
+    ]
+    default = {"tile_l": min(DEFAULT_TILE_L, out_len), "c_block": 0}
+    return _search(key, run, cands, default)
+
+
+def autotune_pool1d(
+    x: jax.Array,
+    *,
+    window: int,
+    op: str = "max",
+    interpret: bool | None = None,
+) -> Result:
+    """Measure the pooling kernel's evaluation methods for a shape and
+    persist the winner's ``method``. For max pooling the two candidates are
+    the van Herk / Gil-Werman two-phase scan (O(n), window-independent) and
+    the shift-and-max loop (O(n·w) but lower constant) — the shift form
+    wins for small windows and loses from w≈64 up (the BENCH pool/w256 row
+    showed the hardcoded choice losing 1.4×), so the backend is selected
+    per window size from this cache instead of being hardcoded."""
+    from repro.kernels import ops
+
+    B, L, C = x.shape
+    key = pool1d_key(B, L, C, window, op, x.dtype.name)
+
+    def run(cfg):
+        return ops.pool1d(
+            x, window=window, op=op, method=cfg["method"],
+            interpret=interpret,
+        )
+
+    methods = ["scan", "shift"] if op == "max" else ["scan"]
+    default = {"method": methods[0]}
+    return _search(key, run, [{"method": m} for m in methods], default)
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,7 @@ Call sites across the framework use these wrappers, which
 from __future__ import annotations
 
 import functools
+import sys
 from typing import Literal, NamedTuple
 
 import jax
@@ -196,6 +197,39 @@ def _check_quant_dispatch(precision, backend, dilation):
         raise ValueError("quantized convs cover dilation == 1 only")
 
 
+# shape key → reason for shapes where the quant path measurably loses to the
+# float path and dispatch fell back (logged once per shape; inspectable)
+_QUANT_FALLBACKS: dict[str, str] = {}
+
+
+def _quant_fallback_reason(x, w, stride, precision) -> str | None:
+    """Measured-regression guard for the quant 1-D dispatch: when the
+    autotune cache holds timings for BOTH this shape's quant path and its
+    float path and the float one is faster (the per-tap 1-D regime is
+    accumulator-traffic-bound — int8 operands buy nothing once upcast, so
+    small-K 1-D shapes can lose to bf16/f32), dispatch the float path
+    instead of silently serving the slower kernel. Only applies when the
+    caller isn't pinned to int8 (float input, no fused requant)."""
+    B, L, Cin = x.shape
+    K, _, Cout = w.shape
+    kq = autotune.conv1d_key(B, L, Cin, Cout, K, stride, precision)
+    kf = autotune.conv1d_key(B, L, Cin, Cout, K, stride, x.dtype.name)
+    tq, tf = autotune.lookup(kq), autotune.lookup(kf)
+    if not (tq and tf):
+        return None
+    us_q, us_f = tq.get("us"), tf.get("us")
+    if us_q is None or us_f is None or us_q <= us_f:
+        return None
+    reason = (
+        f"tuned {precision} path {us_q:.0f}us > {x.dtype.name} "
+        f"{us_f:.0f}us for {kq}; serving the float path"
+    )
+    if kq not in _QUANT_FALLBACKS:
+        _QUANT_FALLBACKS[kq] = reason
+        print(f"[quant] fallback: {reason}", file=sys.stderr)
+    return reason
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _conv1d_sliding_op(cfg: _Conv1dCfg, x, w, bias):
     return sliding_conv1d.conv1d_sliding_pallas(
@@ -281,6 +315,33 @@ def conv1d(
     if precision != "fp":
         _check_quant_dispatch(precision, backend, dilation)
         x = _pad1d(x, padding, w.shape[0], 1)
+        explicit_cfg = not (
+            tile_l is None and cin_block is None and cout_block is None
+            and regime is None
+        )
+        if (
+            x.dtype != jnp.int8
+            and out_scale is None
+            and not explicit_cfg
+            and _quant_fallback_reason(x, w, stride, precision) is not None
+        ):
+            # measured regression: run the float sliding path instead.
+            # Pinned to the quant kernels regardless: int8 inputs / fused
+            # requant (chained sites must keep their int8 contract) and
+            # calls with explicit tile/block/regime arguments (the
+            # autotuner measures the exact config it asked for — falling
+            # back would record the float path under the quant key).
+            wf = w
+            if w.dtype == jnp.int8:
+                if w_scale is None:
+                    raise ValueError("int8 weights need their w_scale")
+                wf = (w.astype(jnp.float32) * w_scale).astype(x.dtype)
+            return conv1d(
+                x, wf, stride=stride, padding="VALID", backend=backend,
+                bias=bias, activation=activation, tile_l=tile_l,
+                cin_block=cin_block, cout_block=cout_block, regime=regime,
+                bwd_tile_l=bwd_tile_l, interpret=interpret,
+            )
         x, w, w_scale, x_scale, out_dtype = _quant_operands(
             x, w, w_scale, x_scale, precision
         )
@@ -395,14 +456,47 @@ def conv1d_depthwise(
     c_block: int | None = None,
     bwd_tile_l: int | None = None,
     interpret: bool | None = None,
+    precision: Precision = "fp",
+    w_scale: jax.Array | None = None,
+    x_scale: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Depthwise 1-D sliding conv (Mamba conv path). x: (B,L,C), w: (K,C).
 
     conv→bias→activation is one kernel launch (fused epilogue); the path is
     differentiable end-to-end (Pallas backward kernels).
+
+    ``precision`` ∈ {"w8a8", "w8a16"} dispatches the int8 depthwise VPU
+    kernel (inference-only): ``w`` may be pre-quantized int8 (+ ``w_scale``
+    per-channel over the tap axis) or float (quantized here); for w8a8 the
+    input quantizes onto ``x_scale`` (dynamic absmax when None). Tuned
+    under the depthwise precision-named autotune shape key.
     """
     interpret = use_interpret() if interpret is None else interpret
     x = _pad1d(x, padding, w.shape[0], 1)
+    if precision != "fp":
+        from repro.quant import qconv
+        from repro.quant.apply import quantize_depthwise_weight
+
+        out_dtype = jnp.float32 if x.dtype == jnp.int8 else x.dtype
+        if w.dtype != jnp.int8:
+            qw = quantize_depthwise_weight(w)
+            w, w_scale = qw.q, qw.scale
+        elif w_scale is None:
+            raise ValueError("int8 weights need their w_scale")
+        if precision == "w8a8" and x.dtype != jnp.int8:
+            x_scale = qconv.act_scale(x) if x_scale is None else x_scale
+            x = qconv.quantize_act(x, x_scale)
+        B, L, C = x.shape
+        key = autotune.conv1d_dw_key(B, L, C, w.shape[0], stride, precision)
+        cfg = _tuned_fill(key, tile_l=tile_l, c_block=c_block)
+        return sliding_conv_quant.conv1d_depthwise_quant_pallas(
+            x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
+            mode=precision, stride=stride,
+            tile_l=cfg["tile_l"] or sliding_conv1d.DEFAULT_TILE_L,
+            c_block=_auto_block(C, cfg["c_block"]), activation=activation,
+            out_dtype=out_dtype, interpret=interpret,
+        )
     tile_l = sliding_conv1d.DEFAULT_TILE_L if tile_l is None else tile_l
     cfg = _DepthwiseCfg(
         stride=stride, tile_l=tile_l,
@@ -628,22 +722,22 @@ def matmul(a: jax.Array, b: jax.Array, *, interpret: bool | None = None) -> jax.
 # pool1d — custom VJP
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _pool1d_op(window: int, op: str, interpret: bool, x):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _pool1d_op(window: int, op: str, method: str, interpret: bool, x):
     return sliding_pool.sliding_pool_pallas(
-        x, window=window, op=op, interpret=interpret
+        x, window=window, op=op, method=method, interpret=interpret
     )
 
 
-def _pool1d_fwd(window, op, interpret, x):
+def _pool1d_fwd(window, op, method, interpret, x):
     y = sliding_pool.sliding_pool_pallas(
-        x, window=window, op=op, interpret=interpret
+        x, window=window, op=op, method=method, interpret=interpret
     )
     # sum/avg backward needs no residual; max needs (x, y) as argmax witness
     return y, ((x, y) if op == "max" else None)
 
 
-def _pool1d_bwd(window, op, interpret, res, dy):
+def _pool1d_bwd(window, op, method, interpret, res, dy):
     if op == "max":
         x, y = res
         dx = sliding_pool.max_pool_bwd_pallas(
@@ -659,16 +753,41 @@ def _pool1d_bwd(window, op, interpret, res, dy):
 
 _pool1d_op.defvjp(_pool1d_fwd, _pool1d_bwd)
 
+# max-pool method crossover when the shape was never tuned: shift-and-max
+# (lower constant) below, two-phase scan (O(n), window-independent) from
+# here up — the measured BENCH crossover sits between w=16 and w=64
+POOL_SHIFT_MAX_WINDOW = 32
+
+
+def _pool_method(x, window: int, op: str, explicit: str | None) -> str:
+    """explicit arg → tuned cache entry (``autotune_pool1d``) → heuristic."""
+    if explicit is not None:
+        return explicit
+    if op != "max":
+        return "scan"
+    B, L, C = x.shape
+    tuned = autotune.lookup(autotune.pool1d_key(B, L, C, window, op,
+                                                x.dtype.name))
+    if tuned and tuned.get("method") in ("scan", "shift"):
+        return tuned["method"]
+    return "shift" if window < POOL_SHIFT_MAX_WINDOW else "scan"
+
 
 def pool1d(
     x: jax.Array,
     *,
     window: int,
     op: str = "sum",
+    method: str | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """VALID sliding pooling along axis 1. x: (B,L,C). Differentiable:
     sum/avg backward reuses the two-phase scan kernel on the padded
-    gradient; max backward is the shift-and-select Pallas kernel."""
+    gradient; max backward is the shift-and-select Pallas kernel.
+
+    ``method`` picks the max-pool forward evaluation ("scan" | "shift");
+    None resolves it per shape from the autotune cache (falling back to the
+    window-size crossover heuristic) instead of hardcoding one form."""
     interpret = use_interpret() if interpret is None else interpret
-    return _pool1d_op(window, op, interpret, x)
+    return _pool1d_op(window, op, _pool_method(x, window, op, method),
+                      interpret, x)

@@ -22,10 +22,18 @@ the kernel, so chained quantized convs never materialize f32 activations.
 Grid/blocking structure is the forward kernels' (sliding_conv1d/2d):
 ``(B, spatial tiles…, Cout blocks, Cin-block reduction)`` with halo input
 tiles via ``pl.unblocked`` index maps and revisit-accumulation in VMEM
-scratch — **int32 scratch** for w8a8, f32 for w8a16. Regimes ``custom``
-(tap-stacked single matmul, K ∈ {3,5}) and ``generic`` (unrolled tap
-loop) are supported; ``compound`` filter sizes fall back to the unrolled
-loop (large-K int8 chunking is a ROADMAP item).
+scratch — **int32 scratch** for w8a8, f32 for w8a16. All three regimes
+are supported: ``custom`` (tap-stacked single matmul, K ∈ {3,5}),
+``generic`` (unrolled tap loop, K ≤ 17), and ``compound`` (K > 17) —
+taps/filter-rows processed in ``TAP_CHUNK``/``ROW_CHUNK`` chunks via the
+reduction grid dimension revisiting the output block, exactly the f32
+kernels' structure, so large quantized filters stay VMEM-bounded instead
+of unrolling the whole tap range.
+
+The **depthwise** variant (``conv1d_depthwise_quant_pallas``) is a VPU
+kernel: per-tap shifted elementwise int8×int8 FMA with int32 accumulation
+and per-channel dequant in the epilogue — the mamba/jamba serving conv
+runs int8 activations, not just register-dequantized weights.
 
 Quantization of the *input* activation (``round(x / s_x)``) happens in the
 dispatch layer (one elementwise pass), not here: x arrives int8 for w8a8.
@@ -43,12 +51,18 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.sliding_conv1d import (
     DEFAULT_TILE_L,
+    TAP_CHUNK,
     _pad_axis,
     _resolve_block,
     _slide,
     apply_activation,
 )
-from repro.kernels.sliding_conv2d import DEFAULT_TILE_H, DEFAULT_TILE_W, _shifted
+from repro.kernels.sliding_conv2d import (
+    DEFAULT_TILE_H,
+    DEFAULT_TILE_W,
+    ROW_CHUNK,
+    _shifted,
+)
 
 
 def _acc_dtype(w8a8: bool):
@@ -169,11 +183,14 @@ def _qkernel_2d(
 
 
 def _quant_regime(regime: str | None, k: int) -> str:
-    """custom for the paper's k ∈ {3,5}, else the unrolled tap loop
-    (compound large-K chunking is not implemented for int8 yet)."""
-    if regime in ("custom", "generic"):
+    """custom for the paper's k ∈ {3,5}, unrolled tap loop up to K=17,
+    TAP_CHUNK/ROW_CHUNK-chunked reduction grid above (same thresholds as
+    the f32 ``repro.core.conv.regime_for``)."""
+    if regime in ("custom", "generic", "compound"):
         return regime
-    return "custom" if k in (3, 5) else "generic"
+    if k in (3, 5):
+        return "custom"
+    return "generic" if k <= 17 else "compound"
 
 
 def _scales(w_scale, x_scale, cout, n_co, ob, w8a8):
@@ -258,21 +275,59 @@ def conv1d_quant_pallas(
     bias2d = _bias_row(bias, Cout, n_co, ob)
 
     requant = out_scale is not None
-    n_red = n_ci
-    kernel = functools.partial(
-        _qkernel_1d, taps=K, tile_l=tile_l, stride=stride, n_red=n_red,
-        activation=activation, w8a8=w8a8, requant=requant, regime=regime,
-    )
-    in_specs = [
-        pl.BlockSpec(
-            (1, halo, cb),
-            lambda b, i, co, r: (b, i * tile_l * stride, r * cb),
-            indexing_mode=pl.unblocked,
-        ),
-        pl.BlockSpec((K, cb, ob), lambda b, i, co, r: (0, r, co)),
-        pl.BlockSpec((1, ob), lambda b, i, co, r: (0, co)),  # dequant scale
-        pl.BlockSpec((1, ob), lambda b, i, co, r: (0, co)),  # bias
-    ]
+    if regime == "compound":
+        # large-K chunking (the f32 compound structure): the reduction grid
+        # sweeps Cin blocks × tap chunks; chunk c covers taps
+        # [c·TAP_CHUNK, (c+1)·TAP_CHUNK). The kernel body is the unrolled
+        # loop over ONE chunk (taps=TAP_CHUNK), so the VMEM working set is
+        # chunk-bounded regardless of K.
+        n_chunks = pl.cdiv(K, TAP_CHUNK)
+        Kp = n_chunks * TAP_CHUNK
+        if Kp > K:  # zero taps contribute nothing (int8 zeros)
+            w_q = jnp.pad(w_q, ((0, Kp - K), (0, 0), (0, 0)))
+            x = jnp.pad(x, ((0, 0), (0, Kp - K), (0, 0)))
+        n_red = n_ci * n_chunks
+        chunk_halo = (tile_l - 1) * stride + TAP_CHUNK
+        kernel = functools.partial(
+            _qkernel_1d, taps=TAP_CHUNK, tile_l=tile_l, stride=stride,
+            n_red=n_red, activation=activation, w8a8=w8a8, requant=requant,
+            regime="generic",
+        )
+        # reduction index r decomposes as (cin block, tap chunk): the tap
+        # chunk is fastest so a cin block's taps complete consecutively
+        in_specs = [
+            pl.BlockSpec(
+                (1, chunk_halo, cb),
+                lambda b, i, co, r: (
+                    b,
+                    i * tile_l * stride + (r % n_chunks) * TAP_CHUNK,
+                    (r // n_chunks) * cb,
+                ),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec(
+                (TAP_CHUNK, cb, ob),
+                lambda b, i, co, r: (r % n_chunks, r // n_chunks, co),
+            ),
+            pl.BlockSpec((1, ob), lambda b, i, co, r: (0, co)),
+            pl.BlockSpec((1, ob), lambda b, i, co, r: (0, co)),
+        ]
+    else:
+        n_red = n_ci
+        kernel = functools.partial(
+            _qkernel_1d, taps=K, tile_l=tile_l, stride=stride, n_red=n_red,
+            activation=activation, w8a8=w8a8, requant=requant, regime=regime,
+        )
+        in_specs = [
+            pl.BlockSpec(
+                (1, halo, cb),
+                lambda b, i, co, r: (b, i * tile_l * stride, r * cb),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec((K, cb, ob), lambda b, i, co, r: (0, r, co)),
+            pl.BlockSpec((1, ob), lambda b, i, co, r: (0, co)),  # dequant scale
+            pl.BlockSpec((1, ob), lambda b, i, co, r: (0, co)),  # bias
+        ]
     args = [x, w_q, scale2d, bias2d]
     if requant:
         in_specs.append(pl.BlockSpec((1, 1), lambda b, i, co, r: (0, 0)))
@@ -336,11 +391,12 @@ def conv2d_quant_pallas(
         raise ValueError(
             f"filter ({kh},{kw}) (stride {stride}) exceeds input ({H},{W})"
         )
-    regime = (
-        regime
-        if regime in ("custom", "generic")
-        else ("custom" if (kh == kw and kh in (3, 5)) else "generic")
-    )
+    if regime not in ("custom", "generic", "compound"):
+        regime = (
+            "custom"
+            if (kh == kw and kh in (3, 5))
+            else ("generic" if kw <= 17 else "compound")
+        )
     th = min(tile_h, oh)
     tw = min(tile_w, ow)
     nh = pl.cdiv(oh, th)
@@ -368,21 +424,58 @@ def conv2d_quant_pallas(
     bias2d = _bias_row(bias, Cout, n_co, ob)
 
     requant = out_scale is not None
-    n_red = n_ci
-    kernel = functools.partial(
-        _qkernel_2d, kh=kh, kw=kw, th=th, tw=tw, sh=sh, sw=sw, n_red=n_red,
-        activation=activation, w8a8=w8a8, requant=requant, regime=regime,
-    )
-    in_specs = [
-        pl.BlockSpec(
-            (1, halo_h, halo_w, cb),
-            lambda b, i, j, co, r: (b, i * th * sh, j * tw * sw, r * cb),
-            indexing_mode=pl.unblocked,
-        ),
-        pl.BlockSpec((kh, kw, cb, ob), lambda b, i, j, co, r: (0, 0, r, co)),
-        pl.BlockSpec((1, ob), lambda b, i, j, co, r: (0, co)),
-        pl.BlockSpec((1, ob), lambda b, i, j, co, r: (0, co)),
-    ]
+    if regime == "compound":
+        # filter-ROW chunking (the f32 compound structure): reduction grid
+        # sweeps Cin blocks × row chunks, the body unrolls ROW_CHUNK×kw taps
+        n_chunks = pl.cdiv(kh, ROW_CHUNK)
+        khp = n_chunks * ROW_CHUNK
+        if khp > kh:
+            w_q = jnp.pad(w_q, ((0, khp - kh), (0, 0), (0, 0), (0, 0)))
+            x = jnp.pad(x, ((0, 0), (0, khp - kh), (0, 0), (0, 0)))
+        n_red = n_ci * n_chunks
+        chunk_halo_h = (th - 1) * sh + ROW_CHUNK
+        kernel = functools.partial(
+            _qkernel_2d, kh=ROW_CHUNK, kw=kw, th=th, tw=tw, sh=sh, sw=sw,
+            n_red=n_red, activation=activation, w8a8=w8a8, requant=requant,
+            regime="generic",
+        )
+        in_specs = [
+            pl.BlockSpec(
+                (1, chunk_halo_h, halo_w, cb),
+                lambda b, i, j, co, r: (
+                    b,
+                    i * th * sh + (r % n_chunks) * ROW_CHUNK,
+                    j * tw * sw,
+                    (r // n_chunks) * cb,
+                ),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec(
+                (ROW_CHUNK, kw, cb, ob),
+                lambda b, i, j, co, r: (r % n_chunks, 0, r // n_chunks, co),
+            ),
+            pl.BlockSpec((1, ob), lambda b, i, j, co, r: (0, co)),
+            pl.BlockSpec((1, ob), lambda b, i, j, co, r: (0, co)),
+        ]
+    else:
+        n_red = n_ci
+        kernel = functools.partial(
+            _qkernel_2d, kh=kh, kw=kw, th=th, tw=tw, sh=sh, sw=sw,
+            n_red=n_red, activation=activation, w8a8=w8a8, requant=requant,
+            regime=regime,
+        )
+        in_specs = [
+            pl.BlockSpec(
+                (1, halo_h, halo_w, cb),
+                lambda b, i, j, co, r: (b, i * th * sh, j * tw * sw, r * cb),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec(
+                (kh, kw, cb, ob), lambda b, i, j, co, r: (0, 0, r, co)
+            ),
+            pl.BlockSpec((1, ob), lambda b, i, j, co, r: (0, co)),
+            pl.BlockSpec((1, ob), lambda b, i, j, co, r: (0, co)),
+        ]
     args = [x, w_q, scale2d, bias2d]
     if requant:
         in_specs.append(pl.BlockSpec((1, 1), lambda b, i, j, co, r: (0, 0)))
@@ -404,3 +497,114 @@ def conv2d_quant_pallas(
         interpret=interpret,
     )(*args)
     return out[:, :oh, :ow, :Cout]
+
+
+# ---------------------------------------------------------------------------
+# depthwise (VPU) int8 kernel — the mamba/jamba serving conv
+# ---------------------------------------------------------------------------
+
+def _qkernel_depthwise(
+    x_ref, w_ref, s_ref, b_ref, *rest, taps, tile_l, stride, activation,
+    w8a8, requant,
+):
+    """int8 depthwise body: per-tap shifted elementwise FMA on the VPU —
+    int8×int8→int32 (w8a8) or float×register-dequantized-int8→f32 (w8a16);
+    per-channel dequant rides the shared epilogue. Channels are independent
+    (no reduction grid dim), so no revisit scratch is needed."""
+    os_ref = rest[0] if requant else None
+    o_ref = rest[1] if requant else rest[0]
+    x = x_ref[0]
+    adt = _acc_dtype(w8a8)
+    acc = jnp.zeros((tile_l, x.shape[-1]), adt)
+    for k in range(taps):
+        xs = _slide(x, k, tile_l, stride)
+        acc += xs.astype(adt) * w_ref[k].astype(adt)
+    _dequant_epilogue(
+        acc, os_ref, o_ref, s_ref=s_ref, b_ref=b_ref, activation=activation
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mode", "stride", "tile_l", "c_block", "activation", "out_dtype",
+        "interpret",
+    ),
+)
+def conv1d_depthwise_quant_pallas(
+    x: jax.Array,
+    w_q: jax.Array,
+    w_scale: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    x_scale: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
+    mode: str = "w8a8",
+    stride: int = 1,
+    tile_l: int = DEFAULT_TILE_L,
+    c_block: int | None = None,
+    activation: str = "none",
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """VALID int8 depthwise sliding conv. x: (B, L, C) int8 (w8a8) or float
+    (w8a16); w_q: int8 (K, C); w_scale: f32 (C,) per-channel tap-axis
+    absmax scales. ``out_scale`` fuses an int8 requant after the
+    activation; otherwise output is ``out_dtype``."""
+    w8a8 = mode == "w8a8"
+    if w8a8 and x_scale is None:
+        raise ValueError("w8a8 needs the activation scale x_scale")
+    B, L, C = x.shape
+    K, _ = w_q.shape
+    out_len = (L - K) // stride + 1
+    if out_len < 1:
+        raise ValueError(
+            f"filter K={K} (stride {stride}) exceeds input length {L}"
+        )
+    tile_l = min(tile_l, out_len)
+    n_tiles = pl.cdiv(out_len, tile_l)
+    padded_out = n_tiles * tile_l
+    halo = (tile_l - 1) * stride + K
+    need = (padded_out - 1) * stride + K
+    if need > L:
+        x = jnp.pad(x, ((0, 0), (0, need - L), (0, 0)))
+    cb = _resolve_block(C, c_block)
+    n_c = pl.cdiv(C, cb)
+    if n_c * cb > C:
+        x = _pad_axis(x, 2, n_c * cb)
+        w_q = _pad_axis(w_q, 1, n_c * cb)
+    s = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(-1), (C,))
+    if w8a8:
+        s = s * jnp.asarray(x_scale, jnp.float32).reshape(())
+    scale2d = _pad_axis(s.reshape(1, C), 1, n_c * cb)
+    bias2d = _bias_row(bias, C, n_c, cb)
+
+    requant = out_scale is not None
+    kernel = functools.partial(
+        _qkernel_depthwise, taps=K, tile_l=tile_l, stride=stride,
+        activation=activation, w8a8=w8a8, requant=requant,
+    )
+    in_specs = [
+        pl.BlockSpec(
+            (1, halo, cb),
+            lambda b, i, c: (b, i * tile_l * stride, c * cb),
+            indexing_mode=pl.unblocked,
+        ),
+        pl.BlockSpec((K, cb), lambda b, i, c: (0, c)),
+        pl.BlockSpec((1, cb), lambda b, i, c: (0, c)),  # dequant scale
+        pl.BlockSpec((1, cb), lambda b, i, c: (0, c)),  # bias
+    ]
+    args = [x, w_q, scale2d, bias2d]
+    if requant:
+        in_specs.append(pl.BlockSpec((1, 1), lambda b, i, c: (0, 0)))
+        args.append(jnp.asarray(out_scale, jnp.float32).reshape(1, 1))
+    odt = jnp.int8 if requant else jnp.dtype(out_dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, n_tiles, n_c),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, tile_l, cb), lambda b, i, c: (b, i, c)),
+        out_shape=jax.ShapeDtypeStruct((B, padded_out, n_c * cb), odt),
+        interpret=interpret,
+    )(*args)
+    return out[:, :out_len, :C]

@@ -39,6 +39,19 @@ def _sum_pool_kernel(x_ref, o_ref, *, window, tile_l):
     o_ref[0] = (upper - lower).astype(o_ref.dtype)  # phase 2: difference
 
 
+def _max_pool_shift_kernel(x_ref, o_ref, *, window, tile_l):
+    """Shift-and-max loop: O(n·w) comparisons but no block reshuffle — the
+    lower-constant form that beats the two-phase scan for small windows
+    (the per-shape crossover is measured by ``autotune.autotune_pool1d``
+    and consulted by ``ops.pool1d``; hardcoding either form lost: shift
+    1.4× slower at w=256, scan 2× slower at w=16)."""
+    x = x_ref[0]
+    acc = x[:tile_l]
+    for k in range(1, window):
+        acc = jnp.maximum(acc, x[k : k + tile_l])
+    o_ref[0] = acc
+
+
 def _max_pool_kernel(x_ref, o_ref, *, window, tile_l):
     """Two-phase max: block prefix/suffix cummax (van Herk / Gil-Werman).
 
@@ -69,7 +82,7 @@ def _max_pool_kernel(x_ref, o_ref, *, window, tile_l):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("window", "op", "tile_l", "interpret")
+    jax.jit, static_argnames=("window", "op", "tile_l", "method", "interpret")
 )
 def sliding_pool_pallas(
     x: jax.Array,
@@ -77,9 +90,14 @@ def sliding_pool_pallas(
     window: int,
     op: str = "sum",
     tile_l: int = DEFAULT_TILE,
+    method: str = "scan",
     interpret: bool = False,
 ) -> jax.Array:
-    """VALID sliding pooling along axis 1. x: (B, L, C) -> (B, L-window+1, C)."""
+    """VALID sliding pooling along axis 1. x: (B, L, C) -> (B, L-window+1, C).
+
+    ``method`` selects the max-pool evaluation: ``"scan"`` (two-phase
+    van Herk / Gil-Werman block cummax) or ``"shift"`` (shift-and-max loop);
+    sum/avg always use the prefix-scan kernel."""
     B, L, C = x.shape
     out_len = L - window + 1
     if out_len < 1:
@@ -92,7 +110,10 @@ def sliding_pool_pallas(
     if need > L:
         pad_val = 0.0 if op in ("sum", "avg") else -jnp.inf
         x = jnp.pad(x, ((0, 0), (0, need - L), (0, 0)), constant_values=pad_val)
-    body = _sum_pool_kernel if op in ("sum", "avg") else _max_pool_kernel
+    if op in ("sum", "avg"):
+        body = _sum_pool_kernel
+    else:
+        body = _max_pool_shift_kernel if method == "shift" else _max_pool_kernel
     kernel = functools.partial(body, window=window, tile_l=tile_l)
     out = pl.pallas_call(
         kernel,

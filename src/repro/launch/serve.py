@@ -13,13 +13,23 @@ hardcoding 1 broke recycling for tokenizers where 1 is a real token).
 
 ``--quant int8`` runs the conv path (whisper frontend, mamba convs) w8a8:
 an eager calibration prefill collects activation scales, ``repro.quant``
-swaps int8 weights into the params, and decode runs with
-``conv_precision="w8a8"``. Conv-free archs pass through unchanged.
+swaps int8 weights into the params (chained sites — whisper conv1→conv2 —
+get ``out_scale`` so int8 activations flow between them directly), and
+decode runs with ``conv_precision="w8a8"``. Conv-free archs pass through
+unchanged.
+
+``--kv-quant int8`` stores the KV cache as int8 with per-row f32 scales
+(quantized along each position's head_dim row via the ``optim/compress``
+primitive): the prefill cache is quantized before padding, decode steps
+quantize each new token's K/V rows in place, and attention dequantizes at
+read (DESIGN.md §8). Reported cache bytes drop ~2× (bf16 params) to ~3.5×
+(f32 smoke).
 """
 from __future__ import annotations
 
 import argparse
 import time
+import weakref
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +45,45 @@ def init_cache_concrete(model, B, S):
         lambda d: jnp.zeros(d.shape, jnp.dtype(d.dtype or model.cfg.param_dtype)),
         model.cache_defs(B, S),
         is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def quantize_cache_to_defs(cache, defs):
+    """Quantize float prefill cache leaves that the (``cfg.kv_quant``)
+    cache defs store as int8: per-row absmax along the last (head_dim)
+    axis — the ``optim/compress`` primitive — emitting the paired
+    ``<name>_scale`` leaf the defs expect. Leaves the defs keep float
+    (recurrent conv/ssm states) pass through unchanged."""
+    from repro.optim.compress import quantize_int8
+
+    def walk(c, d):
+        out = {}
+        for name, df in d.items():
+            if isinstance(df, dict):
+                out[name] = walk(c[name], df)
+            elif name.endswith("_scale") and name[: -len("_scale")] in d:
+                continue  # emitted alongside its int8 base leaf below
+            elif df.dtype == "int8" and f"{name}_scale" in d:
+                q, s = quantize_int8(c[name])
+                out[name] = q
+                out[f"{name}_scale"] = s
+            else:
+                out[name] = c[name]
+        return out
+
+    return walk(cache, defs)
+
+
+def cache_nbytes(defs, param_dtype) -> int:
+    """Total bytes a cache built from ``defs`` occupies (ParamDef dtype,
+    falling back to the model param dtype)."""
+    import math
+
+    return sum(
+        math.prod(d.shape) * jnp.dtype(d.dtype or param_dtype).itemsize
+        for d in jax.tree.leaves(
+            defs, is_leaf=lambda x: isinstance(x, ParamDef)
+        )
     )
 
 
@@ -58,14 +107,55 @@ def pad_cache_to_defs(cache, full, defs):
     return jax.tree.map(pad, cache, full, defs)
 
 
+# per-model jitted entry points: jax.jit caches trace/compile per wrapper,
+# and a fresh wrapper per generate() call would re-trace every time — a
+# repeat generate() on the same model (benchmarks, tests) must pay compile
+# once, not per call. The jitted closures hold only a weakref to the model
+# (a bound method in the value would strongly reference the key, pinning
+# every served model + its executables in this module-level dict forever).
+_JITTED = weakref.WeakKeyDictionary()
+
+
+def _jitted(model):
+    fns = _JITTED.get(model)
+    if fns is None:
+        mref = weakref.ref(model)
+        fns = (
+            jax.jit(lambda params, batch: mref().prefill(params, batch)),
+            jax.jit(lambda params, cache, tok, pos: mref().decode_step(
+                params, cache, tok, pos)),
+        )
+        _JITTED[model] = fns
+    return fns
+
+
 def serve_batch(model, B, P, prompts):
     batch = {"tokens": prompts}
     cfg = model.cfg
     if cfg.family == "audio":
-        batch["frames"] = jnp.zeros((B, P, cfg.d_model), jnp.float32)
+        # real mels (not precomputed frame embeddings) so serving exercises
+        # the conv frontend — the site `--quant int8` calibrates and chains.
+        # 2P mel frames → P encoder positions after the stride-2 conv2.
+        from repro.models.whisper import N_MELS
+
+        rng = np.random.default_rng(0)
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, 2 * P, N_MELS)).astype(np.float32)
+        )
     if cfg.family == "vlm":
         batch["patches"] = jnp.zeros((B, cfg.num_patches, 1152), jnp.float32)
     return batch
+
+
+def resolve_cache_len(cfg, cache_len: int, P: int, gen_len: int) -> int:
+    """Clamp an undersized cache request. Enc-dec cache defs split `seq`
+    evenly between encoder frames and decoder tokens — the decoder half
+    alone must hold prompt + gen (the seed crashed whisper serving on a
+    negative cache pad). One helper so generate() and the CLI's byte
+    reporting can never disagree about the effective length."""
+    if cfg.encoder_layers:
+        return max(cache_len, 2 * (P + gen_len))
+    return cache_len
 
 
 def generate(model, params, prompts, *, gen_len: int, cache_len: int,
@@ -80,22 +170,21 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
     cfg = model.cfg
     eos = jnp.int32(cfg.eos_id)
     B, P = prompts.shape
-    if cfg.encoder_layers:
-        # enc-dec cache defs split `seq` evenly between encoder frames and
-        # decoder tokens — the decoder half alone must hold prompt + gen
-        # (clamped here so EVERY generate() caller is covered; the seed
-        # crashed whisper serving on a negative cache pad)
-        cache_len = max(cache_len, 2 * (P + gen_len))
+    cache_len = resolve_cache_len(cfg, cache_len, P, gen_len)
     batch = serve_batch(model, B, P, prompts)
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step)
+    prefill, decode = _jitted(model)
     logits, cache = prefill(params, batch)
 
     # prefill emitted per-layer KV of length P (or recurrent states); decode
     # continues into a cache padded to cache_len along each leaf's kv_seq
-    # axis (taken from the cache defs, not inferred from shapes)
+    # axis (taken from the cache defs, not inferred from shapes). With
+    # kv_quant the float prefill leaves quantize FIRST so the (q, scale)
+    # pair pads coherently.
     full = init_cache_concrete(model, B, cache_len)
-    cache = pad_cache_to_defs(cache, full, model.cache_defs(B, cache_len))
+    defs = model.cache_defs(B, cache_len)
+    if cfg.kv_quant == "int8":
+        cache = quantize_cache_to_defs(cache, defs)
+    cache = pad_cache_to_defs(cache, full, defs)
 
     key = jax.random.key(seed)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
@@ -118,7 +207,8 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
 
 def quantize_for_serving(model, params, prompts):
     """int8 PTQ of the model's conv path: eager calibration prefill →
-    activation scales → int8 weight leaves. Returns (cfg', params')."""
+    activation scales (+ inter-layer chain scales, ``quant.CHAINS``) →
+    int8 weight leaves. Returns (cfg', params')."""
     from repro import quant
 
     cfg = model.cfg
@@ -126,13 +216,15 @@ def quantize_for_serving(model, params, prompts):
     calib = quant.Calibration()
     with quant.collecting(calib):
         model.prefill(params, serve_batch(model, B, P, prompts))  # eager
-    qparams = quant.quantize_params(params, spec=calib.spec())
+    spec = calib.spec(chains=quant.CHAINS)
+    qparams = quant.quantize_params(params, spec=spec)
     n = quant.quantized_site_count(qparams)
     if n == 0:
         print(f"[serve] --quant: {cfg.name} has no conv sites; unchanged")
         return cfg, params
+    chained = sum(1 for e in spec.values() if "out_scale" in e)
     print(f"[serve] --quant: {n} conv weight(s) int8, "
-          f"{len(calib.seen)} calibrated site(s)")
+          f"{len(calib.seen)} calibrated site(s), {chained} chained")
     return cfg.replace(conv_precision="w8a8"), qparams
 
 
@@ -147,11 +239,15 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quant", choices=["int8"], default=None,
                     help="post-training-quantize the conv path (w8a8)")
+    ap.add_argument("--kv-quant", choices=["int8"], default=None,
+                    help="store the serving KV cache int8 + per-row scales")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
+    if args.kv_quant:
+        cfg = cfg.replace(kv_quant=args.kv_quant)
     rt = Runtime()
     model = build_model(cfg, rt)
     params = model.init(jax.random.key(args.seed))
@@ -164,6 +260,7 @@ def main():
         cfg, params = quantize_for_serving(model, params, prompts)
         model = build_model(cfg, rt)
     cache_len = args.prompt_len + args.gen + (args.prompt_len + args.gen) % 2
+    cache_len = resolve_cache_len(cfg, cache_len, args.prompt_len, args.gen)
     t0 = time.time()
     toks, done = generate(
         model, params, prompts, gen_len=args.gen,
@@ -174,6 +271,13 @@ def main():
           f"({args.batch * args.gen / dt:.1f} tok/s); "
           f"{int(done.sum())}/{args.batch} slots recyclable "
           f"(eos={cfg.eos_id})")
+    bytes_now = cache_nbytes(model.cache_defs(args.batch, cache_len),
+                             cfg.param_dtype)
+    fp_model = build_model(cfg.replace(kv_quant="fp"), rt)
+    bytes_fp = cache_nbytes(fp_model.cache_defs(args.batch, cache_len),
+                            cfg.param_dtype)
+    print(f"[serve] kv-cache bytes: {bytes_now} "
+          f"(fp {bytes_fp}, ratio {bytes_fp / bytes_now:.2f}x)")
     print("[serve] sample:", np.asarray(toks[0][:16]))
 
 

@@ -73,16 +73,35 @@ def unrolled_blocks(x, layer_list, body, *, remat=True):
 
 def kv_cache_defs(cfg: ModelConfig, layers: int, batch: int, seq: int):
     kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    quant = cfg.kv_quant == "int8"
+    dt = "int8" if quant else None  # None → param_dtype
     d = dict(
         k=ParamDef(
             (layers, batch, seq, kv, hd),
             ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
-            init="zeros",
+            init="zeros", dtype=dt,
         ),
         v=ParamDef(
             (layers, batch, seq, kv, hd),
             ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
-            init="zeros",
+            init="zeros", dtype=dt,
         ),
     )
+    if quant:
+        d.update(kv_scale_defs(d))
     return d
+
+
+def kv_scale_defs(defs: dict) -> dict:
+    """Per-row f32 scale leaves pairing int8 cache leaves: each ``name``
+    whose rows (last axis) are absmax-quantized gets ``<name>_scale`` of
+    the same shape with the row axis collapsed to 1. The scale leaf keeps
+    the ``kv_seq`` axis name so ``serve.pad_cache_to_defs`` pads the
+    (q, scale) pair coherently."""
+    return {
+        f"{name}_scale": ParamDef(
+            (*d.shape[:-1], 1), (*d.axes[:-1], None),
+            init="zeros", dtype="float32",
+        )
+        for name, d in defs.items()
+    }

@@ -125,14 +125,21 @@ class Jamba:
         cfg = self.cfg
         kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
         np_ = self.n_periods
+        dt = "int8" if cfg.kv_quant == "int8" else None
         d = {
             "attn_k": ParamDef(
                 (np_, batch, seq, kv, hd),
-                ("layers", "batch", "kv_seq", "kv_heads", None), init="zeros"),
+                ("layers", "batch", "kv_seq", "kv_heads", None), init="zeros",
+                dtype=dt),
             "attn_v": ParamDef(
                 (np_, batch, seq, kv, hd),
-                ("layers", "batch", "kv_seq", "kv_heads", None), init="zeros"),
+                ("layers", "batch", "kv_seq", "kv_heads", None), init="zeros",
+                dtype=dt),
         }
+        if dt:
+            from repro.models.common import kv_scale_defs
+
+            d.update(kv_scale_defs(dict(d)))
         ms = mamba_state_defs(cfg, np_, batch)
         for j in range(self.period):
             if j == _attn_pos(cfg):
@@ -202,11 +209,17 @@ class Jamba:
                 lp = pp[f"pos{j}"]
                 h = L.rms_norm(xc, lp["norm"], cfg.norm_eps)
                 if j == _attn_pos(cfg):
-                    y, kv_new = L.attention_decode(
-                        lp["attn"], h,
-                        {"k": cl["attn_k"], "v": cl["attn_v"]}, pos, cfg, rt)
+                    sub = {"k": cl["attn_k"], "v": cl["attn_v"]}
+                    if "attn_k_scale" in cl:
+                        sub["k_scale"] = cl["attn_k_scale"]
+                        sub["v_scale"] = cl["attn_v_scale"]
+                    y, kv_new = L.attention_decode(lp["attn"], h, sub, pos,
+                                                   cfg, rt)
                     new_cache["attn_k"] = kv_new["k"]
                     new_cache["attn_v"] = kv_new["v"]
+                    if "k_scale" in kv_new:
+                        new_cache["attn_k_scale"] = kv_new["k_scale"]
+                        new_cache["attn_v_scale"] = kv_new["v_scale"]
                 else:
                     y, st = mamba_apply(lp["mamba"], h, cfg, rt,
                                         state=cl[f"mamba{j}"])

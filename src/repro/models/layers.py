@@ -94,26 +94,34 @@ def conv1d_bias_act(
     from repro.quant import calibrate, qconv
 
     k, cout = (w.q if isinstance(w, qconv.QuantizedWeight) else w).shape[::2]
-    calibrate.observe(
-        site or calibrate.conv_site("conv1d", x.shape[-1], cout, k), x
-    )
+    site = site or calibrate.conv_site("conv1d", x.shape[-1], cout, k)
+    calibrate.observe(site, x)
     mode = _quant_mode(w, precision)
     if mode is not None:
         qw = w if isinstance(w, qconv.QuantizedWeight) else qconv.quantize_weight(w)
+        # requant chaining (DESIGN.md §8): a leaf carrying out_scale emits
+        # int8 on the consumer's grid — only meaningful in w8a8, where the
+        # consumer quantizes its input anyway. An int8 INPUT here is the
+        # other end of a chain: its scale is this site's calibrated x_scale.
+        out_scale = qw.out_scale if mode == "w8a8" else None
+        if out_scale is None:
+            calibrate.note_dequant(site)
+        out_dtype = jnp.float32 if x.dtype == jnp.int8 else x.dtype
         if backend == "sliding_pallas":
             from repro.kernels import ops
 
             return ops.conv1d(
                 x, qw.q, stride=stride, padding=padding, bias=b,
                 activation=activation, precision=mode, w_scale=qw.scale,
-                x_scale=qw.x_scale,
+                x_scale=qw.x_scale, out_scale=out_scale,
             )
         # accumulate="fast": the compiled CPU evaluation (int8 storage,
         # f32 GEMMs) — the exact-int32 default is the test oracle, ~4×
         # slower than f32 through XLA CPU's integer matmul
         return qconv.conv1d_q(
             x, qw, b, mode=mode, stride=stride, padding=padding,
-            activation=activation, out_dtype=x.dtype, accumulate="fast",
+            x_scale=qw.x_scale, out_scale=out_scale,
+            activation=activation, out_dtype=out_dtype, accumulate="fast",
         )
     w = w.astype(x.dtype)
     if backend == "sliding_pallas":
@@ -148,27 +156,29 @@ def conv2d_bias_act(
     from repro.quant import calibrate, qconv
 
     wq = w.q if isinstance(w, qconv.QuantizedWeight) else w
-    calibrate.observe(
-        site
-        or calibrate.conv_site(
-            "conv2d", x.shape[-1], wq.shape[-1], f"{wq.shape[0]}x{wq.shape[1]}"
-        ),
-        x,
+    site = site or calibrate.conv_site(
+        "conv2d", x.shape[-1], wq.shape[-1], f"{wq.shape[0]}x{wq.shape[1]}"
     )
+    calibrate.observe(site, x)
     mode = _quant_mode(w, precision)
     if mode is not None:
         qw = w if isinstance(w, qconv.QuantizedWeight) else qconv.quantize_weight(w)
+        out_scale = qw.out_scale if mode == "w8a8" else None
+        if out_scale is None:
+            calibrate.note_dequant(site)
+        out_dtype = jnp.float32 if x.dtype == jnp.int8 else x.dtype
         if backend == "sliding_pallas":
             from repro.kernels import ops
 
             return ops.conv2d(
                 x, qw.q, stride=stride, padding=padding, bias=b,
                 activation=activation, precision=mode, w_scale=qw.scale,
-                x_scale=qw.x_scale,
+                x_scale=qw.x_scale, out_scale=out_scale,
             )
         return qconv.conv2d_q(
             x, qw, b, mode=mode, stride=stride, padding=padding,
-            activation=activation, out_dtype=x.dtype, accumulate="fast",
+            x_scale=qw.x_scale, out_scale=out_scale,
+            activation=activation, out_dtype=out_dtype, accumulate="fast",
         )
     w = w.astype(x.dtype)
     if backend == "sliding_pallas":
@@ -284,9 +294,13 @@ def _group(q: Array, kv_heads: int):
 
 
 def full_attention(
-    q: Array, k: Array, v: Array, *, causal: bool, q_offset: int = 0
+    q: Array, k: Array, v: Array, *, causal: bool, q_offset: int = 0,
+    kv_mask: Array | None = None,
 ) -> Array:
-    """Direct attention (short sequences / decode). q: (B,Lq,H,D), k/v: (B,Lk,KV,D)."""
+    """Direct attention (short sequences / decode). q: (B,Lq,H,D), k/v:
+    (B,Lk,KV,D). ``kv_mask`` (B, Lk) bool gates invalid key positions
+    (e.g. zero-padded cache rows — a zero key scores logit 0, NOT -inf,
+    so padding would otherwise leak softmax mass)."""
     B, Lq, H, D = q.shape
     KV = k.shape[2]
     qg = _group(q, KV)
@@ -297,6 +311,10 @@ def full_attention(
         kpos = jnp.arange(k.shape[1])
         mask = qpos[:, None] >= kpos[None, :]
         scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    if kv_mask is not None:
+        scores = jnp.where(
+            kv_mask[:, None, None, None, :], scores, -jnp.inf
+        )
     w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkglm,bmkd->blkgd", w, v)
     return out.reshape(B, Lq, H, D)
@@ -417,6 +435,16 @@ def attention_train(
     return jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(x.dtype))
 
 
+def dequant_cache_leaf(cache: dict, name: str, dtype) -> Array:
+    """Read a cache leaf, dequantizing int8 storage (``<name>_scale``
+    per-row f32 sibling, see ``common.kv_scale_defs``) when present."""
+    leaf = cache[name]
+    scale = cache.get(f"{name}_scale")
+    if scale is not None:
+        return (leaf.astype(jnp.float32) * scale).astype(dtype)
+    return leaf.astype(dtype)
+
+
 def attention_decode(
     p,
     x: Array,
@@ -429,12 +457,30 @@ def attention_decode(
     """Single-token decode step against a static KV cache.
 
     x: (B, 1, D); cache: {"k","v": (B, S, KV, hd)}; pos: () int32.
+
+    int8 KV cache (``cfg.kv_quant``, detected from ``k_scale``/``v_scale``
+    leaves): storage is int8 with a per-(position, head) f32 scale over the
+    head_dim row — the new token's K/V rows quantize independently via the
+    ``optim/compress`` per-row primitive, and the cache dequantizes at the
+    attention read. Returned cache keeps the (q, scale) pair layout.
     """
+    from repro.optim.compress import quantize_int8
+
     B, _, _ = x.shape
     positions = jnp.full((B, 1), pos, jnp.int32)
     q, k_new, v_new = _qkv(p, x, cfg, positions, rope=rope)
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    upd = functools.partial(jax.lax.dynamic_update_slice_in_dim, axis=1)
+    new = dict(cache)
+    if "k_scale" in cache:
+        for name, fresh in (("k", k_new), ("v", v_new)):
+            qrow, srow = quantize_int8(fresh)
+            new[name] = upd(cache[name], qrow.astype(jnp.int8), pos)
+            new[f"{name}_scale"] = upd(cache[f"{name}_scale"], srow, pos)
+    else:
+        new["k"] = upd(cache["k"], k_new.astype(cache["k"].dtype), pos)
+        new["v"] = upd(cache["v"], v_new.astype(cache["v"].dtype), pos)
+    k = dequant_cache_leaf(new, "k", x.dtype)
+    v = dequant_cache_leaf(new, "v", x.dtype)
     S = k.shape[1]
     KV = k.shape[2]
     qg = _group(q, KV)
@@ -445,7 +491,7 @@ def attention_decode(
     w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     out = jnp.einsum("bkglm,bmkd->blkgd", w, v).reshape(*q.shape)
     y = jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(x.dtype))
-    return y, {"k": k, "v": v}
+    return y, new
 
 
 def cross_attention_defs(cfg: ModelConfig) -> dict[str, ParamDef]:

@@ -63,17 +63,45 @@ def _resolve_conv_w(p, dt) -> Array:
     return w.astype(dt)
 
 
-def _conv_act(x: Array, w: Array, b: Array, backend: str) -> Array:
+def _conv_act(x: Array, w: Any, b: Array, cfg: ModelConfig) -> Array:
     """Causal depthwise conv→bias→silu via the selected evaluation strategy.
 
     On the Pallas path the bias and silu run in the kernel's fused epilogue
-    (one launch); the pure-JAX/XLA paths apply them unfused."""
-    from repro.quant import calibrate
+    (one launch); the pure-JAX/XLA paths apply them unfused.
 
+    With ``cfg.conv_precision == "w8a8"`` and an int8 ``QuantizedWeight``
+    leaf (from ``quant.apply``), the conv runs int8 *activations* through
+    the dedicated depthwise kernel (Pallas VPU int8×int8→int32, or the
+    compiled ``qconv`` fast path on non-Pallas backends) — not just
+    register-dequantized weights. This is the PREFILL path; the per-token
+    decode window conv (``mamba_apply`` with ``state``) is an O(K·C)
+    elementwise product with nothing to win from int8 and stays float.
+    The activation scale is the leaf's calibrated ``x_scale`` when
+    present, dynamic absmax otherwise (mamba sites execute under the
+    period scan, where calibration can't observe)."""
+    from repro.quant import calibrate
+    from repro.quant.qconv import QuantizedWeight, conv1d_depthwise_q
+
+    backend = cfg.conv_backend
     calibrate.observe(
-        calibrate.conv_site("conv1d_dw", x.shape[-1], x.shape[-1], w.shape[0]),
+        calibrate.conv_site("conv1d_dw", x.shape[-1], x.shape[-1],
+                            _conv_w_taps(w)),
         x,
     )
+    if isinstance(w, QuantizedWeight) and cfg.conv_precision == "w8a8":
+        if backend == "sliding_pallas":
+            from repro.kernels import ops
+
+            return ops.conv1d_depthwise(
+                x, w.q, padding="CAUSAL", bias=b, activation="silu",
+                precision="w8a8", w_scale=w.scale, x_scale=w.x_scale,
+            )
+        return conv1d_depthwise_q(
+            x, w, b, mode="w8a8", x_scale=w.x_scale, padding="CAUSAL",
+            activation="silu", accumulate="fast", out_dtype=x.dtype,
+        )
+    # weight-only (w8a16-style) fallback: dequantize in registers
+    w = w.dequant(x.dtype) if isinstance(w, QuantizedWeight) else w.astype(x.dtype)
     if backend == "sliding_pallas":
         from repro.kernels import ops
 
@@ -88,6 +116,12 @@ def _conv_act(x: Array, w: Array, b: Array, backend: str) -> Array:
     else:
         raise ValueError(backend)
     return jax.nn.silu(y + b.astype(y.dtype))
+
+
+def _conv_w_taps(w) -> int:
+    from repro.quant.qconv import QuantizedWeight
+
+    return (w.q if isinstance(w, QuantizedWeight) else w).shape[0]
 
 
 SUBCHUNK = 32
@@ -144,7 +178,7 @@ def mamba_apply(
     xin, z = jnp.split(xz, 2, axis=-1)
 
     if state is None:
-        xc = _conv_act(xin, _resolve_conv_w(p, dt), p["conv_b"], cfg.conv_backend)
+        xc = _conv_act(xin, p["conv_w"], p["conv_b"], cfg)
         new_conv = None
     else:
         hist = jnp.concatenate([state["conv"].astype(dt), xin], axis=1)

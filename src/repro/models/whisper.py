@@ -46,7 +46,11 @@ def conv_frontend(p, mels: Array, cfg: ModelConfig) -> Array:
     conv→bias→gelu is one fused kernel launch on the Pallas path
     (``conv_backend="sliding_pallas"``). With ``cfg.conv_precision`` set
     (and int8 weights swapped in by ``repro.quant.apply``) the convs run
-    the quantized kernels; the site names here key the calibration spec."""
+    the quantized kernels; the site names here key the calibration spec.
+    When the calibration spec chained conv1→conv2 (``quant.apply.CHAINS``),
+    conv1's leaf carries ``out_scale`` = conv2's input scale: conv1
+    requantizes in its epilogue and hands conv2 int8 activations directly —
+    no f32 tensor is materialized between the two convs (DESIGN.md §8)."""
     precision = cfg.conv_precision
     x = L.conv1d_bias_act(
         mels, p["conv1_w"], p["conv1_b"],
@@ -168,17 +172,26 @@ class Whisper:
 
     # -- serving ----------------------------------------------------------------
     def cache_defs(self, batch: int, seq: int):
-        """Decoder self-attn cache (seq//2) + cross KV (seq//2 enc frames)."""
+        """Decoder self-attn cache (seq//2) + cross KV (seq//2 enc frames).
+        With ``cfg.kv_quant == "int8"`` every sequence-proportional leaf
+        (self-attn k/v AND the cross xk/xv) stores int8 + per-row scale."""
+        from repro.models.common import kv_scale_defs
+
         cfg = self.cfg
         s_dec, s_enc = seq // 2, seq // 2
         d = kv_cache_defs(cfg, cfg.num_layers, batch, s_dec)
         kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = "int8" if cfg.kv_quant == "int8" else None
         d["xk"] = ParamDef(
             (cfg.num_layers, batch, s_enc, kv, hd),
-            ("layers", "batch", "kv_seq", "kv_heads", None), init="zeros")
+            ("layers", "batch", "kv_seq", "kv_heads", None), init="zeros",
+            dtype=dt)
         d["xv"] = ParamDef(
             (cfg.num_layers, batch, s_enc, kv, hd),
-            ("layers", "batch", "kv_seq", "kv_heads", None), init="zeros")
+            ("layers", "batch", "kv_seq", "kv_heads", None), init="zeros",
+            dtype=dt)
+        if dt:
+            d.update(kv_scale_defs({"xk": d["xk"], "xv": d["xv"]}))
         return d
 
     def prefill(self, params, batch):
@@ -230,15 +243,26 @@ class Whisper:
             xc, _ = carry
             lp, cl = inp
             h = L.rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+            sub = {n: cl[n] for n in ("k", "v", "k_scale", "v_scale")
+                   if n in cl}
             y, kv_new = L.attention_decode(
-                lp["attn"], h, {"k": cl["k"], "v": cl["v"]}, pos, cfg, rt,
-                rope=False)
+                lp["attn"], h, sub, pos, cfg, rt, rope=False)
             xc = xc + y
             h = L.rms_norm(xc, lp["xattn_norm"], cfg.norm_eps)
             dt = h.dtype
             q = jnp.einsum("bld,dhk->blhk", h, lp["xattn"]["wq"].astype(dt))
-            o = L.full_attention(q, cl["xk"].astype(dt), cl["xv"].astype(dt),
-                                 causal=False)
+            xk = L.dequant_cache_leaf(cl, "xk", dt)
+            xv = L.dequant_cache_leaf(cl, "xv", dt)
+            # the cross cache is padded past the real encoder length with
+            # zero rows (zero codes AND zero scales in int8 mode); a zero
+            # key scores logit 0, not -inf, so unmasked padding would leak
+            # softmax mass. Real encoder keys are never exactly the zero
+            # vector, so any-nonzero identifies the valid rows. A fully
+            # zero cache (structural smoke tests) keeps every row so the
+            # softmax stays finite — attention over zero values is 0.
+            valid = jnp.any(xk != 0, axis=(2, 3))
+            valid = valid | ~valid.any(axis=1, keepdims=True)
+            o = L.full_attention(q, xk, xv, causal=False, kv_mask=valid)
             xc = xc + jnp.einsum("blhk,hkd->bld", o,
                                  lp["xattn"]["wo"].astype(dt))
             h = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)

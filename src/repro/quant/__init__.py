@@ -12,14 +12,22 @@ The Pallas int8 kernels live with the other kernels in
 ``repro.kernels.ops.conv1d/conv2d(precision=...)``.
 """
 from repro.quant.apply import (
+    CHAINS,
     quantize_depthwise_weight,
     quantize_params,
     quantized_site_count,
 )
-from repro.quant.calibrate import Calibration, QuantSpec, collecting, observe
+from repro.quant.calibrate import (
+    Calibration,
+    QuantSpec,
+    collecting,
+    counting_dequants,
+    observe,
+)
 from repro.quant.qconv import (
     QuantizedWeight,
     act_scale,
+    conv1d_depthwise_q,
     conv1d_q,
     conv2d_q,
     conv2d_q_im2col,
@@ -28,14 +36,17 @@ from repro.quant.qconv import (
 )
 
 __all__ = [
+    "CHAINS",
     "Calibration",
     "QuantSpec",
     "QuantizedWeight",
     "act_scale",
     "collecting",
+    "conv1d_depthwise_q",
     "conv1d_q",
     "conv2d_q",
     "conv2d_q_im2col",
+    "counting_dequants",
     "observe",
     "quantize_act",
     "quantize_depthwise_weight",

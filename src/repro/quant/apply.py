@@ -41,18 +41,27 @@ SITE_FOR_KEY = {
     "conv1_w": "whisper/conv1",
     "conv2_w": "whisper/conv2",
 }
-# depthwise conv weights: weight-only int8 (dequantized at the call site)
+# producer site → consumer site: consecutive convs where the producer's
+# output feeds the consumer directly, so the producer can requantize in its
+# epilogue onto the consumer's calibrated input grid (int8 end to end,
+# DESIGN.md §8). Passed to Calibration.spec() by the serving driver.
+CHAINS = {
+    "whisper/conv1": "whisper/conv2",
+}
+# depthwise conv weights: int8 with per-channel tap-axis scales (w8a8
+# through the dedicated depthwise kernel when conv_precision requests it,
+# register-dequantized weight-only otherwise)
 WEIGHT_ONLY_KEYS = ("conv_w",)
 
 
-def quantize_depthwise_weight(w) -> QuantizedWeight:
-    """Weight-only int8 for depthwise (…, K, C) weights: per-channel scale
-    over the tap axis, keepdims so ``q * scale`` broadcasts under any
-    leading stacking (jamba stacks periods ahead of K)."""
+def quantize_depthwise_weight(w, x_scale=None) -> QuantizedWeight:
+    """int8 for depthwise (…, K, C) weights: per-channel scale over the
+    tap axis, keepdims so ``q * scale`` broadcasts under any leading
+    stacking (jamba stacks periods ahead of K)."""
     wf = w.astype(jnp.float32)
     s = jnp.max(jnp.abs(wf), axis=-2, keepdims=True) / 127.0 + 1e-12
     q = jnp.clip(jnp.round(wf / s), -127, 127).astype(jnp.int8)
-    return QuantizedWeight(q, s)
+    return QuantizedWeight(q, s, x_scale)
 
 
 def quantize_params(
@@ -62,9 +71,11 @@ def quantize_params(
 
     ``spec`` (from ``Calibration.spec()``) provides per-site activation
     scales for the w8a8 sites; missing sites fall back to dynamic absmax
-    at inference (``QuantizedWeight.x_scale = None``). ``mode`` is stored
-    implicitly: the precision argument at the call sites decides w8a8 vs
-    w8a16 — this function only prepares the int8 leaves.
+    at inference (``QuantizedWeight.x_scale = None``). A spec entry with
+    ``out_scale`` (requant chaining) folds into the leaf too — the conv
+    then emits int8 on the consumer's grid. ``mode`` is stored implicitly:
+    the precision argument at the call sites decides w8a8 vs w8a16 — this
+    function only prepares the int8 leaves.
     """
     spec = spec or {}
 
@@ -77,9 +88,24 @@ def quantize_params(
                 out[key] = walk(val)
             elif key in SITE_FOR_KEY:
                 entry = spec.get(SITE_FOR_KEY[key], {})
-                out[key] = quantize_weight(val, entry.get("x_scale"))
+                out[key] = quantize_weight(
+                    val, entry.get("x_scale"), entry.get("out_scale")
+                )
             elif key in WEIGHT_ONLY_KEYS:
-                out[key] = quantize_depthwise_weight(val)
+                # depthwise site names are shape-derived (no stable param
+                # path): recover the site from the (…, K, C) weight shape
+                from repro.quant.calibrate import conv_site
+
+                c, k = val.shape[-1], val.shape[-2]
+                entry = spec.get(conv_site("conv1d_dw", c, c, k), {})
+                x_scale = entry.get("x_scale")
+                if x_scale is not None and val.ndim > 2:
+                    # jamba stacks periods ahead of (K, C): every leaf of
+                    # the scanned pytree must share the leading scan axis
+                    x_scale = jnp.broadcast_to(
+                        jnp.asarray(x_scale, jnp.float32), val.shape[:-2]
+                    )
+                out[key] = quantize_depthwise_weight(val, x_scale)
             else:
                 out[key] = val
         return out

@@ -8,14 +8,27 @@ dynamic per-batch absmax would re-scan every activation tensor). The flow:
     with collecting(calib):
         for batch in sample_batches:
             model.loss(params, batch)        # EAGER — no jax.jit
-    spec = calib.spec()                      # site → {"x_scale": f32[]}
+    spec = calib.spec(chains=CHAINS)         # site → {"x_scale", "out_scale"?}
 
 ``repro.models.layers.conv1d/2d_bias_act`` (and any other instrumented
 site) call :func:`observe` on their input activation; while a
 ``collecting`` context is active and the value is concrete (eager), the
-observer records per-channel absmax and a subsampled |x| reservoir. The
-emitted ``QuantSpec`` maps site name → scale entry; ``quant.apply`` folds
-the scales into the quantized weight leaves.
+observer records per-channel absmax and a bounded uniform reservoir of |x|
+samples. The emitted ``QuantSpec`` maps site name → scale entry;
+``quant.apply`` folds the scales into the quantized weight leaves.
+
+**Reservoir**: uniform sampling without replacement over the whole
+calibration stream via the bottom-k-by-random-key scheme — each element
+draws a uniform key from a seeded per-site generator and the reservoir
+keeps the k smallest keys seen so far. Every calibration batch is equally
+represented (the previous first-come fill biased percentile clipping
+toward early batches) and the draw is deterministic for a given ``seed``.
+
+**Requant chaining** (DESIGN.md §8): ``spec(chains={producer: consumer})``
+marks a producer site's output as *consumed int8* by attaching the
+consumer's calibrated input scale as the producer's ``out_scale`` — the
+producer conv then requantizes inside its epilogue and the f32 activation
+between the two convs is never materialized.
 
 Under ``jax.jit`` activations are tracers and observation is skipped
 silently — calibration runs must be eager (document + asserted via
@@ -27,6 +40,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import zlib
 from typing import Any, Iterator
 
 import jax
@@ -35,17 +49,25 @@ import numpy as np
 
 Array = jax.Array
 
-# site name -> {"x_scale": f32 scalar array}; a plain-dict pytree so specs
-# jit/serialize like any other params structure
+# site name -> {"x_scale": f32 scalar array, "out_scale"?: f32 scalar};
+# a plain-dict pytree so specs jit/serialize like any other params structure
 QuantSpec = dict[str, dict[str, Array]]
 
 
 @dataclasses.dataclass
 class _SiteStats:
-    """Running per-channel absmax + reservoir of |x| samples for one site."""
+    """Running per-channel absmax + a bounded uniform reservoir of |x|
+    samples (bottom-k by random key: keeping the ``reservoir`` smallest
+    keys over the stream is a uniform sample without replacement)."""
 
+    rng: np.random.Generator
     absmax: np.ndarray | None = None  # (C,) running per-channel max
-    samples: list[np.ndarray] = dataclasses.field(default_factory=list)
+    keys: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.float64)
+    )
+    vals: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.float32)
+    )
     batches: int = 0
 
     def update(self, x: np.ndarray, reservoir: int) -> None:
@@ -53,26 +75,47 @@ class _SiteStats:
         cmax = a.max(axis=0)
         self.absmax = cmax if self.absmax is None else np.maximum(self.absmax, cmax)
         flat = a.reshape(-1)
-        if flat.size > reservoir:  # deterministic stride subsample
-            flat = flat[:: max(1, flat.size // reservoir)][:reservoir]
-        self.samples.append(flat)
+        keys = self.rng.random(flat.size)
+        keys = np.concatenate([self.keys, keys])
+        vals = np.concatenate([self.vals, flat])
+        if keys.size > reservoir:
+            keep = np.argpartition(keys, reservoir)[:reservoir]
+            keys, vals = keys[keep], vals[keep]
+        self.keys, self.vals = keys, vals
         self.batches += 1
 
 
 class Calibration:
     """Collects activation stats per conv site; emits a QuantSpec."""
 
-    def __init__(self, percentile: float | None = 99.9, reservoir: int = 8192):
+    def __init__(
+        self,
+        percentile: float | None = 99.9,
+        reservoir: int = 8192,
+        seed: int = 0,
+    ):
         self.percentile = percentile
         self.reservoir = reservoir
+        self.seed = seed
         self.stats: dict[str, _SiteStats] = {}
+
+    def _site(self, site: str) -> _SiteStats:
+        if site not in self.stats:
+            # per-site stream seeded from (seed, site) so observation order
+            # across sites never changes a site's draw
+            self.stats[site] = _SiteStats(
+                rng=np.random.default_rng(
+                    (self.seed, zlib.crc32(site.encode()))
+                )
+            )
+        return self.stats[site]
 
     def observe(self, site: str, x: Any) -> None:
         if isinstance(x, jax.core.Tracer):  # inside jit: can't read values
             return
-        self.stats.setdefault(site, _SiteStats()).update(
-            np.asarray(x), self.reservoir
-        )
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.integer):
+            return  # int8 codes from a chained conv are not activations
+        self._site(site).update(np.asarray(x), self.reservoir)
 
     @property
     def seen(self) -> list[str]:
@@ -85,8 +128,7 @@ class Calibration:
         if self.percentile is None:
             hi = float(st.absmax.max())
         else:
-            allx = np.concatenate(st.samples)
-            hi = float(np.percentile(allx, self.percentile))
+            hi = float(np.percentile(st.vals, self.percentile))
             hi = max(hi, 1e-8)  # all-zero calibration data
         return jnp.asarray(hi / 127.0 + 1e-12, jnp.float32)
 
@@ -94,8 +136,15 @@ class Calibration:
         """Per-channel absmax (diagnostics / future per-channel modes)."""
         return jnp.asarray(self.stats[site].absmax, jnp.float32)
 
-    def spec(self) -> QuantSpec:
-        return {s: {"x_scale": self.site_scale(s)} for s in self.seen}
+    def spec(self, chains: dict[str, str] | None = None) -> QuantSpec:
+        """``chains`` maps producer site → consumer site: when both have
+        stats, the producer's entry gains ``out_scale`` (= the consumer's
+        input scale) so its output is emitted int8 on the consumer's grid."""
+        out = {s: {"x_scale": self.site_scale(s)} for s in self.seen}
+        for producer, consumer in (chains or {}).items():
+            if producer in out and consumer in out:
+                out[producer]["out_scale"] = out[consumer]["x_scale"]
+        return out
 
 
 _ACTIVE: Calibration | None = None
@@ -123,3 +172,31 @@ def conv_site(kind: str, cin: int, cout: int, k) -> str:
     so identical layers share a scale (fine for calibration, and the only
     option when the call site has no stable name)."""
     return f"{kind}|Cin{cin}|Cout{cout}|K{k}"
+
+
+# ---------------------------------------------------------------------------
+# dequant-site accounting (chaining diagnostics / tests)
+# ---------------------------------------------------------------------------
+# A "dequant site" is a quantized conv whose epilogue materializes a float
+# activation (no fused requant). With requant chaining, interior convs of a
+# chain stop appearing here — tests count the sites to prove no f32 round
+# trip happens between chained convs.
+
+_DEQUANT_LOG: list[str] | None = None
+
+
+@contextlib.contextmanager
+def counting_dequants() -> Iterator[list[str]]:
+    """Collect the sites whose quantized conv emitted float output."""
+    global _DEQUANT_LOG
+    prev, _DEQUANT_LOG = _DEQUANT_LOG, []
+    try:
+        yield _DEQUANT_LOG
+    finally:
+        _DEQUANT_LOG = prev
+
+
+def note_dequant(site: str) -> None:
+    """Called by the quant dispatch when a conv dequantizes to float."""
+    if _DEQUANT_LOG is not None:
+        _DEQUANT_LOG.append(site)

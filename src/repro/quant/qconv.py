@@ -34,23 +34,29 @@ class QuantizedWeight(NamedTuple):
     """int8 conv weight + scales. ``q``: int8, layout of the f32 weight it
     replaces; ``scale``: f32 (Cout,) absmax/127 per output channel;
     ``x_scale``: calibrated per-tensor activation scale for this weight's
-    conv site (None → dynamic absmax at call time)."""
+    conv site (None → dynamic absmax at call time); ``out_scale``: when the
+    site's OUTPUT is consumed by another quantized conv (requant chaining,
+    DESIGN.md §8), the consumer's calibrated input scale — the conv then
+    emits int8 on that grid instead of materializing f32."""
 
     q: Array
     scale: Array
     x_scale: Array | None = None
+    out_scale: Array | None = None
 
     def dequant(self, dtype=jnp.float32) -> Array:
         return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
 
 
-def quantize_weight(w: Array, x_scale: Array | None = None) -> QuantizedWeight:
+def quantize_weight(
+    w: Array, x_scale: Array | None = None, out_scale: Array | None = None
+) -> QuantizedWeight:
     """Symmetric per-output-channel (last axis) absmax int8 quantization."""
     wf = w.astype(jnp.float32)
     red = tuple(range(w.ndim - 1))
     s = jnp.max(jnp.abs(wf), axis=red) / 127.0 + 1e-12
     q = jnp.clip(jnp.round(wf / s), -127, 127).astype(jnp.int8)
-    return QuantizedWeight(q, s, x_scale)
+    return QuantizedWeight(q, s, x_scale, out_scale)
 
 
 def act_scale(x: Array) -> Array:
@@ -109,7 +115,8 @@ def _resolve_in(x, qw: QuantizedWeight, mode: str, x_scale):
 # per-tap loops are accumulator-traffic-bound from k=5 up (stacking is ~3×
 # wall-clock there); at 3×3 and in 1-D, XLA already fuses the per-tap loop
 # optimally and stacking only adds concat traffic — hence the policies in
-# conv1d_q (always per-tap) and conv2d_q (stack above 9 taps).
+# conv1d_q (always per-tap; re-measured, see its comment) and conv2d_q
+# (stack above 9 taps).
 TAP_STACK = 8
 
 
@@ -150,8 +157,14 @@ def conv1d_q(
         x = jnp.pad(x, ((0, 0), (lo, hi), (0, 0)))
     x, dq = _resolve_in(x, qw, mode, x_scale)
     exact = mode == "w8a8" and accumulate == "int32"
-    # 1-D: per-tap loop (XLA fuses it well; stacking measured slower here),
-    # operands upcast ONCE on the fast path
+    # 1-D: per-tap loop at EVERY K (operands upcast once on the fast path).
+    # Tap stacking was re-measured for this PR at L4096/C32/k33 — per-tap
+    # 1550us vs stack4 2052 / stack8 2412 / stack16 2614: the (L, C) f32
+    # accumulator is cache-resident in 1-D, so per-tap "round trips" are
+    # L2 hits and stacking only adds concat traffic. (2-D differs: the
+    # (H·W, C) accumulator spills, hence conv2d_q's stacking win.) The
+    # shapes where int8 still loses to bf16 here are handled by the
+    # measured-timing fallback in ops.conv1d, not by the kernel.
     wm = qw.q if exact else qw.q.astype(jnp.float32)
     if not exact:
         x = x.astype(jnp.float32)
@@ -222,6 +235,68 @@ def conv2d_q(
             acc = t if acc is None else acc + t
     return _epilogue(
         acc.astype(jnp.float32) * dq, bias, activation, out_scale, out_dtype
+    )
+
+
+def conv1d_depthwise_q(
+    x: Array,
+    qw: QuantizedWeight,
+    bias: Array | None = None,
+    *,
+    mode: str = "w8a8",
+    x_scale: Array | None = None,
+    out_scale: Array | None = None,
+    stride: int = 1,
+    padding="CAUSAL",
+    activation: str = "none",
+    accumulate: str = "int32",
+    out_dtype=jnp.float32,
+) -> Array:
+    """Quantized depthwise sliding conv1d (the mamba conv path). x:
+    (B, L, C) float (or int8 w8a8 with ``x_scale``); qw.q: (K, C) with
+    per-channel scale over the tap axis (``apply.quantize_depthwise_weight``).
+    ``accumulate="int32"`` is the exact oracle for the Pallas VPU kernel;
+    ``"fast"`` upcasts once and runs the f32 shift-FMA loop (the compiled
+    CPU serving path — int8 still buys 4× smaller operand traffic)."""
+    from repro.core.conv import _resolve_pad_1d
+
+    K = qw.q.shape[0]
+    lo, hi = _resolve_pad_1d(padding, K, 1)
+    if lo or hi:
+        x = jnp.pad(x, ((0, 0), (lo, hi), (0, 0)))
+    # per-channel dequant scale: (1, C) keepdims from the tap-axis quantizer
+    wsc = jnp.asarray(qw.scale, jnp.float32).reshape(1, -1)
+    if mode == "w8a8":
+        if x.dtype != jnp.int8:
+            x_scale = x_scale if x_scale is not None else (
+                qw.x_scale if qw.x_scale is not None else act_scale(x)
+            )
+            x = quantize_act(x, x_scale)
+        elif x_scale is None:
+            raise ValueError("int8 input needs its x_scale")
+        dq = wsc * jnp.asarray(x_scale, jnp.float32).reshape(())
+    elif mode == "w8a16":
+        dq = wsc
+    else:
+        raise ValueError(f"unknown quant mode {mode!r}")
+    exact = mode == "w8a8" and accumulate == "int32"
+    wm = qw.q if exact else qw.q.astype(jnp.float32)
+    if not exact:
+        x = x.astype(jnp.float32)
+    adt = jnp.int32 if exact else jnp.float32
+    B, L, C = x.shape
+    out_len = (L - K) // stride + 1
+    span = (out_len - 1) * stride + 1
+    acc = None
+    for k in range(K):
+        xs = jax.lax.slice_in_dim(x, k, k + span, axis=1)
+        if stride > 1:
+            xs = xs[:, ::stride]
+        t = xs.astype(adt) * wm[k].astype(adt)
+        acc = t if acc is None else acc + t
+    return _epilogue(
+        acc.astype(jnp.float32) * dq[None], bias, activation, out_scale,
+        out_dtype,
     )
 
 

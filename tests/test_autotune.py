@@ -120,3 +120,31 @@ def test_grad_key_distinct_from_forward():
     assert k_bwd != k_fwd and k_bwd.endswith("|grad")
     k2 = autotune.conv2d_key(1, 8, 8, 4, 4, 3, 3, 1, 1, "float32", grad=True)
     assert k2.endswith("|grad")
+
+
+def test_depthwise_quant_key_tuned_and_consulted(rng, tmp_path, monkeypatch):
+    """The int8 depthwise kernel tunes under its own conv1ddw|…|w8a8 key
+    and ops.conv1d_depthwise(precision=) honors the recorded entry."""
+    import jax
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "t.json"))
+    autotune.invalidate()
+    x = jnp.asarray(rng.normal(size=(1, 48, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    r = autotune.autotune_conv1d_depthwise(
+        x, w, interpret=True, tile_candidates=(16, 32), precision="w8a8"
+    )
+    key = autotune.conv1d_dw_key(1, 48, 8, 4, 1, "w8a8")
+    assert key.endswith("|w8a8") and autotune.lookup(key) is not None
+    got = ops.conv1d_depthwise(x, w, padding="VALID", precision="w8a8")
+    from repro.quant import qconv, quantize_depthwise_weight
+
+    want = qconv.conv1d_depthwise_q(
+        x, quantize_depthwise_weight(w), None, mode="w8a8",
+        x_scale=qconv.act_scale(x), padding="VALID",
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    autotune.invalidate()

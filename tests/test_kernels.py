@@ -339,6 +339,60 @@ def test_max_pool_large_window(rng, window):
     )
 
 
+@pytest.mark.parametrize("window", [4, 48, 256])
+def test_max_pool_methods_agree(rng, window):
+    """The shift-and-max kernel and the van Herk/Gil-Werman scan kernel
+    are interchangeable evaluations of the same reduction."""
+    x = jnp.asarray(rng.normal(size=(2, 300, 8)).astype(np.float32))
+    a = ops.pool1d(x, window=window, op="max", method="scan", interpret=True)
+    b = ops.pool1d(x, window=window, op="max", method="shift", interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_max_pool_method_from_autotune_cache(rng, tmp_path, monkeypatch):
+    """ops.pool1d resolves the max-pool evaluation per window size from
+    the autotune cache (falling back to the crossover heuristic) instead
+    of hardcoding one form — the BENCH pool rows showed each form losing
+    on part of the window range."""
+    from repro.kernels import autotune
+    from repro.kernels.ops import POOL_SHIFT_MAX_WINDOW, _pool_method
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "t.json"))
+    autotune.invalidate()
+    x = jnp.asarray(rng.normal(size=(1, 64, 4)).astype(np.float32))
+    # heuristic when untuned: shift below the crossover, scan above
+    assert _pool_method(x, 4, "max", None) == "shift"
+    assert _pool_method(x, POOL_SHIFT_MAX_WINDOW, "max", None) == "scan"
+    # a tuned entry overrides the heuristic
+    key = autotune.pool1d_key(1, 64, 4, 4, "max", "float32")
+    autotune.record(key, {"method": "scan", "us": 1.0})
+    assert _pool_method(x, 4, "max", None) == "scan"
+    # explicit argument wins over everything
+    assert _pool_method(x, 4, "max", "shift") == "shift"
+    # sum/avg always use the prefix-scan kernel
+    assert _pool_method(x, 4, "sum", None) == "scan"
+    # and the tuned method produces the same values
+    got = ops.pool1d(x, window=4, op="max", interpret=True)
+    np.testing.assert_allclose(
+        got, ref.pool_ref(x, window=4, op="max"), rtol=2e-4, atol=2e-4
+    )
+    autotune.invalidate()
+
+
+def test_autotune_pool1d_records_method(rng, tmp_path, monkeypatch):
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "t.json"))
+    autotune.invalidate()
+    x = jnp.asarray(rng.normal(size=(1, 96, 4)).astype(np.float32))
+    r = autotune.autotune_pool1d(x, window=8, op="max", interpret=True)
+    entry = autotune.lookup(autotune.pool1d_key(1, 96, 4, 8, "max",
+                                                "float32"))
+    assert entry is not None and entry["method"] in ("scan", "shift")
+    assert r.best["method"] == entry["method"]
+    autotune.invalidate()
+
+
 # -- ops dispatch ---------------------------------------------------------------
 
 @pytest.mark.parametrize("backend", ["sliding", "im2col_gemm", "im2col_hbm", "xla"])

@@ -362,3 +362,308 @@ def test_quant_rejects_non_sliding_backends(rng):
         ops.conv1d(x, w, backend="im2col_gemm", precision="w8a8")
     with pytest.raises(ValueError):
         ops.conv1d(x, w, precision="w8a8", dilation=2)
+
+
+# -- compound regime (K > 17): chunked reduction grid -------------------------
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv1d_w8a8_compound_kernel(rng, stride):
+    """K=33 resolves to the compound regime (TAP_CHUNK-chunked reduction,
+    no unrolled-tap fallback) and matches the int32 oracle bit-for-bit."""
+    from repro.kernels.sliding_conv_quant import _quant_regime
+
+    assert _quant_regime(None, 33) == "compound"
+    x = jnp.asarray(rng.normal(size=(1, 90, 6)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(33, 6, 8)).astype(np.float32))
+    qw, sx, xq = _qops(x, w)
+    got = conv1d_quant_pallas(
+        xq, qw.q, qw.scale, None, x_scale=sx, mode="w8a8", stride=stride,
+        tile_l=16, interpret=True,
+    )
+    want = qconv.conv1d_q(x, qw, None, mode="w8a8", x_scale=sx, stride=stride)
+    np.testing.assert_allclose(got, want, **TIGHT)
+    f32 = ref.conv1d_ref(x, w, stride=stride)
+    assert float(jnp.max(jnp.abs(got - f32))) <= _quant_bound(
+        x, w, sx, qw.scale
+    )
+
+
+def test_conv1d_w8a8_compound_blocked_epilogue(rng):
+    """Compound regime composes with channel blocking (reduction sweeps
+    Cin blocks × tap chunks) and the fused bias/act/requant epilogue."""
+    x = jnp.asarray(rng.normal(size=(1, 80, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(19, 8, 12)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(12,)).astype(np.float32))
+    qw, sx, xq = _qops(x, w)
+    got = conv1d_quant_pallas(
+        xq, qw.q, qw.scale, b, x_scale=sx, mode="w8a8", regime="compound",
+        activation="relu", tile_l=16, cin_block=4, interpret=True,
+    )
+    want = qconv.conv1d_q(
+        x, qw, b, mode="w8a8", x_scale=sx, activation="relu"
+    )
+    np.testing.assert_allclose(got, want, **TIGHT)
+    out_scale = jnp.float32(0.04)
+    got8 = conv1d_quant_pallas(
+        xq, qw.q, qw.scale, b, x_scale=sx, mode="w8a8", regime="compound",
+        activation="relu", out_scale=out_scale, tile_l=16, cin_block=4,
+        interpret=True,
+    )
+    want8 = qconv.conv1d_q(
+        x, qw, b, mode="w8a8", x_scale=sx, activation="relu",
+        out_scale=out_scale,
+    )
+    assert got8.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got8), np.asarray(want8))
+
+
+def test_conv2d_w8a8_compound_kernel(rng):
+    """kw=19 → ROW_CHUNK-chunked compound regime, vs the int32 oracle.
+    (The K>17 2-D shapes previously fell back to the unrolled tap loop.)"""
+    x = jnp.asarray(rng.normal(size=(1, 40, 40, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(19, 19, 4, 8)).astype(np.float32))
+    qw, sx, xq = _qops(x, w)
+    got = conv2d_quant_pallas(
+        xq, qw.q, qw.scale, None, x_scale=sx, mode="w8a8", regime="compound",
+        tile_h=8, tile_w=8, cin_block=2, interpret=True,
+    )
+    want = qconv.conv2d_q(x, qw, None, mode="w8a8", x_scale=sx)
+    np.testing.assert_allclose(got, want, **TIGHT)
+
+
+# -- depthwise w8a8 kernel (mamba conv path) ----------------------------------
+
+@pytest.mark.parametrize("activation", ["none", "silu"])
+def test_depthwise_w8a8_kernel(rng, activation):
+    from repro.kernels.sliding_conv_quant import conv1d_depthwise_quant_pallas
+
+    x = jnp.asarray(rng.normal(size=(2, 50, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    qw = quant.quantize_depthwise_weight(w)
+    sx = qconv.act_scale(x)
+    xq = qconv.quantize_act(x, sx)
+    got = conv1d_depthwise_quant_pallas(
+        xq, qw.q, qw.scale, b, x_scale=sx, mode="w8a8",
+        activation=activation, tile_l=16, interpret=True,
+    )
+    want = qconv.conv1d_depthwise_q(
+        x, qw, b, mode="w8a8", x_scale=sx, padding="VALID",
+        activation=activation,
+    )
+    np.testing.assert_allclose(got, want, **TIGHT)
+    # fast path (compiled CPU serving) reorders float sums only
+    fast = qconv.conv1d_depthwise_q(
+        x, qw, b, mode="w8a8", x_scale=sx, padding="VALID",
+        activation=activation, accumulate="fast",
+    )
+    np.testing.assert_allclose(fast, want, **TIGHT)
+
+
+def test_depthwise_w8a8_ops_dispatch_blocked(rng):
+    """ops.conv1d_depthwise(precision=) quantizes float operands, applies
+    causal padding, and blocks channels."""
+    x = jnp.asarray(rng.normal(size=(1, 40, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+    got = ops.conv1d_depthwise(
+        x, w, bias=b, activation="silu", precision="w8a8", c_block=8,
+    )
+    qw = quant.quantize_depthwise_weight(w)
+    want = qconv.conv1d_depthwise_q(
+        x, qw, b, mode="w8a8", x_scale=qconv.act_scale(x), activation="silu"
+    )
+    np.testing.assert_allclose(got, want, **TIGHT)
+
+
+def test_mamba_w8a8_runs_int8_activations(rng):
+    """With conv_precision="w8a8" the mamba conv path runs the int8
+    depthwise kernel on both backends, within quant error of f32."""
+    from repro.configs import get_config, smoke_config
+    from repro.distributed.sharding import Runtime, init_params
+    from repro.models.mamba import mamba_apply, mamba_defs
+
+    cfg = smoke_config(get_config("jamba-1.5-large-398b"))
+    p = init_params(mamba_defs(cfg), jax.random.key(0), "float32")
+    x = jnp.asarray(rng.normal(size=(1, 16, cfg.d_model)).astype(np.float32))
+    y32, _ = mamba_apply(p, x, cfg, Runtime())
+    qp = quant.quantize_params({"m": p})["m"]
+    cfg8 = cfg.replace(conv_precision="w8a8")
+    y_jax, _ = mamba_apply(qp, x, cfg8, Runtime())
+    y_plr, _ = mamba_apply(
+        qp, x, cfg8.replace(conv_backend="sliding_pallas"), Runtime()
+    )
+    np.testing.assert_allclose(y_plr, y_jax, rtol=1e-4, atol=1e-4)
+    rel = float(jnp.max(jnp.abs(y_jax - y32))) / (
+        float(jnp.max(jnp.abs(y32))) + 1e-9
+    )
+    assert rel < 0.1
+
+
+# -- requant chaining (whisper conv1 → conv2) ---------------------------------
+
+def _chained_frontend(rng):
+    from repro.configs import get_config, smoke_config
+    from repro.models.whisper import Whisper, conv_frontend
+
+    cfg = smoke_config(get_config("whisper-medium")).replace(
+        conv_backend="sliding_pallas"
+    )
+    model = Whisper(cfg)
+    params = model.init(jax.random.key(0))
+    mels = jnp.asarray(rng.normal(size=(1, 32, 80)).astype(np.float32))
+    calib = quant.Calibration()
+    with quant.collecting(calib):
+        f32 = conv_frontend(params["frontend"], mels, cfg)
+    spec = calib.spec(chains=quant.CHAINS)
+    qparams = quant.quantize_params(params, spec=spec)
+    return cfg, params, qparams, mels, f32, spec
+
+
+def test_chained_spec_marks_consumed_int8(rng):
+    _, _, qparams, _, _, spec = _chained_frontend(rng)
+    assert "out_scale" in spec["whisper/conv1"]
+    np.testing.assert_allclose(
+        float(spec["whisper/conv1"]["out_scale"]),
+        float(spec["whisper/conv2"]["x_scale"]),
+    )
+    qw1 = qparams["frontend"]["conv1_w"]
+    assert qw1.out_scale is not None
+
+
+def test_chained_frontend_single_dequant_site(rng):
+    """Chained: conv1 emits int8 directly (no f32 materialization between
+    the convs) — exactly ONE dequant site remains (conv2's output)."""
+    from repro.models.whisper import conv_frontend
+
+    cfg, params, qparams, mels, f32, spec = _chained_frontend(rng)
+    qcfg = cfg.replace(conv_precision="w8a8")
+    with quant.counting_dequants() as sites:
+        got = conv_frontend(qparams["frontend"], mels, qcfg)
+    assert sites == ["whisper/conv2"]
+    rel = float(jnp.max(jnp.abs(got - f32))) / (
+        float(jnp.max(jnp.abs(f32))) + 1e-9
+    )
+    assert rel < 0.1
+
+    # unchained spec (no out_scale): both convs dequantize to float
+    qp2 = quant.quantize_params(params, spec=None)
+    with quant.counting_dequants() as sites2:
+        conv_frontend(qp2["frontend"], mels, qcfg)
+    assert sorted(sites2) == ["whisper/conv1", "whisper/conv2"]
+
+
+def test_chained_frontend_bit_exact_vs_oracle_composition(rng):
+    """The chained Pallas path equals composing the int32-exact oracle
+    convs (conv1 with out_scale → int8 → conv2) bit for bit."""
+    from repro.models.whisper import conv_frontend
+
+    cfg, _, qparams, mels, _, _ = _chained_frontend(rng)
+    qcfg = cfg.replace(conv_precision="w8a8")
+    got = conv_frontend(qparams["frontend"], mels, qcfg)
+    fr = qparams["frontend"]
+    qw1, qw2 = fr["conv1_w"], fr["conv2_w"]
+    y1 = qconv.conv1d_q(
+        mels, qw1, fr["conv1_b"], mode="w8a8", x_scale=qw1.x_scale,
+        out_scale=qw1.out_scale, padding="SAME", activation="gelu",
+    )
+    assert y1.dtype == jnp.int8  # the inter-conv activation IS int8
+    y2 = qconv.conv1d_q(
+        y1, qw2, fr["conv2_b"], mode="w8a8", x_scale=qw2.x_scale,
+        padding="SAME", stride=2, activation="gelu",
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(y2),
+                               rtol=1e-5, atol=1e-6)
+
+
+# -- calibration reservoir ----------------------------------------------------
+
+def test_reservoir_is_deterministic_and_bounded(rng):
+    a, b = quant.Calibration(reservoir=128, seed=7), quant.Calibration(
+        reservoir=128, seed=7
+    )
+    for i in range(5):
+        x = jnp.asarray(rng.normal(size=(1, 200, 4)).astype(np.float32))
+        for c in (a, b):
+            c.observe("s", x)
+    st = a.stats["s"]
+    assert st.vals.size == 128  # bounded, not grow-per-batch
+    np.testing.assert_array_equal(st.vals, b.stats["s"].vals)
+    np.testing.assert_allclose(float(a.site_scale("s")),
+                               float(b.site_scale("s")))
+
+
+def test_reservoir_represents_late_batches():
+    """True reservoir sampling: every batch of the stream is (roughly)
+    equally represented — the old first-come fill kept only early batches
+    once full, biasing percentile clipping."""
+    calib = quant.Calibration(reservoir=256, seed=0)
+    for i in range(10):  # batch i holds the constant value i+1
+        calib.observe("s", jnp.full((1, 1000, 1), float(i + 1)))
+    vals = calib.stats["s"].vals
+    assert vals.size == 256
+    seen = {int(v) for v in vals}
+    # a uniform 256-sample over 10k elements misses a given batch with
+    # probability (0.9)^256 ≈ 2e-12 — all 10 batches must appear
+    assert seen == set(range(1, 11))
+    # and the 99.9th percentile reflects the LATE large values
+    assert float(calib.site_scale("s")) > 9.0 / 127.0
+
+
+def test_observe_skips_int8_codes():
+    """A chained conv hands its consumer int8 CODES — observing those as
+    activations would poison the stats; they are skipped."""
+    calib = quant.Calibration()
+    with quant.collecting(calib):
+        quant.observe("s", jnp.ones((2, 4), jnp.int8))
+    assert calib.seen == []
+
+
+# -- quant 1-D dispatch fallback ----------------------------------------------
+
+def test_quant_1d_tuned_regression_falls_back(rng, tmp_path, monkeypatch):
+    """When the autotune cache shows the quant path measurably slower than
+    the float path for a 1-D shape, ops.conv1d serves the float path (with
+    a recorded reason) instead of the slower kernel — unless the call is
+    pinned to int8 (requant chain), which must keep the quant kernels."""
+    from repro.kernels.ops import _QUANT_FALLBACKS
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "t.json"))
+    autotune.invalidate()
+    x = jnp.asarray(rng.normal(size=(1, 64, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 8, 8)).astype(np.float32))
+    kq = autotune.conv1d_key(1, 64, 8, 8, 3, 1, "w8a8")
+    kf = autotune.conv1d_key(1, 64, 8, 8, 3, 1, "float32")
+    autotune.record(kq, {"tile_l": 64, "cin_block": 0, "cout_block": 0,
+                         "regime": "custom", "us": 500.0})
+    autotune.record(kf, {"tile_l": 64, "cin_block": 0, "cout_block": 0,
+                         "regime": "custom", "us": 100.0})
+    _QUANT_FALLBACKS.clear()
+    got = ops.conv1d(x, w, precision="w8a8")
+    assert kq in _QUANT_FALLBACKS
+    want = ops.conv1d(x, w)  # the float sliding path
+    np.testing.assert_allclose(got, want, **TIGHT)
+
+    # pinned: int8 input stays on the quant kernels despite the cache entry
+    qw, sx, xq = _qops(x, w)
+    got8 = ops.conv1d(xq, w, precision="w8a8", x_scale=sx)
+    ref8 = qconv.conv1d_q(x, qw, None, mode="w8a8", x_scale=sx)
+    np.testing.assert_allclose(got8, ref8, **TIGHT)
+    autotune.invalidate()
+
+
+def test_quant_1d_no_fallback_without_tuned_timings(rng, tmp_path,
+                                                    monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "t.json"))
+    autotune.invalidate()
+    from repro.kernels.ops import _QUANT_FALLBACKS
+
+    _QUANT_FALLBACKS.clear()
+    x = jnp.asarray(rng.normal(size=(1, 32, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 4, 4)).astype(np.float32))
+    got = ops.conv1d(x, w, precision="w8a8")
+    assert not _QUANT_FALLBACKS
+    qw, sx, _ = _qops(x, w)
+    want = qconv.conv1d_q(x, qw, None, mode="w8a8", x_scale=sx)
+    np.testing.assert_allclose(got, want, **TIGHT)
+    autotune.invalidate()

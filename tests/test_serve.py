@@ -1,0 +1,134 @@
+"""Serving driver (`repro.launch.serve`): generate(), slot recycling,
+enc-dec cache clamping, and the int8 KV cache.
+
+The int8 KV contract (DESIGN.md §8): cache leaves with a ``kv_seq`` axis
+store int8 codes + a per-(position, head) f32 scale over the head_dim row;
+prefill output quantizes before padding, decode steps quantize each new
+token's rows in place, attention dequantizes at read. The acceptance
+property is behavioral: greedy decode must emit the SAME tokens as the
+float cache on the smoke config, with ~2×+ fewer cache bytes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.distributed.sharding import Runtime
+from repro.launch.serve import (
+    cache_nbytes,
+    generate,
+    init_cache_concrete,
+    pad_cache_to_defs,
+    quantize_cache_to_defs,
+)
+from repro.models import build_model
+
+
+def _smoke_model(name="qwen3-1.7b", **overrides):
+    cfg = smoke_config(get_config(name)).replace(**overrides)
+    model = build_model(cfg, Runtime())
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, B=2, P=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.integers(2, cfg.vocab_size, size=(B, P)), jnp.int32
+    )
+
+
+# -- done-mask slot recycling -------------------------------------------------
+
+def test_generate_done_mask_slot_recycling():
+    """A slot whose sequence hits eos is marked done and keeps emitting eos
+    into masked positions; an eos id that can never occur marks nothing."""
+    cfg, model, params = _smoke_model(eos_id=-1)  # tokens are >= 0
+    prompts = _prompts(cfg)
+    toks, done = generate(model, params, prompts, gen_len=6, cache_len=24)
+    assert toks.shape == (2, 6)
+    assert not bool(done.any())
+
+    # now make the first emitted token of slot 0 the eos id: slot 0 is done
+    # from step 0 and every later token in that slot is pinned to eos
+    eos = int(toks[0, 0])
+    cfg2 = cfg.replace(eos_id=eos)
+    model2 = build_model(cfg2, Runtime())
+    toks2, done2 = generate(model2, params, prompts, gen_len=6, cache_len=24)
+    assert bool(done2[0])
+    assert bool((toks2[0] == eos).all())
+
+
+# -- enc-dec cache clamp ------------------------------------------------------
+
+def test_whisper_generate_clamps_encdec_cache():
+    """Whisper splits the cache between encoder frames and decoder tokens;
+    generate() must clamp an undersized cache_len instead of crashing on a
+    negative pad (the seed bug)."""
+    cfg, model, params = _smoke_model("whisper-medium")
+    prompts = _prompts(cfg, B=1, P=8)
+    toks, _ = generate(model, params, prompts, gen_len=4, cache_len=4)
+    assert toks.shape == (1, 4)
+
+
+# -- int8 KV cache ------------------------------------------------------------
+
+def test_kv_cache_int8_roundtrip_greedy_tokens_match():
+    """Greedy decode with the int8 KV cache matches the float-cache tokens
+    on the smoke config, and the cache defs report ≥2× fewer bytes."""
+    cfg, model, params = _smoke_model()
+    prompts = _prompts(cfg)
+    toks_fp, _ = generate(model, params, prompts, gen_len=8, cache_len=24)
+
+    qcfg = cfg.replace(kv_quant="int8")
+    qmodel = build_model(qcfg, Runtime())
+    toks_q, _ = generate(qmodel, params, prompts, gen_len=8, cache_len=24)
+    np.testing.assert_array_equal(np.asarray(toks_fp), np.asarray(toks_q))
+
+    b_fp = cache_nbytes(model.cache_defs(2, 24), cfg.param_dtype)
+    b_q = cache_nbytes(qmodel.cache_defs(2, 24), qcfg.param_dtype)
+    assert b_fp / b_q >= 2.0, (b_fp, b_q)
+
+
+def test_kv_cache_int8_defs_pair_and_pad_coherently():
+    """Every int8 cache leaf has a kv_seq-named ``_scale`` sibling, and
+    pad_cache_to_defs pads the (q, scale) pair along the same axis."""
+    cfg, model, params = _smoke_model(kv_quant="int8")
+    B, P, S = 2, 8, 24
+    prompts = _prompts(cfg, P=P)
+    logits, cache = jax.jit(model.prefill)(params, {"tokens": prompts})
+    defs = model.cache_defs(B, S)
+    for name, d in defs.items():
+        if d.dtype == "int8":
+            sd = defs[f"{name}_scale"]
+            assert "kv_seq" in sd.axes and sd.shape[-1] == 1
+
+    qcache = quantize_cache_to_defs(cache, defs)
+    assert qcache["k"].dtype == jnp.int8
+    assert qcache["k_scale"].dtype == jnp.float32
+    # round trip: dequantized codes reproduce the prefill KV to int8 error
+    deq = qcache["k"].astype(jnp.float32) * qcache["k_scale"]
+    err = jnp.abs(deq - cache["k"].astype(jnp.float32))
+    assert float(err.max()) <= float(qcache["k_scale"].max()) * 0.5 + 1e-6
+
+    full = init_cache_concrete(model, B, S)
+    padded = pad_cache_to_defs(qcache, full, defs)
+    assert padded["k"].shape[2] == S and padded["k_scale"].shape[2] == S
+    # padded tail rows: zero codes AND zero scales (dequant to 0, masked)
+    assert bool((padded["k"][:, :, P:] == 0).all())
+    assert bool((padded["k_scale"][:, :, P:] == 0).all())
+
+
+@pytest.mark.parametrize("arch", ["jamba-1.5-large-398b", "whisper-medium"])
+def test_kv_cache_int8_decode_runs_other_families(arch):
+    """Hybrid (jamba: KV + recurrent states) and enc-dec (whisper: xk/xv
+    cross leaves) decode end to end with the int8 cache."""
+    cfg, model, params = _smoke_model(arch, kv_quant="int8")
+    prompts = _prompts(cfg, B=1, P=8)
+    toks, _ = generate(model, params, prompts, gen_len=4, cache_len=24)
+    assert toks.shape == (1, 4)
+
+    fp = build_model(cfg.replace(kv_quant="fp"), Runtime())
+    toks_fp, _ = generate(fp, params, prompts, gen_len=4, cache_len=24)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks_fp))
