@@ -16,9 +16,11 @@ trackable across PRs:
   quant/*     (--quant) int8 PTQ inference (repro.quant) vs bf16 vs f32
               sliding, and vs int8 im2col — the paper's conclusion claim
               that compression methods compose with the technique
-  serve/*     (--serve) smoke-config greedy decode with the fp KV cache vs
-              the int8 (kv_quant) cache: per-token time, cache bytes, and
-              greedy-tokens-match check
+  serve/*     (--serve) smoke-config decode-step time per cache variant:
+              fp cache, int8 cache with the dequant-view read (kv8), and
+              the fused flash read over resident int8 codes (kv8_fused) —
+              plus est. HBM bytes per attention read and a greedy-tokens-
+              match check across all three
 
 ``--autotune`` runs the shape-keyed search (``repro.kernels.autotune``) over
 every fig1/fig2/conv1d conv shape, persists winners in the JSON tuning cache
@@ -110,6 +112,29 @@ def autotune_rows(quick: bool) -> list[str]:
             f"autotune/pool1d_L{L}_w{wdw},{r.best_us:.1f},"
             f"best={r.best['method']} speedup_vs_default={r.speedup:.2f}x"
         )
+    # fused decode-attention tiling (kv_seq block × head grouping) at the
+    # qwen3 serving cache shape — feeds ops.attention_decode's dispatch
+    from repro.optim.compress import quantize_int8
+
+    # the shape serve_rows/CI actually decode at (qwen3 smoke, cache 2048)
+    # so the persisted entry is the one dispatch consults there
+    Bq, Sq, KVq, Gq, Dq = 2, 2048, 2, 2, 32
+    qd = jnp.asarray(
+        rng.normal(size=(Bq, KVq * Gq, Dq)).astype(np.float32)
+    )
+    kd = jnp.asarray(rng.normal(size=(Bq, Sq, KVq, Dq)).astype(np.float32))
+    vd = jnp.asarray(rng.normal(size=(Bq, Sq, KVq, Dq)).astype(np.float32))
+    kq8, ks8 = quantize_int8(kd)
+    vq8, vs8 = quantize_int8(vd)
+    r = autotune.autotune_attention_decode(
+        qd, kq8, vq8, k_scale=ks8, v_scale=vs8,
+        block_candidates=(256,) if quick else None,
+    )
+    rows.append(
+        f"autotune/attn_dec_S{Sq}_int8,{r.best_us:.1f},"
+        f"best=bs{r.best['block_s']}_hb{r.best['h_block']} "
+        f"speedup_vs_default={r.speedup:.2f}x"
+    )
     return rows
 
 
@@ -269,57 +294,128 @@ def quant_rows(quick: bool) -> list[str]:
 
 
 def serve_rows(quick: bool) -> list[str]:
-    """``serve/*`` rows: smoke-config greedy decode, fp KV cache vs int8
-    (``kv_quant``) — per-token decode wall time, cache bytes, and a
-    tokens-match check (the int8 cache must not change greedy output)."""
-    import time as _time
-
+    """``serve/*`` rows: smoke-config **decode-step** wall time per cache
+    variant — fp cache (fused read), int8 cache with the PR-4 dequant-view
+    read (``attn_decode="view"``, the ``_kv8`` baseline rows), and the
+    fused flash read over resident int8 codes (``_kv8_fused``, DESIGN.md
+    §9). Candidates are timed interleaved (``_race``) because the rows are
+    ratios; each row carries the est. HBM bytes the attention read moves
+    per step (int8 storage vs the f32 view's extra write+read) and a
+    tokens-match check (greedy output must be identical across all three).
+    The cache is sized well past prompt+gen — decode reads the whole
+    static cache every step, which is the traffic being measured."""
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     from benchmarks.common import row
     from repro.configs import get_config, smoke_config
-    from repro.distributed.sharding import Runtime
+    from repro.distributed.sharding import ParamDef, Runtime
     from repro.launch import serve as S
     from repro.models import build_model
 
     rows = []
     B, P, G = 2, 16, 8
-    base = smoke_config(get_config("qwen3-1.7b"))
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(2, base.vocab_size, size=(B, P)), jnp.int32
-    )
-    cache_len = P + G
-    toks, nbytes, times = {}, {}, {}
-    for tag, kvq in (("fp", "fp"), ("kv8", "int8")):
-        cfg = base.replace(kv_quant=kvq)
+
+    def kv_read_bytes(model, cfg, cache_len, view: bool) -> int:
+        """Bytes the per-step attention read moves: the kv_seq-axis cache
+        leaves as stored, plus — on the dequant-view path — the float
+        view of the int8 code leaves it materializes (write + read)."""
+        import math
+
+        total = 0
+        for d in jax.tree.leaves(
+            model.cache_defs(B, cache_len),
+            is_leaf=lambda x: isinstance(x, ParamDef),
+        ):
+            if "kv_seq" not in d.axes:
+                continue
+            n = math.prod(d.shape)
+            total += n * jnp.dtype(d.dtype or cfg.param_dtype).itemsize
+            if view and d.dtype == "int8":
+                fsize = jnp.dtype(cfg.compute_dtype).itemsize
+                total += 2 * n * fsize  # materialize + re-read the view
+        return total
+
+    def prep(arch, cache_len, kvq, attn):
+        cfg = smoke_config(get_config(arch)).replace(
+            kv_quant=kvq, attn_decode=attn
+        )
         model = build_model(cfg, Runtime())
         params = model.init(jax.random.key(0))
-        tk = None
-        for it in range(2):  # first run pays jit compile; time the second
-            t0 = _time.perf_counter()
-            tk, _ = S.generate(
-                model, params, prompts, gen_len=G, cache_len=cache_len
-            )
-            jax.block_until_ready(tk)
-            times[tag] = _time.perf_counter() - t0
-        toks[tag] = np.asarray(tk)
-        nbytes[tag] = S.cache_nbytes(
-            model.cache_defs(B, cache_len), cfg.param_dtype
+        rng = np.random.default_rng(0)
+        prompts = jnp.asarray(
+            rng.integers(2, cfg.vocab_size, size=(B, P)), jnp.int32
         )
-    match = bool((toks["fp"] == toks["kv8"]).all())
-    rows.append(row(
-        "serve/qwen3_smoke_decode_fp", times["fp"] / (B * G),
-        f"cache_bytes={nbytes['fp']}",
-    ))
-    rows.append(row(
-        "serve/qwen3_smoke_decode_kv8", times["kv8"] / (B * G),
-        f"cache_bytes={nbytes['kv8']} "
-        f"bytes_ratio={nbytes['fp'] / nbytes['kv8']:.2f}x "
-        f"tokens_match={match}",
-    ))
+        toks, _ = S.generate(
+            model, params, prompts, gen_len=G, cache_len=cache_len
+        )
+        logits, cache = S.prefill_cache(
+            model, params, prompts, cache_len=cache_len, gen_len=G
+        )
+        decode = S._jitted(model)[1]
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        step = (decode, (params, cache, tok, jnp.int32(P)))
+        return cfg, model, np.asarray(toks), step
+
+    variants = (
+        ("fp", "fp", "fused"),
+        ("kv8", "int8", "view"),
+        ("kv8_fused", "int8", "fused"),
+    )
+    archs = [("qwen3", "qwen3-1.7b", 2048)]
+    if not quick:
+        archs += [
+            ("whisper", "whisper-medium", 512),
+            ("jamba", "jamba-1.5-large-398b", 512),
+        ]
+    for name, arch, cache_len in archs:
+        state = {
+            tag: prep(arch, cache_len, kvq, attn)
+            for tag, kvq, attn in variants
+        }
+        times = _race({t: st[3] for t, st in state.items()}, iters=30)
+        toks = {t: st[2] for t, st in state.items()}
+        # tokens_match is the fused-read acceptance property (same int8
+        # cache, fused vs view read); match_fp reports the int8 cache's
+        # own greedy drift vs the float cache (quantization error — can
+        # legitimately flip an argmax at long cache lengths)
+        match = bool((toks["kv8_fused"] == toks["kv8"]).all())
+        match_fp = bool((toks["kv8"] == toks["fp"]).all())
+        nbytes, rbytes = {}, {}
+        for (tag, kvq, attn), (cfg, model, _, _step) in zip(
+            variants, state.values()
+        ):
+            clen = S.resolve_cache_len(cfg, cache_len, P, G)
+            nbytes[tag] = S.cache_nbytes(
+                model.cache_defs(B, clen), cfg.param_dtype
+            )
+            rbytes[tag] = kv_read_bytes(model, cfg, clen, attn == "view")
+        rows.append(row(
+            f"serve/{name}_smoke_decode_fp", times["fp"],
+            # metric marker: since PR 5 these rows time ONE decode step
+            # (interleaved min), not whole-generate/(B·G) as in PR 4 —
+            # cross-PR diffs of BENCH_conv.json must not read the
+            # methodology change as a perf change
+            f"metric=min_decode_step cache_bytes={nbytes['fp']} "
+            f"read_bytes_step={rbytes['fp']}",
+        ))
+        rows.append(row(
+            f"serve/{name}_smoke_decode_kv8", times["kv8"],
+            f"cache_bytes={nbytes['kv8']} "
+            f"read_bytes_step={rbytes['kv8']} "
+            f"bytes_ratio={nbytes['fp'] / nbytes['kv8']:.2f}x "
+            f"tokens_match_fp={match_fp}",
+        ))
+        rows.append(row(
+            f"serve/{name}_smoke_decode_kv8_fused", times["kv8_fused"],
+            f"cache_bytes={nbytes['kv8_fused']} "
+            f"read_bytes_step={rbytes['kv8_fused']} "
+            f"read_ratio_vs_view={rbytes['kv8'] / rbytes['kv8_fused']:.2f}x "
+            f"speedup_vs_kv8={times['kv8'] / times['kv8_fused']:.2f}x "
+            f"speedup_vs_fp={times['fp'] / times['kv8_fused']:.2f}x "
+            f"tokens_match={match}",
+        ))
     return rows
 
 

@@ -63,6 +63,11 @@ class ModelConfig:
     # absmax int8 + f32 scale leaves; dequantized at attention read —
     # DESIGN.md §8, `serve --kv-quant int8`)
     kv_quant: str = "fp"
+    # decode-attention read: "fused" (flash-style kernel with the int8
+    # dequant folded into the online softmax — no float K/V view,
+    # DESIGN.md §9) | "view" (the PR-4 dequantize-whole-cache baseline,
+    # kept for A/B benchmarks and token-equality tests)
+    attn_decode: str = "fused"
     # tokenizer EOS id for serving slot recycling (per-arch; 1 is the
     # llama-family convention and the synthetic-data default)
     eos_id: int = 1

@@ -118,9 +118,20 @@ def sliding_reduce(
     return jnp.moveaxis(y, -1, axis)
 
 
+def _extreme(dtype, *, lo: bool) -> Array:
+    """Identity element for max (lo) / min reductions — ±inf for floats,
+    the integer bounds for int dtypes (int8 codes from a requant-chained
+    conv max-pool exactly: the per-tensor grid is monotonic)."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.inexact):
+        return jnp.array(-jnp.inf if lo else jnp.inf, dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.array(info.min if lo else info.max, dtype)
+
+
 def sliding_max(x: Array, window: int, axis: int = -1) -> Array:
     return sliding_reduce(
-        x, window, jnp.maximum, jnp.array(-jnp.inf, x.dtype), axis=axis
+        x, window, jnp.maximum, _extreme(x.dtype, lo=True), axis=axis
     )
 
 
@@ -141,7 +152,7 @@ def sliding_max_shift(x: Array, window: int, axis: int = -1) -> Array:
 
 def sliding_min(x: Array, window: int, axis: int = -1) -> Array:
     return sliding_reduce(
-        x, window, jnp.minimum, jnp.array(jnp.inf, x.dtype), axis=axis
+        x, window, jnp.minimum, _extreme(x.dtype, lo=False), axis=axis
     )
 
 

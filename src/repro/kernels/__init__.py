@@ -9,6 +9,11 @@
                        accumulation and fused dequant→bias→act→requant
                        epilogue (PTQ inference; repro.quant, DESIGN.md §7)
   sliding_pool.py    — two-phase scan pooling kernel
+  attention_decode.py — fused single-query decode attention: flash-style
+                       online softmax over kv_seq blocks with the int8
+                       KV-cache dequant folded in (codes stay resident;
+                       DESIGN.md §9) + the compiled blocked-scan CPU path
+                       and the dequant-view oracle
   ssm_scan.py        — selective-SSM scan with VMEM-resident state (the
                        paper's streaming insight applied to Mamba; forward)
   autotune.py        — shape-keyed tile/block/regime search with a

@@ -111,6 +111,13 @@ def conv1d_dw_key(B, L, C, K, stride, dtype) -> str:
     return f"conv1ddw|B{B}|L{L}|C{C}|K{K}|s{stride}|{dtype}"
 
 
+def attn_dec_key(B, S, KV, G, D, kind) -> str:
+    """Fused decode-attention shape key (``ops.attention_decode``). ``kind``
+    is "int8" for the quantized cache, else the float cache dtype name —
+    the two tile very differently (int8 rows are 4× denser in VMEM)."""
+    return f"attn_dec|B{B}|S{S}|KV{KV}|G{G}|D{D}|{kind}"
+
+
 def pool1d_key(B, L, C, window, op, dtype) -> str:
     """Sliding-pool shape key; the tuned entry's ``method`` field selects
     the kernel evaluation (``scan`` two-phase vs ``shift`` O(n·w) loop —
@@ -343,6 +350,73 @@ def autotune_conv1d_depthwise(
         for cb in _blocks_for(C)
     ]
     default = {"tile_l": min(DEFAULT_TILE_L, out_len), "c_block": 0}
+    return _search(key, run, cands, default)
+
+
+def autotune_attention_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    lengths: jax.Array | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    impl: str | None = None,
+    interpret: bool | None = None,
+    block_candidates: Iterable[int] | None = None,
+) -> Result:
+    """Search the fused decode-attention tiling (kv_seq block size ×
+    KV-head grouping) for a cache shape; persist the winner under the
+    ``attn_dec|…`` key consulted by ``ops.attention_decode``.
+
+    q: (B, H, D); k/v: (B, S, KV, D) (int8 with scale rows, or float).
+    The timed call is the dispatched impl — the compiled blocked-scan path
+    on CPU (where ``block_s`` controls the scan tile) and the Pallas
+    kernel on TPU (where ``h_block`` also matters)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import attention_decode as attn_dec
+    from repro.kernels import ops
+
+    B, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    kind = "int8" if k.dtype == jnp.int8 else k.dtype.name
+    key = attn_dec_key(B, S, KV, H // KV, D, kind)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+
+    def run(cfg):
+        return ops.attention_decode(
+            q, k, v, lengths=lengths, k_scale=k_scale, v_scale=v_scale,
+            impl=impl, block_s=cfg["block_s"], h_block=cfg["h_block"],
+            interpret=interpret,
+        )
+
+    tiles = sorted(
+        {
+            t for t in (block_candidates or attn_dec.BLOCK_S_CANDIDATES)
+            if t < S
+        }
+        | {S}  # single-block: the whole cache in one pass (CPU winner)
+    )
+    # h_block only exists on the Pallas kernel; the compiled jax path
+    # ignores it, so searching both values there would just time the
+    # identical computation twice and persist noise
+    resolved_impl = impl or (
+        "pallas" if jax.default_backend() == "tpu" else "jax"
+    )
+    hbs = sorted({1, KV}) if resolved_impl == "pallas" else [1]
+    cands = [
+        {"block_s": t, "h_block": hb} for t in tiles for hb in hbs
+    ]
+    # the speedup baseline mirrors what an UNTUNED ops.attention_decode
+    # would actually run for this impl (single block on the jax path,
+    # DEFAULT_BLOCK_S tiles on pallas) — else the recorded
+    # speedup_vs_default claims a win over a config dispatch never uses
+    default_bs = (
+        S if resolved_impl != "pallas" else min(attn_dec.DEFAULT_BLOCK_S, S)
+    )
+    default = {"block_s": default_bs, "h_block": 1}
     return _search(key, run, cands, default)
 
 

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 
 from repro.core import conv as core_conv
 from repro.kernels import (
+    attention_decode as attn_dec,
     autotune,
     im2col_gemm,
     sliding_conv1d,
@@ -711,6 +712,90 @@ def conv2d(
         y = im2col_gemm.conv2d_im2col_hbm(x, w, stride=stride, interpret=interpret)
         return epilogue_unfused(y, bias, activation)
     raise ValueError(backend)
+
+
+# ---------------------------------------------------------------------------
+# fused decode attention (single-query, int8 or fp KV cache)
+# ---------------------------------------------------------------------------
+
+# autotune shape key → impl that served it ("pallas" | "jax" | "ref"),
+# recorded at trace time. Serving prints these lines so CI can assert the
+# fused path actually dispatched for the decode loop (DESIGN.md §9).
+ATTN_DECODE_DISPATCH: dict[str, str] = {}
+
+
+def attention_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    lengths: jax.Array,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    impl: str | None = None,
+    block_s: int | None = None,
+    h_block: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused flash-style decode attention against the (possibly int8) KV
+    cache — the dequant folds into the online softmax, so the cache's
+    int8 codes stay resident and no float K/V view is materialized
+    (DESIGN.md §9).
+
+    q: (B, H, D) the new token's query heads; k/v: (B, S, KV, D) cache
+    leaves — int8 codes with per-(position, head) f32 ``k_scale``/
+    ``v_scale`` rows (B, S, KV, 1), or float rows without. ``lengths``:
+    (B,) int32 valid-prefix per slot (decode: ``pos + 1``; cross-attention:
+    ragged encoder lengths — a 0 length yields a zero output row). GQA is
+    implicit: H = KV · G, grouped query layout, K/V broadcast per group.
+
+    ``impl``: "pallas" (TPU kernel; interpret elsewhere), "jax" (compiled
+    blocked scan — same algebra, the CPU serving path), "ref" (dequant-view
+    oracle). None → pallas on TPU, jax otherwise. ``block_s``/``h_block``
+    resolve explicit → ``attn_dec|…`` autotune cache entry → default.
+    Returns (B, H, D) f32.
+    """
+    B, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    if H % KV:
+        raise ValueError(f"H={H} not divisible by KV={KV}")
+    G = H // KV
+    quantized = k.dtype == jnp.int8
+    if quantized and (k_scale is None or v_scale is None):
+        raise ValueError("int8 KV cache needs its k_scale/v_scale rows")
+    kind = "int8" if quantized else k.dtype.name
+    key = autotune.attn_dec_key(B, S, KV, G, D, kind)
+    cfg = _tuned_fill(key, block_s=block_s, h_block=h_block)
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "jax"
+    # untuned defaults: the Pallas kernel tiles kv_seq to bound VMEM; the
+    # compiled CPU path defaults to ONE block (the whole cache) — decode
+    # caches are cache-hierarchy-resident there and the blocked scan only
+    # adds carry overhead (measured: single-block 1.3× over block_s=128 at
+    # S=512). The ``attn_dec|…`` tuned entry overrides either way.
+    block_s = cfg["block_s"] or (
+        attn_dec.DEFAULT_BLOCK_S if impl == "pallas" else S
+    )
+    h_block = cfg["h_block"] or 1
+    ATTN_DECODE_DISPATCH[key] = impl
+    q4 = q.reshape(B, KV, G, D)
+    if impl == "pallas":
+        interpret = use_interpret() if interpret is None else interpret
+        out = attn_dec.decode_attention_pallas(
+            q4, k, v, k_scale, v_scale, lengths,
+            block_s=block_s, h_block=h_block, interpret=interpret,
+        )
+    elif impl == "jax":
+        out = attn_dec.attention_decode_jax(
+            q4, k, v, k_scale, v_scale, lengths, block_s=block_s
+        )
+    elif impl == "ref":
+        out = attn_dec.attention_decode_ref(
+            q4, k, v, k_scale, v_scale, lengths
+        )
+    else:
+        raise ValueError(f"unknown attention_decode impl {impl!r}")
+    return out.reshape(B, H, D)
 
 
 def matmul(a: jax.Array, b: jax.Array, *, interpret: bool | None = None) -> jax.Array:

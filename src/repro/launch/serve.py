@@ -20,10 +20,14 @@ unchanged.
 
 ``--kv-quant int8`` stores the KV cache as int8 with per-row f32 scales
 (quantized along each position's head_dim row via the ``optim/compress``
-primitive): the prefill cache is quantized before padding, decode steps
-quantize each new token's K/V rows in place, and attention dequantizes at
-read (DESIGN.md §8). Reported cache bytes drop ~2× (bf16 params) to ~3.5×
-(f32 smoke).
+primitive): the prefill cache is quantized before padding and decode steps
+quantize each new token's K/V rows in place — both through the ONE
+``common.quantize_kv_leaf`` quantizer (DESIGN.md §8). The attention READ
+is fused by default (``--attn-decode fused``): the flash-style decode
+kernel folds the dequant into its online softmax so the int8 codes stay
+resident and no float K/V view is materialized (DESIGN.md §9);
+``--attn-decode view`` keeps the dequantize-whole-cache baseline for A/B
+runs. Reported cache bytes drop ~2× (bf16 params) to ~3.5× (f32 smoke).
 """
 from __future__ import annotations
 
@@ -50,11 +54,13 @@ def init_cache_concrete(model, B, S):
 
 def quantize_cache_to_defs(cache, defs):
     """Quantize float prefill cache leaves that the (``cfg.kv_quant``)
-    cache defs store as int8: per-row absmax along the last (head_dim)
-    axis — the ``optim/compress`` primitive — emitting the paired
-    ``<name>_scale`` leaf the defs expect. Leaves the defs keep float
-    (recurrent conv/ssm states) pass through unchanged."""
-    from repro.optim.compress import quantize_int8
+    cache defs store as int8, emitting the paired ``<name>_scale`` leaf
+    the defs expect. The actual quantizer is ``common.quantize_kv_leaf``
+    — the SAME function the per-token decode update
+    (``common.store_kv_token``) uses, so the prefill and decode halves of
+    the (q, scale) pair can never drift onto different grids. Leaves the
+    defs keep float (recurrent conv/ssm states) pass through unchanged."""
+    from repro.models.common import quantize_kv_leaf
 
     def walk(c, d):
         out = {}
@@ -64,7 +70,7 @@ def quantize_cache_to_defs(cache, defs):
             elif name.endswith("_scale") and name[: -len("_scale")] in d:
                 continue  # emitted alongside its int8 base leaf below
             elif df.dtype == "int8" and f"{name}_scale" in d:
-                q, s = quantize_int8(c[name])
+                q, s = quantize_kv_leaf(c[name])
                 out[name] = q
                 out[f"{name}_scale"] = s
             else:
@@ -158,6 +164,31 @@ def resolve_cache_len(cfg, cache_len: int, P: int, gen_len: int) -> int:
     return cache_len
 
 
+def prefill_cache(model, params, prompts, *, cache_len: int,
+                  gen_len: int = 0):
+    """Prefill + decode-ready cache: run the model's prefill, then pad
+    (and, under ``cfg.kv_quant``, quantize) the emitted cache up to
+    ``cache_len`` along each leaf's kv_seq axis. Returns (last-token
+    logits, cache). Shared by :func:`generate` and the decode-step
+    benchmarks (``benchmarks.run --serve``), so both time/drive the exact
+    serving cache layout.
+
+    With kv_quant the float prefill leaves quantize FIRST so the
+    (q, scale) pair pads coherently.
+    """
+    cfg = model.cfg
+    B, P = prompts.shape
+    cache_len = resolve_cache_len(cfg, cache_len, P, gen_len)
+    batch = serve_batch(model, B, P, prompts)
+    prefill, _ = _jitted(model)
+    logits, cache = prefill(params, batch)
+    full = init_cache_concrete(model, B, cache_len)
+    defs = model.cache_defs(B, cache_len)
+    if cfg.kv_quant == "int8":
+        cache = quantize_cache_to_defs(cache, defs)
+    return logits, pad_cache_to_defs(cache, full, defs)
+
+
 def generate(model, params, prompts, *, gen_len: int, cache_len: int,
              temperature: float = 0.0, seed: int = 0):
     """prompts: (B, P) int32 -> ((B, gen_len) int32, done mask (B,) bool).
@@ -170,21 +201,10 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
     cfg = model.cfg
     eos = jnp.int32(cfg.eos_id)
     B, P = prompts.shape
-    cache_len = resolve_cache_len(cfg, cache_len, P, gen_len)
-    batch = serve_batch(model, B, P, prompts)
-    prefill, decode = _jitted(model)
-    logits, cache = prefill(params, batch)
-
-    # prefill emitted per-layer KV of length P (or recurrent states); decode
-    # continues into a cache padded to cache_len along each leaf's kv_seq
-    # axis (taken from the cache defs, not inferred from shapes). With
-    # kv_quant the float prefill leaves quantize FIRST so the (q, scale)
-    # pair pads coherently.
-    full = init_cache_concrete(model, B, cache_len)
-    defs = model.cache_defs(B, cache_len)
-    if cfg.kv_quant == "int8":
-        cache = quantize_cache_to_defs(cache, defs)
-    cache = pad_cache_to_defs(cache, full, defs)
+    logits, cache = prefill_cache(
+        model, params, prompts, cache_len=cache_len, gen_len=gen_len
+    )
+    _, decode = _jitted(model)
 
     key = jax.random.key(seed)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
@@ -241,6 +261,11 @@ def main():
                     help="post-training-quantize the conv path (w8a8)")
     ap.add_argument("--kv-quant", choices=["int8"], default=None,
                     help="store the serving KV cache int8 + per-row scales")
+    ap.add_argument("--attn-decode", choices=["fused", "view"],
+                    default="fused",
+                    help="decode-attention read: fused flash kernel "
+                         "(int8 codes stay resident) vs the dequant-view "
+                         "baseline")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -248,6 +273,7 @@ def main():
         cfg = smoke_config(cfg)
     if args.kv_quant:
         cfg = cfg.replace(kv_quant=args.kv_quant)
+    cfg = cfg.replace(attn_decode=args.attn_decode)
     rt = Runtime()
     model = build_model(cfg, rt)
     params = model.init(jax.random.key(args.seed))
@@ -271,6 +297,12 @@ def main():
           f"({args.batch * args.gen / dt:.1f} tok/s); "
           f"{int(done.sum())}/{args.batch} slots recyclable "
           f"(eos={cfg.eos_id})")
+    from repro.kernels import ops as kops
+
+    for akey, impl in sorted(kops.ATTN_DECODE_DISPATCH.items()):
+        # one line per attention-read shape: CI asserts the fused kernel
+        # actually dispatched (the autotune key names the cache shape)
+        print(f"[serve] attn-decode: impl={impl} key={akey}")
     bytes_now = cache_nbytes(model.cache_defs(args.batch, cache_len),
                              cfg.param_dtype)
     fp_model = build_model(cfg.replace(kv_quant="fp"), rt)

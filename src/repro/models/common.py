@@ -92,6 +92,58 @@ def kv_cache_defs(cfg: ModelConfig, layers: int, batch: int, seq: int):
     return d
 
 
+def quantize_kv_leaf(value: Array) -> tuple[Array, Array]:
+    """THE int8 KV quantizer: per-(…, position, head) absmax over the last
+    (head_dim) axis via the ``optim/compress`` per-row primitive. Every
+    producer of the (q, scale) pair — prefill-cache quantization
+    (``serve.quantize_cache_to_defs``) and the per-token decode update
+    (:func:`store_kv_token`) — goes through this one function so the pair
+    layout and grid can never drift apart."""
+    from repro.optim.compress import quantize_int8
+
+    q, s = quantize_int8(value)
+    return q.astype(jnp.int8), s
+
+
+def store_kv_token(
+    cache: dict[str, Array], name: str, fresh: Array, pos: Array, *,
+    axis: int = 1,
+) -> dict[str, Array]:
+    """Write one new token's rows for cache leaf ``name`` at ``pos`` along
+    ``axis`` (the kv_seq axis of a per-layer decode leaf). When the cache
+    stores int8 (a ``<name>_scale`` sibling exists) the fresh rows
+    quantize through :func:`quantize_kv_leaf` and BOTH pair leaves update
+    together — callers never slice the (q, scale) pair by hand. Returns
+    only the updated leaves."""
+    import functools
+
+    upd = functools.partial(jax.lax.dynamic_update_slice_in_dim, axis=axis)
+    if f"{name}_scale" in cache:
+        qrow, srow = quantize_kv_leaf(fresh)
+        return {
+            name: upd(cache[name], qrow, pos),
+            f"{name}_scale": upd(cache[f"{name}_scale"], srow, pos),
+        }
+    return {name: upd(cache[name], fresh.astype(cache[name].dtype), pos)}
+
+
+def strip_kv_prefix(cache: dict[str, Array], prefix: str) -> dict[str, Array]:
+    """View of the ``prefix``-named K/V leaves under their bare names
+    (``attn_k`` → ``k``), carrying the ``_scale`` siblings along — so
+    model code hands ``attention_decode`` a complete (q, scale) pair set
+    without naming the scale leaves by hand."""
+    return {
+        name[len(prefix):]: leaf
+        for name, leaf in cache.items()
+        if name.startswith(prefix)
+    }
+
+
+def add_kv_prefix(leaves: dict[str, Array], prefix: str) -> dict[str, Array]:
+    """Inverse of :func:`strip_kv_prefix` for writing updates back."""
+    return {f"{prefix}{name}": leaf for name, leaf in leaves.items()}
+
+
 def kv_scale_defs(defs: dict) -> dict:
     """Per-row f32 scale leaves pairing int8 cache leaves: each ``name``
     whose rows (last axis) are absmax-quantized gets ``<name>_scale`` of

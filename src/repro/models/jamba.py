@@ -22,7 +22,7 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import ParamDef, Runtime, abstract_params, init_params
 from repro.models import layers as L
 from repro.models import moe as moe_lib
-from repro.models.common import stack_defs
+from repro.models.common import add_kv_prefix, stack_defs, strip_kv_prefix
 from repro.models.mamba import mamba_apply, mamba_defs, mamba_state_defs
 
 Array = jax.Array
@@ -209,17 +209,13 @@ class Jamba:
                 lp = pp[f"pos{j}"]
                 h = L.rms_norm(xc, lp["norm"], cfg.norm_eps)
                 if j == _attn_pos(cfg):
-                    sub = {"k": cl["attn_k"], "v": cl["attn_v"]}
-                    if "attn_k_scale" in cl:
-                        sub["k_scale"] = cl["attn_k_scale"]
-                        sub["v_scale"] = cl["attn_v_scale"]
+                    # strip/add the attn_ prefix as a set: the int8 cache's
+                    # (q, scale) pair leaves travel together, never sliced
+                    # by hand (common.store_kv_token owns the pair update)
+                    sub = strip_kv_prefix(cl, "attn_")
                     y, kv_new = L.attention_decode(lp["attn"], h, sub, pos,
                                                    cfg, rt)
-                    new_cache["attn_k"] = kv_new["k"]
-                    new_cache["attn_v"] = kv_new["v"]
-                    if "k_scale" in kv_new:
-                        new_cache["attn_k_scale"] = kv_new["k_scale"]
-                        new_cache["attn_v_scale"] = kv_new["v_scale"]
+                    new_cache.update(add_kv_prefix(kv_new, "attn_"))
                 else:
                     y, st = mamba_apply(lp["mamba"], h, cfg, rt,
                                         state=cl[f"mamba{j}"])

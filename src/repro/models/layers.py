@@ -460,36 +460,44 @@ def attention_decode(
 
     int8 KV cache (``cfg.kv_quant``, detected from ``k_scale``/``v_scale``
     leaves): storage is int8 with a per-(position, head) f32 scale over the
-    head_dim row — the new token's K/V rows quantize independently via the
-    ``optim/compress`` per-row primitive, and the cache dequantizes at the
-    attention read. Returned cache keeps the (q, scale) pair layout.
+    head_dim row. The new token's rows update through
+    ``common.store_kv_token`` — the one helper that writes the (q, scale)
+    pair, shared with the prefill-cache quantization.
+
+    The cache READ is ``cfg.attn_decode``-selected: "fused" (default)
+    streams the codes through ``ops.attention_decode`` — the flash-style
+    kernel with the dequant folded into the online softmax, no float K/V
+    view (DESIGN.md §9); "view" keeps the PR-4 dequantize-whole-cache
+    baseline for A/B comparison.
     """
-    from repro.optim.compress import quantize_int8
+    from repro.models import common
 
     B, _, _ = x.shape
     positions = jnp.full((B, 1), pos, jnp.int32)
     q, k_new, v_new = _qkv(p, x, cfg, positions, rope=rope)
-    upd = functools.partial(jax.lax.dynamic_update_slice_in_dim, axis=1)
     new = dict(cache)
-    if "k_scale" in cache:
-        for name, fresh in (("k", k_new), ("v", v_new)):
-            qrow, srow = quantize_int8(fresh)
-            new[name] = upd(cache[name], qrow.astype(jnp.int8), pos)
-            new[f"{name}_scale"] = upd(cache[f"{name}_scale"], srow, pos)
-    else:
-        new["k"] = upd(cache["k"], k_new.astype(cache["k"].dtype), pos)
-        new["v"] = upd(cache["v"], v_new.astype(cache["v"].dtype), pos)
-    k = dequant_cache_leaf(new, "k", x.dtype)
-    v = dequant_cache_leaf(new, "v", x.dtype)
-    S = k.shape[1]
-    KV = k.shape[2]
-    qg = _group(q, KV)
-    scale = q.shape[-1] ** -0.5
-    s = jnp.einsum("blkgd,bmkd->bkglm", qg, k).astype(jnp.float32) * scale
-    mask = jnp.arange(S)[None, :] <= pos
-    s = jnp.where(mask[None, None, None], s, -jnp.inf)
-    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bkglm,bmkd->blkgd", w, v).reshape(*q.shape)
+    for name, fresh in (("k", k_new), ("v", v_new)):
+        new.update(common.store_kv_token(new, name, fresh, pos))
+    if cfg.attn_decode == "fused":
+        from repro.kernels import ops
+
+        lengths = jnp.full((B,), pos + 1, jnp.int32)
+        out = ops.attention_decode(
+            q[:, 0], new["k"], new["v"], lengths=lengths,
+            k_scale=new.get("k_scale"), v_scale=new.get("v_scale"),
+        ).astype(x.dtype)[:, None]  # (B, 1, H, D)
+    else:  # "view": dequantize the whole cache, direct softmax
+        k = dequant_cache_leaf(new, "k", x.dtype)
+        v = dequant_cache_leaf(new, "v", x.dtype)
+        S = k.shape[1]
+        KV = k.shape[2]
+        qg = _group(q, KV)
+        scale = q.shape[-1] ** -0.5
+        s = jnp.einsum("blkgd,bmkd->bkglm", qg, k).astype(jnp.float32) * scale
+        mask = jnp.arange(S)[None, :] <= pos
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkglm,bmkd->blkgd", w, v).reshape(*q.shape)
     y = jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(x.dtype))
     return y, new
 
@@ -509,6 +517,49 @@ def cross_attention(
         out = chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
     else:
         out = full_attention(q, k, v, causal=False)
+    return jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(dt))
+
+
+def cross_attention_decode(
+    p, x: Array, cache: dict[str, Array], cfg: ModelConfig
+) -> Array:
+    """Single-token decoder cross-attention against the cached (padded,
+    possibly int8) encoder K/V. x: (B, 1, D); cache holds ``xk``/``xv``
+    (+ ``_scale`` siblings in int8 mode) and ``enc_len`` — the per-slot
+    REAL encoder length, written once at prefill.
+
+    The cross cache is padded past ``enc_len`` with zero rows (zero codes
+    AND zero scales in int8 mode); a zero key scores logit 0, not -inf,
+    so unmasked padding would leak softmax mass. ``enc_len`` is the
+    **ragged per-slot length** set the fused read masks on. A fully-zero
+    cache (structural smoke tests, enc_len 0) attends nothing and returns
+    0 — the same result as softmax over zero values.
+    """
+    dt = x.dtype
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"].astype(dt))
+    if cfg.attn_decode == "fused":
+        from repro.kernels import ops
+
+        # the per-slot encoder length was written into the cache at
+        # prefill — no per-step cache scan to recover a static number
+        lengths = cache["enc_len"].astype(jnp.int32)
+        out = ops.attention_decode(
+            q[:, 0], cache["xk"], cache["xv"], lengths=lengths,
+            k_scale=cache.get("xk_scale"), v_scale=cache.get("xv_scale"),
+        ).astype(dt)[:, None]
+    else:
+        xk = dequant_cache_leaf(cache, "xk", dt)
+        xv = dequant_cache_leaf(cache, "xv", dt)
+        # same validity definition as the fused path: positions past the
+        # prefill-recorded encoder length are padding (an any-nonzero scan
+        # heuristic here could diverge from the fused read on a real
+        # all-zero K row)
+        S = xk.shape[1]
+        valid = jnp.arange(S)[None, :] < cache["enc_len"][:, None]
+        # enc_len 0 (structural zero cache): attend every (zero) row so the
+        # softmax stays finite — output 0, same as the fused path's guard
+        valid = valid | ~valid.any(axis=1, keepdims=True)
+        out = full_attention(q, xk, xv, causal=False, kv_mask=valid)
     return jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(dt))
 
 

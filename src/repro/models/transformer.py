@@ -22,6 +22,36 @@ from repro.models.common import kv_cache_defs, scan_blocks, stack_defs
 Array = jax.Array
 
 
+def projector_apply(
+    pj, patches: Array, *, dtype=None, x_scale=None,
+    site: str = "llava/projector",
+) -> Array:
+    """2-layer MLP projector mapping vision patches into the LM embedding
+    space. patches: (B, P, 1152) float — or **int8 codes** from a requant-
+    chained ``llava.patch_embed`` (``quant.CHAINS``): the conv emits int8
+    on this site's calibrated grid and the projector performs the chain's
+    single dequant here (``x_scale`` — counted via
+    ``quant.counting_dequants``) instead of the conv materializing f32.
+    The input is a calibration site so ``Calibration.spec(chains=...)``
+    can wire the chain."""
+    from repro.quant import calibrate
+
+    calibrate.observe(site, patches)
+    if patches.dtype == jnp.int8:
+        if x_scale is None:
+            raise ValueError("chained int8 patches need their x_scale")
+        calibrate.note_dequant(site)
+        patches = patches.astype(jnp.float32) * jnp.asarray(
+            x_scale, jnp.float32
+        )
+    dt = dtype or patches.dtype
+    v = jax.nn.gelu(
+        jnp.einsum("bpc,cd->bpd", patches.astype(dt), pj["w1"].astype(dt))
+        + pj["b1"].astype(dt)
+    )
+    return jnp.einsum("bpd,de->bpe", v, pj["w2"].astype(dt))
+
+
 class DenseLM:
     def __init__(self, cfg: ModelConfig, rt: Runtime | None = None):
         self.cfg = cfg
@@ -107,13 +137,9 @@ class DenseLM:
         cfg, rt = self.cfg, self.rt
         e = L.embed_tokens(params["embed"], batch["tokens"], cfg)
         if cfg.frontend == "vision_stub" and "patches" in batch:
-            pj = params["projector"]
-            dt = e.dtype
-            v = jax.nn.gelu(
-                jnp.einsum("bpc,cd->bpd", batch["patches"].astype(dt), pj["w1"].astype(dt))
-                + pj["b1"].astype(dt)
+            v = projector_apply(
+                params["projector"], batch["patches"], dtype=e.dtype
             )
-            v = jnp.einsum("bpd,de->bpe", v, pj["w2"].astype(dt))
             e = jnp.concatenate([v, e], axis=1)  # patches prefix, then text
         return rt.constrain(e, "batch", "seq", None)
 

@@ -190,6 +190,12 @@ class Whisper:
             (cfg.num_layers, batch, s_enc, kv, hd),
             ("layers", "batch", "kv_seq", "kv_heads", None), init="zeros",
             dtype=dt)
+        # per-slot REAL encoder length (the cross cache is zero-padded past
+        # it): written once at prefill, read by the fused ragged attention
+        # every decode step — recomputing it would re-scan the whole cache
+        d["enc_len"] = ParamDef(
+            (cfg.num_layers, batch), ("layers", "batch"), init="zeros",
+            dtype="int32")
         if dt:
             d.update(kv_scale_defs({"xk": d["xk"], "xv": d["xv"]}))
         return d
@@ -221,8 +227,10 @@ class Whisper:
             h = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
             xc = xc + L.mlp_apply(lp["mlp"], h, cfg)
             pd = jnp.dtype(cfg.param_dtype)
+            enc_len = jnp.full((xc.shape[0],), enc_out.shape[1], jnp.int32)
             return (xc, aux), {"k": k.astype(pd), "v": v.astype(pd),
-                               "xk": xk.astype(pd), "xv": xv.astype(pd)}
+                               "xk": xk.astype(pd), "xv": xv.astype(pd),
+                               "enc_len": enc_len}
 
         (x, _), cache = scan_blocks(
             (x, jnp.zeros((), jnp.float32)), params["decoder"], body,
@@ -249,22 +257,10 @@ class Whisper:
                 lp["attn"], h, sub, pos, cfg, rt, rope=False)
             xc = xc + y
             h = L.rms_norm(xc, lp["xattn_norm"], cfg.norm_eps)
-            dt = h.dtype
-            q = jnp.einsum("bld,dhk->blhk", h, lp["xattn"]["wq"].astype(dt))
-            xk = L.dequant_cache_leaf(cl, "xk", dt)
-            xv = L.dequant_cache_leaf(cl, "xv", dt)
-            # the cross cache is padded past the real encoder length with
-            # zero rows (zero codes AND zero scales in int8 mode); a zero
-            # key scores logit 0, not -inf, so unmasked padding would leak
-            # softmax mass. Real encoder keys are never exactly the zero
-            # vector, so any-nonzero identifies the valid rows. A fully
-            # zero cache (structural smoke tests) keeps every row so the
-            # softmax stays finite — attention over zero values is 0.
-            valid = jnp.any(xk != 0, axis=(2, 3))
-            valid = valid | ~valid.any(axis=1, keepdims=True)
-            o = L.full_attention(q, xk, xv, causal=False, kv_mask=valid)
-            xc = xc + jnp.einsum("blhk,hkd->bld", o,
-                                 lp["xattn"]["wo"].astype(dt))
+            # ragged fused read over the padded (possibly int8) encoder
+            # cache: the valid-prefix masking, zero-cache fallback, and
+            # int8 code handling live in cross_attention_decode
+            xc = xc + L.cross_attention_decode(lp["xattn"], h, cl, cfg)
             h = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
             xc = xc + L.mlp_apply(lp["mlp"], h, cfg)
             new = dict(cl)

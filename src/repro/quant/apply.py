@@ -41,12 +41,27 @@ SITE_FOR_KEY = {
     "conv1_w": "whisper/conv1",
     "conv2_w": "whisper/conv2",
 }
-# producer site → consumer site: consecutive convs where the producer's
-# output feeds the consumer directly, so the producer can requantize in its
-# epilogue onto the consumer's calibrated input grid (int8 end to end,
-# DESIGN.md §8). Passed to Calibration.spec() by the serving driver.
+# producer site → consumer site: consecutive sites where the producer's
+# output feeds the consumer directly (or through a monotonic op — max
+# pooling commutes with the per-tensor int8 grid: max(round(x/s)) ==
+# round(max(x)/s) for s > 0, so codes pool exactly), so the producer can
+# requantize in its epilogue onto the consumer's calibrated input grid
+# (int8 end to end, DESIGN.md §8). Chains compose transitively: a site
+# appearing as both consumer and producer (edge/c2) forms a >2-deep stack
+# with interior activations never leaving int8 — exactly one dequant site
+# at the tail (asserted via ``quant.counting_dequants``). Entries only
+# activate when BOTH sites were calibrated (``Calibration.spec``), so
+# unrelated models sharing this dict are unaffected.
 CHAINS = {
     "whisper/conv1": "whisper/conv2",
+    # edge-CNN conv→conv→conv stack (examples/edge_cnn.py): c1 and c2
+    # requantize (through the int8-exact max pools), c3 dequants once
+    "edge/c1": "edge/c2",
+    "edge/c2": "edge/c3",
+    # llava: the patch-embedding conv2d hands int8 straight to the MLP
+    # projector (``transformer.projector_apply``), which dequants once at
+    # its input instead of patch_embed materializing f32
+    "llava/patch_embed": "llava/projector",
 }
 # depthwise conv weights: int8 with per-channel tap-axis scales (w8a8
 # through the dedicated depthwise kernel when conv_precision requests it,

@@ -576,6 +576,125 @@ def test_chained_frontend_bit_exact_vs_oracle_composition(rng):
                                rtol=1e-5, atol=1e-6)
 
 
+def test_three_deep_conv2d_chain_single_dequant(rng):
+    """>2-deep chains (edge-CNN style conv→conv→conv through max pools):
+    interior sites requantize, the tail dequants — exactly ONE dequant
+    site — and the chained output stays close to the f32 stack. Max
+    pooling commutes with the per-tensor int8 grid (monotonic), so codes
+    pool exactly."""
+    from repro import core
+    from repro.models import layers as L
+
+    x = jnp.asarray(rng.normal(size=(2, 16, 16, 4)).astype(np.float32))
+    w1 = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32)) * 0.2
+    w2 = jnp.asarray(rng.normal(size=(3, 3, 8, 8)).astype(np.float32)) * 0.2
+    w3 = jnp.asarray(rng.normal(size=(3, 3, 8, 8)).astype(np.float32)) * 0.2
+
+    def stack(ws, precision="fp"):
+        h = x
+        for i, w in enumerate(ws):
+            h = L.conv2d_bias_act(
+                h, w, None, activation="relu", padding="SAME",
+                precision=precision, site=f"t3/c{i + 1}",
+            )
+            if i < 2:
+                h = core.max_pool2d(h, (2, 2))
+        return h
+
+    calib = quant.Calibration()
+    with quant.collecting(calib):
+        f32 = stack((w1, w2, w3))
+    spec = calib.spec(chains={"t3/c1": "t3/c2", "t3/c2": "t3/c3"})
+    assert "out_scale" in spec["t3/c1"] and "out_scale" in spec["t3/c2"]
+    qws = [
+        qconv.quantize_weight(
+            w, spec[f"t3/c{i + 1}"]["x_scale"],
+            spec[f"t3/c{i + 1}"].get("out_scale"),
+        )
+        for i, w in enumerate((w1, w2, w3))
+    ]
+    with quant.counting_dequants() as sites:
+        got = stack(qws, precision="w8a8")
+    assert sites == ["t3/c3"]  # c1/c2 emitted int8 (through the pools)
+    assert got.dtype != jnp.int8
+    rel = float(jnp.max(jnp.abs(got - f32))) / (
+        float(jnp.max(jnp.abs(f32))) + 1e-9
+    )
+    assert rel < 0.15
+
+
+def test_llava_patch_embed_chains_into_projector(rng):
+    """The first chained conv2d: patch_embed carries out_scale =
+    the projector's calibrated input scale, emits int8 codes, and the
+    projector performs the chain's single dequant."""
+    from repro.models.llava import PATCH, patch_embed
+    from repro.models.transformer import projector_apply
+
+    images = jnp.asarray(rng.normal(size=(2, 28, 28, 3)).astype(np.float32))
+    w = jnp.asarray(
+        rng.normal(size=(PATCH, PATCH, 3, 32)).astype(np.float32) * 0.05
+    )
+    pj = {
+        "w1": jnp.asarray(
+            rng.normal(size=(32, 16)).astype(np.float32) * 0.1
+        ),
+        "b1": jnp.zeros((16,), jnp.float32),
+        "w2": jnp.asarray(
+            rng.normal(size=(16, 16)).astype(np.float32) * 0.1
+        ),
+    }
+    calib = quant.Calibration()
+    with quant.collecting(calib):
+        f32 = projector_apply(pj, patch_embed(w, images))
+    spec = calib.spec(chains=quant.CHAINS)
+    assert "out_scale" in spec["llava/patch_embed"]
+    qw = qconv.quantize_weight(
+        w, spec["llava/patch_embed"]["x_scale"],
+        spec["llava/patch_embed"]["out_scale"],
+    )
+    with quant.counting_dequants() as sites:
+        codes = patch_embed(qw, images, precision="w8a8")
+        assert codes.dtype == jnp.int8  # conv2d emitted on the chain grid
+        got = projector_apply(
+            pj, codes, x_scale=spec["llava/projector"]["x_scale"]
+        )
+    assert sites == ["llava/projector"]
+    rel = float(jnp.max(jnp.abs(got - f32))) / (
+        float(jnp.max(jnp.abs(f32))) + 1e-9
+    )
+    assert rel < 0.1
+
+
+def test_projector_requires_scale_for_int8_input(rng):
+    from repro.models.transformer import projector_apply
+
+    pj = {
+        "w1": jnp.ones((4, 4), jnp.float32),
+        "b1": jnp.zeros((4,), jnp.float32),
+        "w2": jnp.ones((4, 4), jnp.float32),
+    }
+    codes = jnp.ones((1, 2, 4), jnp.int8)
+    with pytest.raises(ValueError, match="x_scale"):
+        projector_apply(pj, codes)
+
+
+def test_int8_max_pool_commutes_with_dequant(rng):
+    """max(q)·s == max(q·s): pooling int8 codes is exact on a per-tensor
+    grid (the property the edge-CNN chain rides through its pools)."""
+    from repro.core import max_pool2d
+
+    codes = jnp.asarray(
+        rng.integers(-127, 128, size=(2, 8, 8, 4)), jnp.int8
+    )
+    s = 0.037
+    pooled_codes = max_pool2d(codes, (2, 2))
+    pooled_vals = max_pool2d(codes.astype(jnp.float32) * s, (2, 2))
+    np.testing.assert_allclose(
+        np.asarray(pooled_codes.astype(jnp.float32) * s),
+        np.asarray(pooled_vals), rtol=1e-6,
+    )
+
+
 # -- calibration reservoir ----------------------------------------------------
 
 def test_reservoir_is_deterministic_and_bounded(rng):

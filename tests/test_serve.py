@@ -132,3 +132,68 @@ def test_kv_cache_int8_decode_runs_other_families(arch):
     fp = build_model(cfg.replace(kv_quant="fp"), Runtime())
     toks_fp, _ = generate(fp, params, prompts, gen_len=4, cache_len=24)
     np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks_fp))
+
+
+# -- fused decode-attention read (DESIGN.md §9) -------------------------------
+
+@pytest.mark.parametrize(
+    "arch", ["qwen3-1.7b", "jamba-1.5-large-398b", "whisper-medium"]
+)
+@pytest.mark.parametrize("kvq", ["fp", "int8"])
+def test_fused_decode_read_matches_view_path(arch, kvq):
+    """Greedy tokens from the fused flash read (int8 codes resident, no
+    float K/V view) are identical to the PR-4 dequant-at-read path —
+    on the fp cache too (the fp variant shares the kernel)."""
+    cfg, model, params = _smoke_model(arch, kv_quant=kvq)  # fused default
+    assert cfg.attn_decode == "fused"
+    prompts = _prompts(cfg)
+    toks_fused, _ = generate(model, params, prompts, gen_len=6, cache_len=24)
+
+    view = build_model(cfg.replace(attn_decode="view"), Runtime())
+    toks_view, _ = generate(view, params, prompts, gen_len=6, cache_len=24)
+    np.testing.assert_array_equal(
+        np.asarray(toks_fused), np.asarray(toks_view)
+    )
+
+
+def test_fused_decode_dispatch_logged():
+    """Serving through the fused read records its autotune shape key —
+    the line serve's CLI prints and CI asserts on."""
+    from repro.kernels import ops as kops
+
+    cfg, model, params = _smoke_model(kv_quant="int8")
+    kops.ATTN_DECODE_DISPATCH.clear()
+    generate(model, params, _prompts(cfg), gen_len=3, cache_len=24)
+    assert any(
+        k.startswith("attn_dec|") and "|int8" in k
+        for k in kops.ATTN_DECODE_DISPATCH
+    ), kops.ATTN_DECODE_DISPATCH
+
+
+def test_store_kv_token_pair_updates_together():
+    """The shared (q, scale) pair helper writes both leaves at the same
+    position on the same grid as the prefill-cache quantizer."""
+    import jax.numpy as jnp
+
+    from repro.models.common import quantize_kv_leaf, store_kv_token
+
+    rng = np.random.default_rng(0)
+    cache = {
+        "k": jnp.zeros((2, 8, 2, 16), jnp.int8),
+        "k_scale": jnp.zeros((2, 8, 2, 1), jnp.float32),
+    }
+    fresh = jnp.asarray(rng.normal(size=(2, 1, 2, 16)).astype(np.float32))
+    new = store_kv_token(cache, "k", fresh, jnp.int32(3))
+    q, s = quantize_kv_leaf(fresh)
+    np.testing.assert_array_equal(np.asarray(new["k"][:, 3:4]), np.asarray(q))
+    np.testing.assert_array_equal(
+        np.asarray(new["k_scale"][:, 3:4]), np.asarray(s)
+    )
+    assert bool((np.asarray(new["k"][:, :3]) == 0).all())
+    # float cache: no scale sibling, plain write
+    fp = {"k": jnp.zeros((2, 8, 2, 16), jnp.float32)}
+    out = store_kv_token(fp, "k", fresh, jnp.int32(0))
+    assert set(out) == {"k"}
+    np.testing.assert_allclose(
+        np.asarray(out["k"][:, 0:1]), np.asarray(fresh), rtol=1e-6
+    )
