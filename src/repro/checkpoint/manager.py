@@ -13,12 +13,20 @@
     ``device_put`` against whatever sharding tree the *current* mesh
     prescribes: a checkpoint written on one mesh restores onto a different
     mesh/device-count (tested 8→4 virtual devices);
-  * **retention** — ``keep`` most recent checkpoints are retained.
+  * **retention** — ``keep`` most recent checkpoints are retained;
+  * **validation + recovery** — the manifest records per-leaf
+    shape/dtype/nbytes; ``validate`` checks every leaf file against it
+    (existence, npy header, byte size — catching truncation without
+    reading the payload), ``quarantine`` moves a torn checkpoint to
+    ``step_N.corrupt/``, and ``latest_valid_step`` scans newest-first,
+    quarantining invalid steps until it finds one that validates — the
+    restore-after-crash entry point (DESIGN.md §10).
 """
 from __future__ import annotations
 
 import json
 import shutil
+import sys
 import threading
 import time
 from pathlib import Path
@@ -26,6 +34,9 @@ from typing import Any
 
 import jax
 import numpy as np
+
+from repro import faults
+from repro.health import HEALTH
 
 
 def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
@@ -60,15 +71,27 @@ def _unflatten_into(skeleton: Any, flat: dict[str, Any], prefix: str = ""):
     return flat[prefix[:-1]]
 
 
+def _step_of(p: Path) -> int | None:
+    """Step number of a committed ``step_<N>`` dir; None for everything
+    else (.tmp, .corrupt, stray non-numeric names — warned once)."""
+    name = p.name
+    if not (p.is_dir() and name.startswith("step_")):
+        return None
+    if name.endswith(".tmp") or name.endswith(".corrupt"):
+        return None
+    try:
+        return int(name.split("_", 1)[1])
+    except ValueError:
+        print(f"[ckpt] ignoring stray dir {p} (non-numeric step)",
+              file=sys.stderr)
+        return None
+
+
 def latest_step(directory: str | Path) -> int | None:
     d = Path(directory)
     if not d.exists():
         return None
-    steps = [
-        int(p.name.split("_")[1])
-        for p in d.iterdir()
-        if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp")
-    ]
+    steps = [s for p in d.iterdir() if (s := _step_of(p)) is not None]
     return max(steps) if steps else None
 
 
@@ -107,7 +130,13 @@ class CheckpointManager:
             np.save(tmp / fn, arr)
             manifest["leaves"][key] = {
                 "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "nbytes": (tmp / fn).stat().st_size,
             }
+            # chaos hooks: stall between leaves (the window a kill lands
+            # in) / truncate one committed leaf (a torn write)
+            faults.sleep_point("ckpt_write_stall", f"step_{step}")
+            if faults.take("ckpt_corrupt", f"step_{step}"):
+                faults.truncate_file(tmp / fn)
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
         if final.exists():
             shutil.rmtree(final)
@@ -116,10 +145,7 @@ class CheckpointManager:
 
     def _gc(self):
         steps = sorted(
-            int(p.name.split("_")[1])
-            for p in self.dir.iterdir()
-            if p.is_dir() and p.name.startswith("step_")
-            and not p.name.endswith(".tmp")
+            s for p in self.dir.iterdir() if (s := _step_of(p)) is not None
         )
         for s in steps[: -self.keep]:
             shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
@@ -128,6 +154,67 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+
+    # -- validation + recovery -------------------------------------------------
+    def validate(self, step: int) -> str | None:
+        """None when the checkpoint is intact, else a reason string.
+
+        Checks the manifest parses and every leaf file exists with a
+        readable npy header whose shape/dtype match the manifest and (when
+        recorded) the manifest's byte count — a truncated or zero-length
+        leaf fails without reading the payload (``mmap_mode`` maps, it
+        doesn't copy)."""
+        d = self.dir / f"step_{step}"
+        if not d.is_dir():
+            return "missing"
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+        except (OSError, ValueError) as e:
+            return f"manifest unreadable: {e!r}"
+        for key, meta in manifest.get("leaves", {}).items():
+            f = d / meta["file"]
+            try:
+                size = f.stat().st_size
+                if meta.get("nbytes") is not None and size != meta["nbytes"]:
+                    return f"leaf {key}: {size}B != manifest {meta['nbytes']}B"
+                arr = np.load(f, mmap_mode="r")
+            except (OSError, ValueError) as e:
+                return f"leaf {key}: unreadable ({e!r})"
+            if list(arr.shape) != list(meta["shape"]):
+                return f"leaf {key}: shape {list(arr.shape)} != {meta['shape']}"
+            if str(arr.dtype) != meta["dtype"]:
+                return f"leaf {key}: dtype {arr.dtype} != {meta['dtype']}"
+        return None
+
+    def quarantine(self, step: int, reason: str = "") -> None:
+        """Move a torn checkpoint to ``step_N.corrupt`` (kept for autopsy,
+        invisible to ``latest_step``/``_gc``) and record the event."""
+        d = self.dir / f"step_{step}"
+        target = self.dir / f"step_{step}.corrupt"
+        if target.exists():
+            shutil.rmtree(target)
+        if d.exists():
+            d.rename(target)
+        HEALTH.record(
+            "ckpt", "ckpt_invalid", "quarantine",
+            detail=f"step {step}: {reason}"[:200],
+        )
+
+    def latest_valid_step(self) -> int | None:
+        """Newest step that passes ``validate``; invalid ones found on the
+        way are quarantined. The crash-recovery entry point: a process
+        killed mid-``save(blocking=False)`` leaves either a ``.tmp`` dir
+        (never visible) or — with a torn rename window on non-atomic
+        filesystems — a committed-but-truncated step; both resolve to the
+        previous intact checkpoint here."""
+        while True:
+            step = latest_step(self.dir)
+            if step is None:
+                return None
+            reason = self.validate(step)
+            if reason is None:
+                return step
+            self.quarantine(step, reason)
 
     # -- restore ----------------------------------------------------------------
     def restore(self, step: int, skeleton: Any, shardings: Any = None) -> Any:

@@ -79,16 +79,41 @@ def heartbeat_file(run_dir: str | Path, host_id: int) -> Path:
 
 
 def beat(run_dir: str | Path, host_id: int):
-    heartbeat_file(run_dir, host_id).write_text(str(time.time()))
+    """Write the liveness timestamp ATOMICALLY (tmp + rename): a monitor
+    reading mid-write must see the previous beat, never a torn/empty file.
+    The ``heartbeat_stale`` fault skips the write (a silently dead host)."""
+    from repro import faults
+
+    if faults.take("heartbeat_stale", f"host_{host_id}"):
+        return
+    p = heartbeat_file(run_dir, host_id)
+    tmp = p.with_name(f".{p.name}.{os.getpid()}.tmp")
+    tmp.write_text(str(time.time()))
+    tmp.replace(p)
 
 
 def stale_hosts(run_dir: str | Path, *, timeout_s: float) -> list[int]:
+    """Host ids whose heartbeat is older than ``timeout_s``. An unparseable
+    or empty heartbeat file counts as STALE (a torn write or dying host is
+    exactly what the monitor must flag, not crash on); files not named
+    ``host_<int>`` (editor droppings, tmp files) are ignored."""
     hb_dir = Path(run_dir) / "heartbeats"
     if not hb_dir.exists():
         return []
     now = time.time()
     out = []
     for p in hb_dir.iterdir():
-        if now - float(p.read_text()) > timeout_s:
-            out.append(int(p.name.split("_")[1]))
+        name = p.name
+        if not name.startswith("host_"):
+            continue
+        try:
+            host = int(name.split("_", 1)[1])
+        except ValueError:
+            continue
+        try:
+            stale = now - float(p.read_text()) > timeout_s
+        except (OSError, ValueError):
+            stale = True  # torn/unreadable beat = not provably alive
+        if stale:
+            out.append(host)
     return sorted(out)

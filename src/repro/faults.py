@@ -1,0 +1,246 @@
+"""Deterministic, seedable fault injection for the robustness layer.
+
+The graceful-degradation machinery (DESIGN.md §10) is only trustworthy if
+every failure class it claims to survive can be *produced on demand*. This
+module is the single switchboard: production code calls tiny hooks at its
+failure points (``maybe_fail``, ``sleep_point``, ``corrupt_array``,
+``corrupt_scale``, ``take``) which are no-ops unless an injection is armed
+— either programmatically::
+
+    with faults.inject("pallas_compile", site="conv1d", times=1):
+        ops.conv1d(x, w)          # pallas rung raises; ladder demotes
+
+or via the environment for CI / subprocess chaos runs::
+
+    REPRO_FAULTS=pallas_compile                      # every site
+    REPRO_FAULTS=pallas_compile:conv1d,quant_scale_zero:whisper/conv1
+    REPRO_FAULTS=slow_step*2                         # fire at most twice
+
+Spec grammar: ``kind[:site][*times]`` joined by commas.
+
+Fault kinds (each consumed by a specific hook site):
+
+  ====================  =====================================================
+  kind                  hook / effect
+  ====================  =====================================================
+  pallas_compile        ops dispatch ladder, pallas rung — raises FaultError
+  pallas_runtime        same rung, distinct reason code
+  jax_runtime           ops dispatch ladder, compiled-JAX rung — raises
+  nan_activations       ``corrupt_array``: poisons a tensor with NaN
+  quant_scale_zero      ``corrupt_scale``: calibration emits a 0.0 scale
+  quant_scale_nan       ``corrupt_scale``: calibration emits a NaN scale
+  autotune_corrupt      autotune ``_load``: treats the cache file as corrupt
+  ckpt_corrupt          CheckpointManager: truncates a leaf after commit
+  ckpt_write_stall      CheckpointManager._write: sleeps between leaves
+  heartbeat_stale       ft.beat: skips the heartbeat write (dead host)
+  slow_step             train/serve loops: sleeps ``delay_s`` (straggler)
+  ====================  =====================================================
+
+Determinism: an injection fires on every matching call (up to ``times``)
+unless given a probability ``p < 1``, in which case draws come from a
+``numpy`` generator seeded with ``seed`` — the fire/skip sequence is a
+pure function of the call order, so chaos tests replay exactly.
+
+Sites match hierarchically: an injection armed for ``site="conv1d"`` also
+hits ``"conv1d.w8a8"`` (prefix up to a ``.``); ``site=None`` hits every
+site. Hooks are thread-safe and O(1) when nothing is armed.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+import time
+from typing import Iterator
+
+import numpy as np
+
+ENV_VAR = "REPRO_FAULTS"
+
+
+class FaultError(RuntimeError):
+    """Raised by an armed ``maybe_fail`` hook; carries the reason code."""
+
+    def __init__(self, kind: str, site: str | None):
+        super().__init__(f"injected fault {kind!r} at site {site!r}")
+        self.kind = kind
+        self.site = site
+
+
+@dataclasses.dataclass
+class Injection:
+    kind: str
+    site: str | None = None  # None → every site
+    times: int | None = None  # None → unlimited
+    p: float = 1.0  # fire probability per matching call
+    seed: int = 0
+    delay_s: float = 0.05  # for sleep hooks (slow_step, ckpt_write_stall)
+    fired: int = 0
+    _rng: np.random.Generator | None = None
+
+    def matches(self, site: str | None) -> bool:
+        if self.site is None or site is None:
+            return True
+        return site == self.site or site.startswith(self.site + ".")
+
+    def take(self) -> bool:
+        """Consume one firing opportunity; True if the fault fires now."""
+        if self.times is not None and self.fired >= self.times:
+            return False
+        if self.p < 1.0:
+            if self._rng is None:
+                self._rng = np.random.default_rng(self.seed)
+            if self._rng.random() >= self.p:
+                return False
+        self.fired += 1
+        return True
+
+
+_LOCK = threading.Lock()
+_ACTIVE: list[Injection] = []
+_ENV_LOADED = False
+
+
+def _parse_env(spec: str) -> list[Injection]:
+    """``kind[:site][*times]`` entries joined by commas."""
+    out = []
+    for entry in spec.split(","):
+        entry = entry.strip()
+        if not entry:
+            continue
+        times = None
+        if "*" in entry:
+            entry, _, n = entry.rpartition("*")
+            times = int(n)
+        kind, _, site = entry.partition(":")
+        out.append(Injection(kind=kind, site=site or None, times=times))
+    return out
+
+
+def _ensure_env() -> None:
+    global _ENV_LOADED
+    if not _ENV_LOADED:
+        _ENV_LOADED = True
+        spec = os.environ.get(ENV_VAR, "")
+        if spec:
+            _ACTIVE.extend(_parse_env(spec))
+
+
+def reload_env() -> None:
+    """Re-read ``REPRO_FAULTS`` (tests that monkeypatch the env)."""
+    global _ENV_LOADED
+    with _LOCK:
+        _ACTIVE.clear()
+        _ENV_LOADED = False
+        _ensure_env()
+
+
+def reset() -> None:
+    """Disarm everything, including env-armed injections (tests)."""
+    global _ENV_LOADED
+    with _LOCK:
+        _ACTIVE.clear()
+        _ENV_LOADED = True  # do not re-arm from the env until reload_env()
+
+
+def active(kind: str, site: str | None = None) -> Injection | None:
+    """The first armed injection matching (kind, site), else None."""
+    with _LOCK:
+        _ensure_env()
+        for inj in _ACTIVE:
+            if inj.kind == kind and inj.matches(site):
+                return inj
+    return None
+
+
+def take(kind: str, site: str | None = None) -> bool:
+    """True exactly when an armed matching injection fires (and consumes
+    one of its ``times``). The universal boolean hook."""
+    inj = active(kind, site)
+    return inj.take() if inj is not None else False
+
+
+def maybe_fail(kind: str, site: str | None = None) -> None:
+    """Raise ``FaultError(kind, site)`` when armed — the kernel-failure
+    hook the ops dispatch ladder places at the top of each rung."""
+    if take(kind, site):
+        raise FaultError(kind, site)
+
+
+# rung name → the fault kinds that can fire at that rung of the ops ladder
+RUNG_KINDS = {
+    "pallas": ("pallas_compile", "pallas_runtime"),
+    "jax": ("jax_runtime",),
+}
+
+
+def maybe_fail_rung(rung: str, site: str) -> None:
+    """Ladder hook: check every fault kind registered for this rung."""
+    for kind in RUNG_KINDS.get(rung, ()):
+        maybe_fail(kind, site)
+
+
+def sleep_point(kind: str, site: str | None = None) -> float:
+    """Sleep ``delay_s`` when armed (straggler / stalled-write injection);
+    returns the seconds slept (0.0 when disarmed)."""
+    inj = active(kind, site)
+    if inj is not None and inj.take():
+        time.sleep(inj.delay_s)
+        return inj.delay_s
+    return 0.0
+
+
+def corrupt_array(kind: str, site: str | None, x):
+    """Poison a tensor with NaN when armed (``nan_activations``). Imports
+    jax lazily so this module stays importable anywhere."""
+    if take(kind, site):
+        import jax.numpy as jnp
+
+        return jnp.full_like(x, jnp.nan)
+    return x
+
+
+def corrupt_scale(site: str, scale):
+    """Calibration hook: override a site's emitted activation scale with
+    0.0 / NaN when ``quant_scale_zero`` / ``quant_scale_nan`` is armed."""
+    import jax.numpy as jnp
+
+    if take("quant_scale_zero", site):
+        return jnp.zeros_like(scale)
+    if take("quant_scale_nan", site):
+        return jnp.full_like(scale, jnp.nan)
+    return scale
+
+
+def truncate_file(path, keep_bytes: int = 16) -> None:
+    """Torn-write simulator for tests: chop a file to ``keep_bytes``."""
+    data = open(path, "rb").read()[:keep_bytes]
+    with open(path, "wb") as f:
+        f.write(data)
+
+
+@contextlib.contextmanager
+def inject(
+    kind: str,
+    site: str | None = None,
+    *,
+    times: int | None = None,
+    p: float = 1.0,
+    seed: int = 0,
+    delay_s: float = 0.05,
+) -> Iterator[Injection]:
+    """Arm one injection for the duration of the block (programmatic form;
+    the env form stays armed for the whole process)."""
+    inj = Injection(
+        kind=kind, site=site, times=times, p=p, seed=seed, delay_s=delay_s
+    )
+    with _LOCK:
+        _ensure_env()
+        _ACTIVE.append(inj)
+    try:
+        yield inj
+    finally:
+        with _LOCK:
+            if inj in _ACTIVE:
+                _ACTIVE.remove(inj)

@@ -1,0 +1,124 @@
+"""Central health registry: reason-coded degradation events + demotions.
+
+The robustness layer (DESIGN.md §10) never silently falls back: every time
+a dispatch site degrades — a Pallas kernel demoted to its compiled-JAX
+twin, a quantized site served in float because its scale was unusable, a
+corrupt autotune cache quarantined, a torn checkpoint skipped — the event
+lands here with a machine-checkable reason code. Serving prints the
+registry at exit and CI asserts the *expected* events appear (and, in
+clean runs, that none do).
+
+Two kinds of state:
+
+  * **events** — append-only ``HealthEvent`` log. ``record`` deduplicates
+    by (site, reason, action): repeats bump ``count`` instead of spamming,
+    and only the first occurrence prints to stderr.
+  * **demotions** — ``site → {impl, …}`` of implementations disabled for
+    the rest of the process. The ``ops`` dispatch ladder consults this so
+    a kernel that failed once is not retried on every call (and, under
+    ``jax.jit``, so a re-trace at a new shape skips the failed rung).
+
+The registry is process-global and import-light (stdlib only): any layer
+— kernels, checkpointing, serving, autotuner — can report without import
+cycles. ``repro.kernels.ops`` re-exports the singleton as ``ops.HEALTH``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import threading
+
+
+@dataclasses.dataclass
+class HealthEvent:
+    """One reason-coded degradation event.
+
+    ``site``   — where: a dispatch site ("conv1d", "conv1d.w8a8"), a
+                 calibration site ("whisper/conv1"), or a subsystem
+                 ("autotune", "ckpt", "serve/generate").
+    ``reason`` — machine-checkable code: "pallas_compile", "pallas_error",
+                 "quant_scale_zero", "quant_scale_nan", "quant_slower",
+                 "cache_corrupt", "ckpt_invalid", "nan_logits",
+                 "deadline_exceeded", "straggler", …
+    ``action`` — what was done: "demote:pallas->jax", "fallback:fp",
+                 "quarantine", "retry", "truncate", …
+    ``detail`` — free-form context (exception repr, file path, timings).
+    ``count``  — occurrences of this (site, reason, action) triple.
+    """
+
+    site: str
+    reason: str
+    action: str
+    detail: str = ""
+    count: int = 1
+
+    def line(self) -> str:
+        extra = f" x{self.count}" if self.count > 1 else ""
+        det = f" ({self.detail})" if self.detail else ""
+        return (
+            f"site={self.site} reason={self.reason} "
+            f"action={self.action}{extra}{det}"
+        )
+
+
+class Health:
+    """Process-global event log + per-site implementation demotions."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.events: list[HealthEvent] = []
+        self._demoted: dict[str, set[str]] = {}
+
+    # -- events ---------------------------------------------------------------
+    def record(
+        self, site: str, reason: str, action: str, detail: str = ""
+    ) -> HealthEvent:
+        """Log one event; duplicate (site, reason, action) bumps count.
+        The first occurrence prints one ``[health]`` line to stderr."""
+        with self._lock:
+            for ev in self.events:
+                if (ev.site, ev.reason, ev.action) == (site, reason, action):
+                    ev.count += 1
+                    return ev
+            ev = HealthEvent(site, reason, action, detail)
+            self.events.append(ev)
+        print(f"[health] {ev.line()}", file=sys.stderr)
+        return ev
+
+    def events_for(
+        self, site: str | None = None, reason: str | None = None
+    ) -> list[HealthEvent]:
+        return [
+            ev
+            for ev in self.events
+            if (site is None or ev.site == site)
+            and (reason is None or ev.reason == reason)
+        ]
+
+    # -- demotions ------------------------------------------------------------
+    def demote(self, site: str, impl: str) -> None:
+        """Disable ``impl`` at ``site`` for the rest of the process."""
+        with self._lock:
+            self._demoted.setdefault(site, set()).add(impl)
+
+    def is_demoted(self, site: str, impl: str) -> bool:
+        return impl in self._demoted.get(site, ())
+
+    def demotions(self) -> dict[str, frozenset[str]]:
+        with self._lock:
+            return {s: frozenset(v) for s, v in self._demoted.items()}
+
+    # -- lifecycle ------------------------------------------------------------
+    def reset(self) -> None:
+        """Clear events AND demotions (tests; never in production loops)."""
+        with self._lock:
+            self.events.clear()
+            self._demoted.clear()
+
+    def summary(self) -> list[str]:
+        """One formatted line per distinct event (serve prints these)."""
+        return [ev.line() for ev in self.events]
+
+
+#: The process-global registry (re-exported as ``repro.kernels.ops.HEALTH``).
+HEALTH = Health()

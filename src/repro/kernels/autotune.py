@@ -26,6 +26,14 @@ dicts, e.g. ::
 speedup trajectories survive across PRs. The cache path is
 ``$REPRO_AUTOTUNE_CACHE`` (default ``.cache/autotune.json`` under the
 current working directory); writes go through a temp file + rename.
+
+The file additionally carries a reserved ``"__schema__"`` version entry
+(never returned by ``lookup``). A cache that fails to parse or was written
+by an incompatible schema is **quarantined** — renamed to
+``<name>.corrupt`` with a reason-coded health event — instead of silently
+reset-then-overwritten, so a torn write never erases tuning history and
+the operator can inspect what happened (DESIGN.md §10). A cache with no
+``__schema__`` field is legacy-accepted (pre-versioning files are schema 1).
 """
 from __future__ import annotations
 
@@ -38,7 +46,15 @@ from typing import Any, Callable, Iterable
 
 import jax
 
+from repro import faults
+from repro.health import HEALTH
+
 DEFAULT_CACHE = ".cache/autotune.json"
+
+# bump when the cache entry layout changes incompatibly; readers quarantine
+# files stamped with a DIFFERENT version (missing field = legacy schema 1)
+SCHEMA_VERSION = 1
+SCHEMA_KEY = "__schema__"
 
 # candidate axes — kept deliberately small: every candidate costs a
 # recompile, and in interpret mode (CPU) a slow Python-level run.
@@ -59,15 +75,43 @@ _cache: dict[str, dict[str, Any]] | None = None
 _cache_file: Path | None = None
 
 
+def _quarantine(p: Path, reason: str, detail: str = "") -> None:
+    """Move an unusable cache file aside (never delete: the operator may
+    want the bytes) and record the event."""
+    try:
+        quarantined = p.with_name(p.name + ".corrupt")
+        p.replace(quarantined)
+        detail = detail or str(quarantined)
+    except OSError:
+        pass  # racing process already moved/removed it
+    HEALTH.record("autotune", reason, "quarantine", detail=detail)
+
+
 def _load() -> dict[str, dict[str, Any]]:
     global _cache, _cache_file
     p = cache_path()
     if _cache is None or _cache_file != p:
         _cache_file = p
+        _cache = {}
         try:
-            _cache = json.loads(p.read_text())
-        except (OSError, ValueError):
-            _cache = {}
+            text = p.read_text()
+        except OSError:
+            return _cache  # no cache yet — nothing to validate
+        try:
+            if faults.take("autotune_corrupt"):
+                raise ValueError("injected fault 'autotune_corrupt'")
+            loaded = json.loads(text)
+            if not isinstance(loaded, dict):
+                raise ValueError(f"cache root is {type(loaded).__name__}")
+        except ValueError as e:
+            _quarantine(p, "cache_corrupt", detail=repr(e)[:200])
+            return _cache
+        schema = loaded.pop(SCHEMA_KEY, SCHEMA_VERSION)
+        if schema != SCHEMA_VERSION:
+            _quarantine(p, "cache_schema_mismatch",
+                        detail=f"file schema {schema} != {SCHEMA_VERSION}")
+            return _cache
+        _cache = loaded
     return _cache
 
 
@@ -78,7 +122,10 @@ def _flush() -> None:
     # the atomic rename is last-writer-wins (a shared .tmp raced — one
     # process could rename a half-written file from another)
     tmp = p.parent / f".{p.name}.{os.getpid()}.tmp"
-    tmp.write_text(json.dumps(_cache, indent=1, sort_keys=True))
+    tmp.write_text(
+        json.dumps({SCHEMA_KEY: SCHEMA_VERSION, **_cache},
+                   indent=1, sort_keys=True)
+    )
     tmp.replace(p)
 
 

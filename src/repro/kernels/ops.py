@@ -22,9 +22,17 @@ Call sites across the framework use these wrappers, which
     sliding reduction, d_act from the saved pre-activation residual,
   * select execution mode: real Pallas lowering on TPU, ``interpret=True``
     everywhere else (this container is CPU-only — interpret mode executes
-    the kernel body in Python and is how kernels are validated here), and
+    the kernel body in Python and is how kernels are validated here),
   * fall back to the pure-JAX ``repro.core`` implementation for configs the
-    kernels don't cover (dilation > 1, grouped non-depthwise convs).
+    kernels don't cover (dilation > 1, grouped non-depthwise convs), and
+  * wrap every dispatch site in a **graceful-degradation ladder**
+    (DESIGN.md §10): pallas kernel → compiled-JAX twin → reference. A rung
+    that raises at dispatch/trace time is demoted for the process lifetime
+    and the event recorded reason-coded in the central health registry
+    (re-exported here as ``HEALTH``); the next rung serves the call, so a
+    kernel that fails to compile degrades throughput instead of crashing
+    serving. ``repro.faults`` can inject failures at any rung for chaos
+    testing.
 
 ``backend`` selects the paper's technique (``sliding``) vs the baselines
 (``im2col_gemm`` fused-VMEM, ``im2col_hbm`` true-bloat, ``xla``).
@@ -37,12 +45,16 @@ from typing import Literal, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import faults
 from repro.core import conv as core_conv
+from repro.health import HEALTH
 from repro.kernels import (
     attention_decode as attn_dec,
     autotune,
     im2col_gemm,
+    ref as kernels_ref,
     sliding_conv1d,
     sliding_conv2d,
     sliding_conv_bwd,
@@ -60,6 +72,77 @@ Precision = Literal["fp", "w8a8", "w8a16"]
 def use_interpret() -> bool:
     """Pallas interpret mode unless running on a real TPU."""
     return jax.default_backend() != "tpu"
+
+
+def _ladder(site: str, rungs):
+    """Graceful-degradation dispatch (DESIGN.md §10).
+
+    ``rungs`` is an ordered list of ``(name, thunk)`` — pallas kernel →
+    compiled-JAX twin → reference. Rungs already demoted for this site are
+    skipped; a rung that raises is demoted for the rest of the process
+    (so under ``jax.jit`` a re-trace at a new shape skips it too) with a
+    reason-coded ``HEALTH`` event, and the next rung serves the call. The
+    last rung's failure propagates — there is nothing left to degrade to.
+    ``faults.maybe_fail_rung`` fires inside the try, so injected failures
+    exercise exactly this path. Dispatch happens at trace time: a kernel
+    that traced fine but dies at runtime surfaces to the caller's retry
+    layer (serve/train), not here.
+    """
+    live = [(n, t) for n, t in rungs if not HEALTH.is_demoted(site, n)]
+    if not live:
+        live = [rungs[-1]]  # fully demoted site: keep serving the oracle
+    for i, (name, thunk) in enumerate(live):
+        try:
+            faults.maybe_fail_rung(name, site)
+            return thunk()
+        except Exception as e:  # noqa: BLE001 — any failure → next rung
+            if i + 1 == len(live):
+                raise
+            reason = getattr(e, "kind", None) or f"{name}_error"
+            HEALTH.record(
+                site, reason, f"demote:{name}->{live[i + 1][0]}",
+                detail=repr(e)[:200],
+            )
+            HEALTH.demote(site, name)
+    raise AssertionError("unreachable")
+
+
+def _scale_bad(s) -> str | None:
+    """Reason code when a *concrete* quant scale is unusable. Tracers pass:
+    under ``jax.jit`` the scales were already validated eagerly by
+    ``quant.apply.quantize_params`` before entering the jitted call."""
+    if s is None or isinstance(s, jax.core.Tracer):
+        return None
+    v = np.asarray(s)
+    if not np.all(np.isfinite(v)):
+        return "quant_scale_nan"
+    if np.any(v <= 0):
+        return "quant_scale_zero"
+    return None
+
+
+def _guard_quant_scales(site, x, w, w_scale, x_scale):
+    """Numeric guard on the int8 chain: a zero/NaN scale reaching dispatch
+    would emit all-zero or NaN codes and poison every downstream token.
+    Returns ``(x_scale, to_float)`` — when the operands are recoverable the
+    site degrades (float weights → the float path, float activations → a
+    dynamic absmax scale) with a logged event; int8-pinned operands whose
+    scale is unusable cannot be recovered at this layer and raise."""
+    bad_w = _scale_bad(w_scale) if w.dtype == jnp.int8 else None
+    if bad_w:
+        HEALTH.record(site, bad_w, "error:w_scale")
+        raise ValueError(f"unusable int8 w_scale at {site} ({bad_w})")
+    bad_x = _scale_bad(x_scale)
+    if not bad_x:
+        return x_scale, False
+    if x.dtype == jnp.int8:
+        HEALTH.record(site, bad_x, "error:x_scale")
+        raise ValueError(f"unusable x_scale for int8 input at {site} ({bad_x})")
+    if w.dtype != jnp.int8:
+        HEALTH.record(site, bad_x, "fallback:fp")
+        return x_scale, True
+    HEALTH.record(site, bad_x, "fallback:dynamic_scale")
+    return None, False
 
 
 def _pad1d(x, padding, k, dilation):
@@ -228,6 +311,10 @@ def _quant_fallback_reason(x, w, stride, precision) -> str | None:
     if kq not in _QUANT_FALLBACKS:
         _QUANT_FALLBACKS[kq] = reason
         print(f"[quant] fallback: {reason}", file=sys.stderr)
+        HEALTH.record(
+            f"conv1d.{precision}", "quant_slower", "fallback:fp",
+            detail=kq,
+        )
     return reason
 
 
@@ -316,6 +403,16 @@ def conv1d(
     if precision != "fp":
         _check_quant_dispatch(precision, backend, dilation)
         x = _pad1d(x, padding, w.shape[0], 1)
+        site = f"conv1d.{precision}"
+        x_scale, to_float = _guard_quant_scales(site, x, w, w_scale, x_scale)
+        if to_float:
+            # unusable calibrated scale, float operands: serve the fp path
+            return conv1d(
+                x, w, stride=stride, padding="VALID", backend=backend,
+                bias=bias, activation=activation, tile_l=tile_l,
+                cin_block=cin_block, cout_block=cout_block, regime=regime,
+                bwd_tile_l=bwd_tile_l, interpret=interpret,
+            )
         explicit_cfg = not (
             tile_l is None and cin_block is None and cout_block is None
             and regime is None
@@ -350,11 +447,28 @@ def conv1d(
             x, w, stride=stride, tile_l=tile_l, cin_block=cin_block,
             cout_block=cout_block, regime=regime, dtype_key=precision,
         )
-        return sliding_conv_quant.conv1d_quant_pallas(
-            x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
-            mode=precision, activation=activation, out_dtype=out_dtype,
-            interpret=interpret, **tuned,
-        )
+
+        def _q_jax(accumulate):
+            # the pure-JAX quant twin (qconv): "fast" = compiled serving
+            # evaluation, "int32" = exact integer oracle
+            from repro.quant import qconv
+
+            return qconv.conv1d_q(
+                x, qconv.QuantizedWeight(w, w_scale), bias, mode=precision,
+                x_scale=x_scale, out_scale=out_scale, stride=stride,
+                padding="VALID", activation=activation,
+                accumulate=accumulate, out_dtype=out_dtype,
+            )
+
+        return _ladder(site, [
+            ("pallas", lambda: sliding_conv_quant.conv1d_quant_pallas(
+                x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
+                mode=precision, activation=activation, out_dtype=out_dtype,
+                interpret=interpret, **tuned,
+            )),
+            ("jax", lambda: _q_jax("fast")),
+            ("ref", lambda: _q_jax("int32")),
+        ])
     if backend == "xla":
         y = core_conv.conv1d_xla(
             x, w, stride=stride, padding=padding, dilation=dilation
@@ -377,7 +491,18 @@ def conv1d(
             bwd_tile_l=_bwd_tile1d(x, w, stride, bwd_tile_l),
             interpret=interpret, **tuned,
         )
-        return _conv1d_sliding_op(cfg, x, w, bias)
+        return _ladder("conv1d", [
+            ("pallas", lambda: _conv1d_sliding_op(cfg, x, w, bias)),
+            ("jax", lambda: epilogue_unfused(
+                core_conv.conv1d_sliding(
+                    x, w, stride=stride, padding="VALID"
+                ), bias, activation,
+            )),
+            ("ref", lambda: epilogue_unfused(
+                core_conv.conv1d_xla(x, w, stride=stride, padding="VALID"),
+                bias, activation,
+            )),
+        ])
     tile_l = sliding_conv1d.DEFAULT_TILE_L if tile_l is None else tile_l
     if backend == "im2col_gemm":
         y = im2col_gemm.conv1d_im2col_fused_pallas(
@@ -479,6 +604,14 @@ def conv1d_depthwise(
         from repro.quant import qconv
         from repro.quant.apply import quantize_depthwise_weight
 
+        site = f"conv1d_depthwise.{precision}"
+        x_scale, to_float = _guard_quant_scales(site, x, w, w_scale, x_scale)
+        if to_float:
+            return conv1d_depthwise(
+                x, w, stride=stride, padding="VALID", bias=bias,
+                activation=activation, tile_l=tile_l, c_block=c_block,
+                bwd_tile_l=bwd_tile_l, interpret=interpret,
+            )
         out_dtype = jnp.float32 if x.dtype == jnp.int8 else x.dtype
         if w.dtype != jnp.int8:
             qw = quantize_depthwise_weight(w)
@@ -491,13 +624,27 @@ def conv1d_depthwise(
         B, L, C = x.shape
         key = autotune.conv1d_dw_key(B, L, C, w.shape[0], stride, precision)
         cfg = _tuned_fill(key, tile_l=tile_l, c_block=c_block)
-        return sliding_conv_quant.conv1d_depthwise_quant_pallas(
-            x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
-            mode=precision, stride=stride,
-            tile_l=cfg["tile_l"] or sliding_conv1d.DEFAULT_TILE_L,
-            c_block=_auto_block(C, cfg["c_block"]), activation=activation,
-            out_dtype=out_dtype, interpret=interpret,
-        )
+
+        def _q_jax(accumulate):
+            return qconv.conv1d_depthwise_q(
+                x, qconv.QuantizedWeight(w, w_scale), bias, mode=precision,
+                x_scale=x_scale, out_scale=out_scale, stride=stride,
+                padding="VALID", activation=activation,
+                accumulate=accumulate, out_dtype=out_dtype,
+            )
+
+        return _ladder(site, [
+            ("pallas", lambda: sliding_conv_quant.conv1d_depthwise_quant_pallas(
+                x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
+                mode=precision, stride=stride,
+                tile_l=cfg["tile_l"] or sliding_conv1d.DEFAULT_TILE_L,
+                c_block=_auto_block(C, cfg["c_block"]),
+                activation=activation, out_dtype=out_dtype,
+                interpret=interpret,
+            )),
+            ("jax", lambda: _q_jax("fast")),
+            ("ref", lambda: _q_jax("int32")),
+        ])
     tile_l = sliding_conv1d.DEFAULT_TILE_L if tile_l is None else tile_l
     cfg = _DepthwiseCfg(
         stride=stride, tile_l=tile_l,
@@ -506,7 +653,20 @@ def conv1d_depthwise(
         bwd_tile_l=bwd_tile_l if bwd_tile_l is not None else tile_l,
         interpret=interpret,
     )
-    return _conv1d_depthwise_op(cfg, x, w, bias)
+    return _ladder("conv1d_depthwise", [
+        ("pallas", lambda: _conv1d_depthwise_op(cfg, x, w, bias)),
+        ("jax", lambda: epilogue_unfused(
+            core_conv.conv1d_depthwise_sliding(
+                x, w, stride=stride, padding="VALID"
+            ), bias, activation,
+        )),
+        ("ref", lambda: epilogue_unfused(
+            core_conv.conv1d_xla(
+                x, w[:, None, :], stride=stride, padding="VALID",
+                groups=x.shape[-1],
+            ), bias, activation,
+        )),
+    ])
 
 
 # ---------------------------------------------------------------------------
@@ -660,6 +820,16 @@ def conv2d(
         )
         if plo_h or phi_h or plo_w or phi_w:
             x = jnp.pad(x, ((0, 0), (plo_h, phi_h), (plo_w, phi_w), (0, 0)))
+        site = f"conv2d.{precision}"
+        x_scale, to_float = _guard_quant_scales(site, x, w, w_scale, x_scale)
+        if to_float:
+            return conv2d(
+                x, w, stride=stride, padding="VALID", backend=backend,
+                bias=bias, activation=activation, tile_h=tile_h,
+                tile_w=tile_w, cin_block=cin_block, cout_block=cout_block,
+                regime=regime, bwd_tile_h=bwd_tile_h, bwd_tile_w=bwd_tile_w,
+                interpret=interpret,
+            )
         x, w, w_scale, x_scale, out_dtype = _quant_operands(
             x, w, w_scale, x_scale, precision
         )
@@ -668,11 +838,26 @@ def conv2d(
             cin_block=cin_block, cout_block=cout_block, regime=regime,
             dtype_key=precision,
         )
-        return sliding_conv_quant.conv2d_quant_pallas(
-            x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
-            mode=precision, activation=activation, out_dtype=out_dtype,
-            interpret=interpret, **tuned,
-        )
+
+        def _q_jax(accumulate):
+            from repro.quant import qconv
+
+            return qconv.conv2d_q(
+                x, qconv.QuantizedWeight(w, w_scale), bias, mode=precision,
+                x_scale=x_scale, out_scale=out_scale, stride=stride,
+                padding="VALID", activation=activation,
+                accumulate=accumulate, out_dtype=out_dtype,
+            )
+
+        return _ladder(site, [
+            ("pallas", lambda: sliding_conv_quant.conv2d_quant_pallas(
+                x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
+                mode=precision, activation=activation, out_dtype=out_dtype,
+                interpret=interpret, **tuned,
+            )),
+            ("jax", lambda: _q_jax("fast")),
+            ("ref", lambda: _q_jax("int32")),
+        ])
     if backend == "xla":
         y = core_conv.conv2d_xla(
             x, w, stride=stride, padding=padding, dilation=dilation
@@ -700,7 +885,18 @@ def conv2d(
             activation=activation, has_bias=bias is not None,
             bwd_tile_h=bth, bwd_tile_w=btw, interpret=interpret, **tuned,
         )
-        return _conv2d_sliding_op(cfg, x, w, bias)
+        return _ladder("conv2d", [
+            ("pallas", lambda: _conv2d_sliding_op(cfg, x, w, bias)),
+            ("jax", lambda: epilogue_unfused(
+                core_conv.conv2d_sliding(
+                    x, w, stride=stride, padding="VALID"
+                ), bias, activation,
+            )),
+            ("ref", lambda: epilogue_unfused(
+                core_conv.conv2d_xla(x, w, stride=stride, padding="VALID"),
+                bias, activation,
+            )),
+        ])
     if backend == "im2col_gemm":
         # the fused-VMEM baseline — NOT the HBM-bloat one (which previously
         # shadowed it here, mislabeling fig1/fig2 "im2col" numbers)
@@ -773,28 +969,41 @@ def attention_decode(
     # caches are cache-hierarchy-resident there and the blocked scan only
     # adds carry overhead (measured: single-block 1.3× over block_s=128 at
     # S=512). The ``attn_dec|…`` tuned entry overrides either way.
-    block_s = cfg["block_s"] or (
-        attn_dec.DEFAULT_BLOCK_S if impl == "pallas" else S
-    )
     h_block = cfg["h_block"] or 1
-    ATTN_DECODE_DISPATCH[key] = impl
+    interpret = use_interpret() if interpret is None else interpret
     q4 = q.reshape(B, KV, G, D)
-    if impl == "pallas":
-        interpret = use_interpret() if interpret is None else interpret
-        out = attn_dec.decode_attention_pallas(
-            q4, k, v, k_scale, v_scale, lengths,
-            block_s=block_s, h_block=h_block, interpret=interpret,
+
+    def _run(im):
+        # the impl that actually served this key — a demoted rung's
+        # replacement overwrites the failed rung's entry
+        ATTN_DECODE_DISPATCH[key] = im
+        block_s = cfg["block_s"] or (
+            attn_dec.DEFAULT_BLOCK_S if im == "pallas" else S
         )
-    elif impl == "jax":
-        out = attn_dec.attention_decode_jax(
-            q4, k, v, k_scale, v_scale, lengths, block_s=block_s
-        )
-    elif impl == "ref":
-        out = attn_dec.attention_decode_ref(
+        if im == "pallas":
+            return attn_dec.decode_attention_pallas(
+                q4, k, v, k_scale, v_scale, lengths,
+                block_s=block_s, h_block=h_block, interpret=interpret,
+            )
+        if im == "jax":
+            return attn_dec.attention_decode_jax(
+                q4, k, v, k_scale, v_scale, lengths, block_s=block_s
+            )
+        return attn_dec.attention_decode_ref(
             q4, k, v, k_scale, v_scale, lengths
         )
-    else:
+
+    order = {
+        "pallas": ("pallas", "jax", "ref"),
+        "jax": ("jax", "ref"),
+        "ref": ("ref",),
+    }.get(impl)
+    if order is None:
         raise ValueError(f"unknown attention_decode impl {impl!r}")
+    out = _ladder(
+        "attention_decode",
+        [(im, functools.partial(_run, im)) for im in order],
+    )
     return out.reshape(B, H, D)
 
 
@@ -874,5 +1083,8 @@ def pool1d(
     None resolves it per shape from the autotune cache (falling back to the
     window-size crossover heuristic) instead of hardcoding one form."""
     interpret = use_interpret() if interpret is None else interpret
-    return _pool1d_op(window, op, _pool_method(x, window, op, method),
-                      interpret, x)
+    resolved = _pool_method(x, window, op, method)
+    return _ladder("pool1d", [
+        ("pallas", lambda: _pool1d_op(window, op, resolved, interpret, x)),
+        ("jax", lambda: kernels_ref.pool_ref(x, window=window, op=op)),
+    ])

@@ -28,6 +28,13 @@ kernel folds the dequant into its online softmax so the int8 codes stay
 resident and no float K/V view is materialized (DESIGN.md §9);
 ``--attn-decode view`` keeps the dequantize-whole-cache baseline for A/B
 runs. Reported cache bytes drop ~2× (bf16 params) to ~3.5× (f32 smoke).
+
+Serving is crash-safe (DESIGN.md §10): ``generate`` runs under a bounded
+``RestartPolicy`` retry (non-finite logits — guarded per step — or a
+runtime failure re-run the request instead of crashing the server), an
+optional per-request ``deadline_s`` truncates overlong decodes with an
+eos-padded result and a reason-coded health event, and the decode loop
+drives a ``StepWatchdog`` + heartbeat like train when ``run_dir`` is given.
 """
 from __future__ import annotations
 
@@ -39,8 +46,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.configs import get_config, smoke_config
+from repro.distributed.ft import RestartPolicy, StepWatchdog, beat
 from repro.distributed.sharding import ParamDef, Runtime
+from repro.health import HEALTH
 from repro.models import build_model
 
 
@@ -189,29 +199,42 @@ def prefill_cache(model, params, prompts, *, cache_len: int,
     return logits, pad_cache_to_defs(cache, full, defs)
 
 
-def generate(model, params, prompts, *, gen_len: int, cache_len: int,
-             temperature: float = 0.0, seed: int = 0):
-    """prompts: (B, P) int32 -> ((B, gen_len) int32, done mask (B,) bool).
+def _check_finite(logits, step: int):
+    """Per-step numeric guard: NaN/Inf logits would silently argmax to
+    token 0 and poison the whole continuation — fail fast so the retry
+    wrapper re-runs the request instead. One scalar reduction per step;
+    the decode loop is already host-synchronous (the sampled token feeds
+    the next step), so this adds no extra device sync."""
+    logits = faults.corrupt_array("nan_activations", "serve/logits", logits)
+    if not bool(jnp.isfinite(logits).all()):
+        raise FloatingPointError(f"non-finite logits at decode step {step}")
+    return logits
 
-    Slots whose sequence hit ``cfg.eos_id`` are finished: they keep
-    decoding into masked positions (their tokens pinned to eos) so the
-    static batch shape holds, and the returned ``done`` mask tells the
-    caller which slots are recyclable.
-    """
+
+def _generate_once(model, params, prompts, *, gen_len, cache_len,
+                   temperature, seed, deadline_s, nan_guard, run_dir,
+                   host_id, watchdog):
     cfg = model.cfg
     eos = jnp.int32(cfg.eos_id)
     B, P = prompts.shape
+    t_start = time.time()
     logits, cache = prefill_cache(
         model, params, prompts, cache_len=cache_len, gen_len=gen_len
     )
     _, decode = _jitted(model)
 
+    if nan_guard:
+        logits = _check_finite(logits, -1)
     key = jax.random.key(seed)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     done = tok[:, 0] == eos
     out = [tok]
     for i in range(gen_len - 1):
+        t_step = time.time()
+        faults.sleep_point("slow_step", "serve")
         logits, cache = decode(params, cache, tok, jnp.int32(P + i))
+        if nan_guard:
+            logits = _check_finite(logits, i)
         if temperature > 0:
             key, sub = jax.random.split(key)
             tok = jax.random.categorical(
@@ -222,7 +245,78 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
         tok = jnp.where(done[:, None], eos, tok)  # finished slots: masked
         out.append(tok)
         done = done | (tok[:, 0] == eos)
+        if watchdog is not None:
+            watchdog.observe(P + i, time.time() - t_step)
+        if run_dir is not None:
+            beat(run_dir, host_id)
+        if deadline_s is not None and time.time() - t_start > deadline_s:
+            # deadline: truncate the request — remaining positions pad
+            # with eos and every slot is marked recyclable
+            HEALTH.record(
+                "serve/generate", "deadline_exceeded", "truncate",
+                detail=f"{len(out)}/{gen_len} tokens in {deadline_s}s",
+            )
+            out.append(jnp.full((B, gen_len - len(out)), eos, jnp.int32))
+            done = jnp.ones_like(done)
+            break
     return jnp.concatenate(out, axis=1), done
+
+
+def generate(model, params, prompts, *, gen_len: int, cache_len: int,
+             temperature: float = 0.0, seed: int = 0,
+             deadline_s: float | None = None, max_retries: int = 2,
+             nan_guard: bool = True, run_dir=None, host_id: int = 0,
+             watchdog: StepWatchdog | None = None):
+    """prompts: (B, P) int32 -> ((B, gen_len) int32, done mask (B,) bool).
+
+    Slots whose sequence hit ``cfg.eos_id`` are finished: they keep
+    decoding into masked positions (their tokens pinned to eos) so the
+    static batch shape holds, and the returned ``done`` mask tells the
+    caller which slots are recyclable.
+
+    Robustness (DESIGN.md §10): the request runs under a bounded retry —
+    a failure mid-decode (non-finite logits caught by the per-step
+    ``nan_guard``, a kernel dying at runtime) re-runs it up to
+    ``max_retries`` times with short backoff before propagating.
+    ``deadline_s`` bounds wall-clock per request: on expiry the result is
+    truncated (eos-padded, all slots done) instead of running open-ended.
+    When ``run_dir`` is given the decode loop heartbeats per step and a
+    ``watchdog`` (or a default one) flags straggler steps into ``HEALTH``.
+    """
+    if watchdog is None and run_dir is not None:
+        watchdog = StepWatchdog(
+            on_straggler=lambda step, s, ema: HEALTH.record(
+                "serve/decode", "straggler", "flag",
+                detail=f"step {step}: {s:.3f}s vs EMA {ema:.3f}s",
+            )
+        )
+    policy = RestartPolicy(
+        max_restarts=max_retries, base_backoff_s=0.05, max_backoff_s=2.0
+    )
+    while True:
+        try:
+            return _generate_once(
+                model, params, prompts, gen_len=gen_len,
+                cache_len=cache_len, temperature=temperature, seed=seed,
+                deadline_s=deadline_s, nan_guard=nan_guard,
+                run_dir=run_dir, host_id=host_id, watchdog=watchdog,
+            )
+        except Exception as e:  # noqa: BLE001 — bounded retry, then raise
+            reason = getattr(e, "kind", None) or (
+                "nan_logits" if isinstance(e, FloatingPointError)
+                else type(e).__name__
+            )
+            delay = policy.next_backoff()
+            if delay is None:
+                HEALTH.record(
+                    "serve/generate", reason, "error:retries_exhausted",
+                    detail=repr(e)[:200],
+                )
+                raise
+            HEALTH.record(
+                "serve/generate", reason, "retry", detail=repr(e)[:200]
+            )
+            time.sleep(delay)
 
 
 def quantize_for_serving(model, params, prompts):
@@ -266,6 +360,19 @@ def main():
                     help="decode-attention read: fused flash kernel "
                          "(int8 codes stay resident) vs the dequant-view "
                          "baseline")
+    ap.add_argument("--conv-backend", default=None,
+                    choices=["sliding", "sliding_pallas", "im2col_gemm",
+                             "xla"],
+                    help="conv evaluation for the model's conv layers; "
+                         "sliding_pallas routes through the ops dispatch "
+                         "ladder (the chaos-CI path)")
+    ap.add_argument("--run-dir", default=None,
+                    help="heartbeat/watchdog directory for the decode loop")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock budget; expiry truncates "
+                         "the batch with eos padding")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="bounded retry budget per request")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -273,6 +380,8 @@ def main():
         cfg = smoke_config(cfg)
     if args.kv_quant:
         cfg = cfg.replace(kv_quant=args.kv_quant)
+    if args.conv_backend:
+        cfg = cfg.replace(conv_backend=args.conv_backend)
     cfg = cfg.replace(attn_decode=args.attn_decode)
     rt = Runtime()
     model = build_model(cfg, rt)
@@ -291,6 +400,8 @@ def main():
     toks, done = generate(
         model, params, prompts, gen_len=args.gen,
         cache_len=cache_len, temperature=args.temperature, seed=args.seed,
+        deadline_s=args.deadline_s, max_retries=args.retries,
+        run_dir=args.run_dir,
     )
     dt = time.time() - t0
     print(f"[serve] generated {toks.shape} in {dt:.2f}s "
@@ -311,6 +422,10 @@ def main():
     print(f"[serve] kv-cache bytes: {bytes_now} "
           f"(fp {bytes_fp}, ratio {bytes_fp / bytes_now:.2f}x)")
     print("[serve] sample:", np.asarray(toks[0][:16]))
+    for line in HEALTH.summary():
+        # one reason-coded line per degradation event — the chaos CI job
+        # asserts the expected ones appear (and clean runs assert none do)
+        print(f"[serve] health: {line}")
 
 
 if __name__ == "__main__":

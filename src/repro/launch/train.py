@@ -19,10 +19,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager, latest_step
+from repro import faults
+from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, smoke_config
 from repro.data import SyntheticLMData, make_batch_iterator
 from repro.distributed.ft import RestartPolicy, StepWatchdog, beat
+from repro.health import HEALTH
 from repro.distributed.sharding import Runtime
 from repro.launch.steps import make_train_step
 from repro.models import build_model
@@ -85,7 +87,10 @@ def train_loop(args) -> dict:
 
         frame_dim = N_MELS
 
-    start = latest_step(ckpt.dir)
+    # resume from the newest checkpoint that VALIDATES — a run killed
+    # mid-async-save leaves a torn step behind; latest_valid_step
+    # quarantines it and falls back to the previous intact one
+    start = ckpt.latest_valid_step()
     if start is not None and not args.no_resume:
         skeleton = {
             "params": model.init(jax.random.key(args.seed)),
@@ -123,6 +128,7 @@ def train_loop(args) -> dict:
             )
         )
         t0 = time.time()
+        faults.sleep_point("slow_step", "train")  # chaos: straggler step
         state, metrics = step_fn(state, batch)
         loss = float(metrics["loss"])
         dt = time.time() - t0
@@ -181,7 +187,11 @@ def main():
         except RuntimeError as e:
             delay = policy.next_backoff()
             if delay is None:
+                HEALTH.record("train", "restarts_exhausted", "raise",
+                              detail=repr(e)[:200])
                 raise
+            HEALTH.record("train", "step_crash", "restart",
+                          detail=repr(e)[:200])
             print(f"[ft] {e}; restarting in {delay:.1f}s "
                   f"({policy.restarts}/{policy.max_restarts})")
             time.sleep(min(delay, 2.0))  # capped for tests

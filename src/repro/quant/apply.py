@@ -32,7 +32,9 @@ from __future__ import annotations
 from typing import Any
 
 import jax.numpy as jnp
+import numpy as np
 
+from repro.health import HEALTH
 from repro.quant.calibrate import QuantSpec
 from repro.quant.qconv import QuantizedWeight, quantize_weight
 
@@ -79,6 +81,21 @@ def quantize_depthwise_weight(w, x_scale=None) -> QuantizedWeight:
     return QuantizedWeight(q, s, x_scale)
 
 
+def _scale_reason(s) -> str | None:
+    """Reason code when a calibrated scale is unusable, else None. Scales
+    are concrete here (quantization happens eagerly, pre-jit) — this is
+    the primary zero/NaN-scale defense: a poisoned scale baked into the
+    params tree would turn every token into NaN, so screen it out now."""
+    if s is None:
+        return None
+    a = np.asarray(s, dtype=np.float64)
+    if not np.isfinite(a).all():
+        return "quant_scale_nan"
+    if (a <= 0.0).any():
+        return "quant_scale_zero"
+    return None
+
+
 def quantize_params(
     params: Any, spec: QuantSpec | None = None, *, mode: str = "w8a8"
 ) -> Any:
@@ -102,18 +119,40 @@ def quantize_params(
             if isinstance(val, dict):
                 out[key] = walk(val)
             elif key in SITE_FOR_KEY:
-                entry = spec.get(SITE_FOR_KEY[key], {})
-                out[key] = quantize_weight(
-                    val, entry.get("x_scale"), entry.get("out_scale")
-                )
+                site = SITE_FOR_KEY[key]
+                entry = spec.get(site, {})
+                x_scale = entry.get("x_scale")
+                out_scale = entry.get("out_scale")
+                bad = _scale_reason(x_scale)
+                if bad is not None:
+                    # unusable activation scale: keep the weight float (the
+                    # site runs the fp kernels) rather than ship a grid
+                    # that maps every activation to NaN/inf codes
+                    HEALTH.record(site, bad, "fallback:fp")
+                    out[key] = val
+                    continue
+                bad_out = _scale_reason(out_scale)
+                if bad_out is not None:
+                    # requant chain target is poisoned: break the chain
+                    # (dequant to f32 at this site) but keep w8a8 itself
+                    HEALTH.record(site, bad_out, "fallback:no_requant")
+                    out_scale = None
+                out[key] = quantize_weight(val, x_scale, out_scale)
             elif key in WEIGHT_ONLY_KEYS:
                 # depthwise site names are shape-derived (no stable param
                 # path): recover the site from the (…, K, C) weight shape
                 from repro.quant.calibrate import conv_site
 
                 c, k = val.shape[-1], val.shape[-2]
-                entry = spec.get(conv_site("conv1d_dw", c, c, k), {})
+                dw_site = conv_site("conv1d_dw", c, c, k)
+                entry = spec.get(dw_site, {})
                 x_scale = entry.get("x_scale")
+                bad = _scale_reason(x_scale)
+                if bad is not None:
+                    # weight-only int8 still works; the activation falls
+                    # back to dynamic absmax scaling at inference
+                    HEALTH.record(dw_site, bad, "fallback:dynamic_scale")
+                    x_scale = None
                 if x_scale is not None and val.ndim > 2:
                     # jamba stacks periods ahead of (K, C): every leaf of
                     # the scanned pytree must share the leading scan axis

@@ -123,14 +123,19 @@ class Calibration:
 
     def site_scale(self, site: str) -> Array:
         """Per-tensor activation scale for a site: percentile (or absmax)
-        of |x| over all calibration batches, mapped onto the int8 grid."""
+        of |x| over all calibration batches, mapped onto the int8 grid.
+        The ``quant_scale_zero``/``quant_scale_nan`` faults corrupt the
+        emitted scale here — the point a broken calibration run would."""
+        from repro import faults
+
         st = self.stats[site]
         if self.percentile is None:
             hi = float(st.absmax.max())
         else:
             hi = float(np.percentile(st.vals, self.percentile))
             hi = max(hi, 1e-8)  # all-zero calibration data
-        return jnp.asarray(hi / 127.0 + 1e-12, jnp.float32)
+        scale = jnp.asarray(hi / 127.0 + 1e-12, jnp.float32)
+        return faults.corrupt_scale(site, scale)
 
     def channel_absmax(self, site: str) -> Array:
         """Per-channel absmax (diagnostics / future per-channel modes)."""

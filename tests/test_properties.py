@@ -154,6 +154,78 @@ def test_quantize_zero_rows_exact(data):
 
 
 @given(st.data())
+def test_restart_policy_budget_and_cap(data):
+    """RestartPolicy grants exactly ``max_restarts`` backoffs, doubling
+    from ``base`` but never past ``cap``, non-decreasing, then None
+    forever; ``reset`` restores the full budget."""
+    from repro.distributed.ft import RestartPolicy
+
+    max_restarts = data.draw(st.integers(0, 8), label="max_restarts")
+    base = data.draw(st.floats(0.01, 10, width=32), label="base")
+    cap = data.draw(st.floats(0.01, 100, width=32), label="cap")
+    p = RestartPolicy(max_restarts=max_restarts, base_backoff_s=base,
+                      max_backoff_s=cap)
+    delays = [p.next_backoff() for _ in range(max_restarts + 3)]
+    granted = delays[:max_restarts]
+    assert all(d is not None for d in granted)
+    assert all(d is None for d in delays[max_restarts:])  # budget exhausted
+    assert all(d <= cap + 1e-9 for d in granted)
+    for a, b in zip(granted, granted[1:]):
+        assert b >= a - 1e-9  # backoff never shrinks
+    if max_restarts:
+        assert granted[0] == pytest.approx(min(base, cap))
+    p.reset()
+    assert (p.next_backoff() is None) == (max_restarts == 0)
+
+
+@given(st.data())
+def test_watchdog_never_flags_during_warmup(data):
+    """No straggler flags during warmup (or on the very first step, when
+    there is no EMA yet) — whatever the step durations."""
+    from repro.distributed.ft import StepWatchdog
+
+    warmup = data.draw(st.integers(0, 6), label="warmup")
+    wd = StepWatchdog(threshold=1.01, warmup_steps=warmup)
+    for i in range(max(warmup, 1)):
+        sec = data.draw(st.floats(1e-3, 100, width=32), label=f"t{i}")
+        assert not wd.observe(i, sec)
+    assert wd.events == []
+
+
+@given(st.data())
+def test_watchdog_flags_spike_not_steady_state(data):
+    """Constant-duration steps never flag; a spike beyond threshold×EMA
+    flags exactly once and a normal step right after does not."""
+    from repro.distributed.ft import StepWatchdog
+
+    warmup = data.draw(st.integers(0, 6), label="warmup")
+    threshold = data.draw(st.floats(1.5, 5, width=32), label="threshold")
+    base = data.draw(st.floats(0.01, 1.0, width=32), label="base")
+    wd = StepWatchdog(threshold=threshold, warmup_steps=warmup, decay=0.9)
+    for i in range(warmup + 8):
+        assert not wd.observe(i, base)
+    assert wd.observe(99, base * threshold * 1.5)
+    assert not wd.observe(100, base)
+    assert [s for s, _, _ in wd.events] == [99]
+
+
+@given(st.data())
+def test_watchdog_ema_decays_toward_steady_state(data):
+    """The EMA forgets an outlier first step geometrically (rate =
+    ``decay``): after n constant steps the distance shrinks by decay^n."""
+    from repro.distributed.ft import StepWatchdog
+
+    v0 = data.draw(st.floats(1.0, 100, width=32), label="v0")
+    v = data.draw(st.floats(0.01, 1.0, width=32), label="v")
+    decay = data.draw(st.floats(0.1, 0.9, width=32), label="decay")
+    wd = StepWatchdog(decay=decay, warmup_steps=10_000)  # detection off
+    wd.observe(0, v0)
+    for i in range(1, 40):
+        wd.observe(i, v)
+    assert abs(wd.ema - v) <= abs(v0 - v) * decay ** 39 + 1e-6
+
+
+@given(st.data())
 def test_data_pipeline_determinism_and_masking(data):
     from repro.data import SyntheticLMData
 

@@ -112,7 +112,78 @@ def test_checkpoint_atomicity(tmp_path, rng):
     assert latest_step(tmp_path) == 1
 
 
+def test_checkpoint_truncated_leaf_quarantined(tmp_path, rng):
+    """A committed-but-truncated leaf (torn write) fails validation and
+    ``latest_valid_step`` quarantines it, recovering the previous step."""
+    from repro import faults
+
+    state = make_state(rng)
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(1, state)
+    mgr.save(4, state)
+    leaf = next((Path(tmp_path) / "step_4").glob("*.npy"))
+    faults.truncate_file(leaf)
+    assert mgr.validate(4) is not None
+    assert mgr.validate(1) is None
+    assert mgr.latest_valid_step() == 1
+    assert (Path(tmp_path) / "step_4.corrupt").exists()  # kept for autopsy
+    assert latest_step(tmp_path) == 1  # quarantined step is invisible
+    restored = mgr.restore(1, state)  # and the survivor actually loads
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_ignores_stray_dirs(tmp_path, rng, capfd):
+    state = make_state(rng)
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(2, state)
+    (Path(tmp_path) / "step_final").mkdir()  # stray non-numeric dir
+    (Path(tmp_path) / "step_7.corrupt").mkdir()
+    assert latest_step(tmp_path) == 2
+    assert "ignoring stray dir" in capfd.readouterr().err
+
+
 REPO_ROOT = str(Path(__file__).resolve().parents[1])
+
+
+def test_checkpoint_kill_mid_async_save_recovers(tmp_path):
+    """SIGKILL a process mid-``save(blocking=False)`` (write stalled via
+    fault injection so the kill reliably lands between leaves): the torn
+    ``.tmp`` dir is left behind, never becomes visible, and
+    ``latest_valid_step`` recovers the newest intact checkpoint."""
+    import os, subprocess, sys
+
+    script = (
+        "import sys\n"
+        "import jax.numpy as jnp\n"
+        "from repro import faults\n"
+        "from repro.checkpoint import CheckpointManager\n"
+        "state = {f'w{i}': jnp.ones((64, 64)) for i in range(8)}\n"
+        "mgr = CheckpointManager(sys.argv[1], keep=5)\n"
+        "mgr.save(1, state)\n"
+        "with faults.inject('ckpt_write_stall', delay_s=0.25):\n"
+        "    mgr.save(5, state, blocking=False)\n"
+        "    print('WRITING', flush=True)\n"
+        "    mgr.wait()\n"
+        "print('DONE', flush=True)\n"
+    )
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.Popen(
+        [sys.executable, "-c", script, str(tmp_path / "ckpt")],
+        stdout=subprocess.PIPE, text=True, env=env, cwd=REPO_ROOT,
+    )
+    try:
+        assert proc.stdout.readline().strip() == "WRITING"
+        time.sleep(0.4)  # a couple of the 8 stalled leaves are on disk
+        proc.kill()  # SIGKILL: no atexit, no join — a genuine torn write
+    finally:
+        proc.wait()
+    mgr = CheckpointManager(tmp_path / "ckpt", keep=5)
+    assert (tmp_path / "ckpt" / "step_5.tmp").exists()  # torn remnant
+    assert latest_step(tmp_path / "ckpt") == 1  # never became visible
+    assert mgr.latest_valid_step() == 1
+    restored = mgr.restore(1, {f"w{i}": None for i in range(8)})
+    assert all(np.asarray(v).shape == (64, 64) for v in restored.values())
 
 
 def test_train_resume_determinism(tmp_path):
