@@ -1,0 +1,27 @@
+"""Static analysis for the kernel + dispatch layer (DESIGN.md §11).
+
+Three passes, run by ``python -m repro.analysis``:
+
+  * :mod:`repro.analysis.contracts` — every Pallas kernel family declares
+    its grid / BlockSpecs / index maps / scratch shapes as symbolic
+    functions of the shape key; the checker proves halo reads in-bounds,
+    VMEM working set within budget, accumulator widening, and
+    revisit-race safety over the autotune key space. The autotuner
+    consults the same checker to prune provably-illegal tile candidates
+    before wasting bench time on them.
+  * :mod:`repro.analysis.bloat` — memory-bloat linter over the compiled
+    HLO of the pure-JAX dispatch rungs (im2col-style intermediates), plus
+    the trace-time dequant-per-chain count.
+  * :mod:`repro.analysis.lint` — AST convention lint over ``src/``
+    (frozen ``health.Reason`` codes at ``HEALTH.record`` sites, site
+    strings from the calibration registry, no raw ``pl.load``-style
+    indexing outside a declared BlockSpec).
+"""
+from repro.analysis.contracts import (  # noqa: F401
+    KernelInstance,
+    Violation,
+    check_all,
+    check_autotune_candidate,
+    check_instance,
+    vmem_budget,
+)

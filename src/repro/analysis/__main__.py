@@ -1,0 +1,122 @@
+"""CLI: ``python -m repro.analysis [--contracts|--bloat|--lint|--all]``.
+
+Runs the selected passes (default: all three), prints a human report,
+writes ``ANALYSIS.json`` (machine-readable: per-violation kind / family /
+key / detail plus per-pass stats and the autotune prune report), and
+exits nonzero if any pass found a violation — this is the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import sys
+import time
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis: kernel contracts, memory bloat, "
+                    "convention lint",
+    )
+    p.add_argument("--all", action="store_true", help="run every pass (default)")
+    p.add_argument("--contracts", action="store_true",
+                   help="kernel contract checker over the BENCH key space")
+    p.add_argument("--bloat", action="store_true",
+                   help="HLO memory-bloat linter + dequant-chain check")
+    p.add_argument("--lint", action="store_true",
+                   help="AST convention lint over the repro package")
+    p.add_argument("--quick", action="store_true",
+                   help="contracts: sample the key space instead of "
+                        "sweeping every filter size")
+    p.add_argument("--json", default="ANALYSIS.json", metavar="PATH",
+                   help="report path (default: %(default)s)")
+    p.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
+                   help="override the VMEM budget "
+                        "(default: REPRO_VMEM_BUDGET or 16 MiB)")
+    p.add_argument("--alpha", type=float, default=None,
+                   help="override the bloat threshold "
+                        "(default: REPRO_BLOAT_ALPHA or 2.0)")
+    p.add_argument("--lint-root", default=None, metavar="DIR",
+                   help="lint this tree instead of the repro package")
+    args = p.parse_args(argv)
+
+    run_all = args.all or not (args.contracts or args.bloat or args.lint)
+    violations = []
+    stats: dict = {}
+    t0 = time.time()
+
+    if run_all or args.contracts:
+        from repro.analysis import contracts
+
+        v, s = contracts.check_all(quick=args.quick, budget=args.vmem_budget)
+        violations += v
+        # prune report: what the autotuner's contract hook would skip per
+        # family at this budget (0 everywhere at the default 16 MiB —
+        # nonzero means tuned configs will change on the next search)
+        prune: dict[str, list[int]] = collections.defaultdict(lambda: [0, 0])
+        for family, shape, cand in contracts.default_space(quick=args.quick):
+            prune[family][0] += 1
+            if contracts.check_autotune_candidate(
+                family, shape, cand, budget=args.vmem_budget
+            ) is not None:
+                prune[family][1] += 1
+        s["autotune_prune"] = {
+            fam: {"candidates": c, "pruned": pr}
+            for fam, (c, pr) in sorted(prune.items())
+        }
+        stats["contracts"] = s
+        print(f"[analysis] contracts: {s['instances']} instances over "
+              f"{len(s['families'])} families, "
+              f"{len(v)} violation(s)")
+        for fam, d in s["autotune_prune"].items():
+            if d["pruned"]:
+                print(f"[analysis]   prune {fam}: {d['pruned']}/"
+                      f"{d['candidates']} candidates over budget")
+
+    if run_all or args.bloat:
+        from repro.analysis import bloat
+
+        v, s = bloat.check_all(alpha=args.alpha)
+        violations += v
+        stats["bloat"] = s
+        print(f"[analysis] bloat: {len(s['rungs'])} rungs + "
+              f"{len(s['chains'])} chains (alpha={s['alpha']:g}), "
+              f"{len(v)} violation(s)")
+
+    if run_all or args.lint:
+        from repro.analysis import lint
+
+        v, s = lint.check_all(root=args.lint_root)
+        violations += v
+        stats["lint"] = s
+        print(f"[analysis] lint: {s['files']} files against "
+              f"{s['sites']} registered sites, {len(v)} violation(s)")
+
+    report = {
+        "ok": not violations,
+        "violations": [
+            {"kind": v.kind, "family": v.family, "key": v.key,
+             "detail": v.detail}
+            for v in violations
+        ],
+        "stats": stats,
+        "elapsed_s": round(time.time() - t0, 2),
+    }
+    with open(args.json, "w") as f:
+        json.dump(report, f, indent=2)
+
+    if violations:
+        print(f"\n[analysis] FAIL — {len(violations)} violation(s) "
+              f"(report: {args.json}):", file=sys.stderr)
+        for v in violations:
+            print(f"  {v.line()}", file=sys.stderr)
+        return 1
+    print(f"[analysis] OK — no violations ({report['elapsed_s']}s, "
+          f"report: {args.json})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

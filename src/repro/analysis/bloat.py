@@ -1,0 +1,322 @@
+"""Memory-bloat linter: compiled-HLO intermediates + dequant-chain count.
+
+Two trace-time passes over the *pure-JAX* dispatch rungs (the Pallas
+rungs are covered structurally by :mod:`repro.analysis.contracts`; their
+VMEM working set is the contract, not the HLO):
+
+  * **bloat** — jit-lower each registered rung at a representative shape,
+    parse the optimized HLO with :mod:`repro.launch.hlo_flops`, and flag
+    any materialized intermediate larger than ``alpha`` × the function's
+    natural size (max of its largest input and its output). This is the
+    im2col detector: a sliding/XLA conv's intermediates are all
+    input-or-output sized, while an im2col rung materializes the K×-bloated
+    column matrix — exactly the HBM traffic the paper's kernels exist to
+    avoid (PAPER.md §2). The shipped rungs must be clean; the im2col
+    baselines are registered as *known-bloated* and the linter must flag
+    them (an inverted self-test: if the α-rule stops firing on the known
+    offender, the linter has lost its teeth).
+  * **chains** — the requant-chain contract (DESIGN.md §8) promoted from a
+    runtime assertion to trace time: for every declared chain in
+    ``quant.apply.CHAINS``, abstractly evaluate (``jax.eval_shape`` — no
+    FLOPs, no real activations) a quantized conv stack wired with the
+    chain's out_scales and count ``note_dequant`` sites. Exactly one — the
+    tail — may dequantize; an interior f32 round trip is a violation. The
+    CHAINS graph itself is also checked (no cycles, no self-loops).
+
+Intermediates are counted only where they materialize: the walk recurses
+into called computations and while bodies but **not** fusion bodies —
+everything inside a fusion is virtual, only the fusion's result exists.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable, Iterable
+
+import numpy as np
+
+from repro.analysis.contracts import Violation
+from repro.launch.hlo_flops import Computation, _shape_bytes, parse_hlo
+
+#: flag intermediates larger than alpha * max(largest input, output)
+DEFAULT_BLOAT_ALPHA = 2.0
+
+#: ops whose "result" is not a fresh buffer
+_NOT_MATERIALIZED = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all",
+}
+
+_SUBCOMP_ATTRS = (
+    "calls=", "body=", "condition=", "branch_computations=",
+    "true_computation=", "false_computation=",
+)
+
+
+def bloat_alpha() -> float:
+    """Configured bloat threshold (``REPRO_BLOAT_ALPHA`` overrides)."""
+    return float(os.environ.get("REPRO_BLOAT_ALPHA", DEFAULT_BLOAT_ALPHA))
+
+
+# ---------------------------------------------------------------------------
+# HLO walk
+# ---------------------------------------------------------------------------
+
+def _called_comps(attrs: str) -> list[str]:
+    import re
+
+    names: list[str] = []
+    for pat in (
+        r"calls=%?([\w\.\-]+)", r"body=%?([\w\.\-]+)",
+        r"condition=%?([\w\.\-]+)", r"to_apply=%?([\w\.\-]+)",
+        r"true_computation=%?([\w\.\-]+)", r"false_computation=%?([\w\.\-]+)",
+    ):
+        names += re.findall(pat, attrs)
+    m = __import__("re").search(r"branch_computations=\{([^}]*)\}", attrs)
+    if m:
+        names += [s.strip().lstrip("%") for s in m.group(1).split(",")]
+    return names
+
+
+def _materialized_instrs(
+    comps: dict[str, Computation], root: str
+) -> Iterable:
+    """Every instruction that owns a real buffer, starting at computation
+    ``root``: recurse through call/while/conditional, skip fusion bodies
+    (a fusion materializes only its own result) and reduce/scatter
+    appliers (scalar lambdas)."""
+    seen: set[str] = set()
+    stack = [root]
+    while stack:
+        name = stack.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            yield ins
+            if ins.op in ("fusion", "reduce", "reduce-window", "scatter",
+                          "sort", "map"):
+                continue  # sub-computations of these never materialize
+            stack.extend(_called_comps(ins.attrs))
+
+
+def check_hlo_text(
+    text: str, *, family: str, key: str, alpha: float | None = None
+) -> Violation | None:
+    """One ``bloat`` violation (the worst offender) if any materialized
+    intermediate exceeds ``alpha`` × max(largest input, output)."""
+    alpha = bloat_alpha() if alpha is None else alpha
+    comps, entry = parse_hlo(text)
+    ecomp = comps.get(entry)
+    if ecomp is None or not ecomp.instrs:
+        return None
+    param_bytes = max(
+        (_shape_bytes(i.sig) for i in ecomp.instrs if i.op == "parameter"),
+        default=0,
+    )
+    root_bytes = _shape_bytes(ecomp.instrs[-1].sig)  # last instr is ROOT
+    baseline = max(param_bytes, root_bytes)
+    if baseline == 0:
+        return None
+    worst = None  # (bytes, op, sig)
+    n_over = 0
+    for ins in _materialized_instrs(comps, entry):
+        if ins.op in _NOT_MATERIALIZED:
+            continue
+        nb = _shape_bytes(ins.sig)
+        if nb > alpha * baseline:
+            n_over += 1
+            if worst is None or nb > worst[0]:
+                worst = (nb, ins.op, ins.sig)
+    if worst is None:
+        return None
+    nb, op, sig = worst
+    return Violation(
+        "bloat", family, key,
+        f"{op} materializes {sig} = {nb} B, {nb / baseline:.1f}x the "
+        f"rung's natural size {baseline} B (> alpha={alpha:g}); "
+        f"{n_over} oversized intermediate(s) total",
+    )
+
+
+def check_fn(
+    fn: Callable, args: tuple, *, family: str, key: str,
+    alpha: float | None = None,
+) -> Violation | None:
+    """Lower ``fn`` at abstract ``args`` (ShapeDtypeStructs — nothing
+    runs), compile, and α-check the optimized HLO."""
+    import jax
+
+    text = jax.jit(fn).lower(*args).compile().as_text()
+    return check_hlo_text(text, family=family, key=key, alpha=alpha)
+
+
+# ---------------------------------------------------------------------------
+# rung registry
+# ---------------------------------------------------------------------------
+# Representative shapes: small enough to compile in milliseconds, K large
+# enough that an im2col column matrix (K× the input) clears any sane α.
+
+def _spec(shape, dtype="float32"):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _conv1d_rung(backend: str):
+    from repro.core import conv as C
+
+    fn = functools.partial(C.conv1d, backend=backend)
+    return fn, (_spec((1, 512, 8)), _spec((31, 8, 8)))
+
+
+def _conv2d_rung(backend: str):
+    from repro.core import conv as C
+
+    fn = functools.partial(C.conv2d, backend=backend)
+    return fn, (_spec((1, 48, 48, 8)), _spec((9, 9, 8, 8)))
+
+
+def _conv1d_q_rung():
+    from repro.quant import qconv
+
+    w = qconv.quantize_weight(
+        np.linspace(-1.0, 1.0, 31 * 8 * 8, dtype=np.float32).reshape(31, 8, 8)
+    )
+    fn = lambda x: qconv.conv1d_q(x, w, None, mode="w8a8", accumulate="fast")  # noqa: E731
+    return fn, (_spec((1, 512, 8)),)
+
+
+#: rungs the dispatch layer actually ships — must be bloat-free
+GATE_RUNGS: dict[str, Callable[[], tuple]] = {
+    "conv1d.sliding": lambda: _conv1d_rung("sliding"),
+    "conv1d.xla": lambda: _conv1d_rung("xla"),
+    "conv2d.sliding": lambda: _conv2d_rung("sliding"),
+    "conv2d.xla": lambda: _conv2d_rung("xla"),
+    "conv1d_q.w8a8": _conv1d_q_rung,
+}
+
+#: the paper's im2col baselines — the linter must FLAG these (self-test)
+KNOWN_BLOATED: dict[str, Callable[[], tuple]] = {
+    "conv1d.im2col_gemm": lambda: _conv1d_rung("im2col_gemm"),
+    "conv2d.im2col_gemm": lambda: _conv2d_rung("im2col_gemm"),
+}
+
+
+def check_bloat(*, alpha: float | None = None) -> tuple[list[Violation], dict]:
+    """α-check every gate rung (clean required) and every known-bloated
+    baseline (a *miss* there is itself a violation — the linter must keep
+    firing on the rung it was built to catch)."""
+    violations: list[Violation] = []
+    checked = []
+    for name, make in GATE_RUNGS.items():
+        fn, args = make()
+        v = check_fn(fn, args, family="bloat", key=name, alpha=alpha)
+        if v is not None:
+            violations.append(v)
+        checked.append(name)
+    for name, make in KNOWN_BLOATED.items():
+        fn, args = make()
+        v = check_fn(fn, args, family="bloat", key=name, alpha=alpha)
+        if v is None:
+            violations.append(Violation(
+                "bloat", "bloat", name,
+                "known-bloated im2col baseline was NOT flagged — the "
+                "alpha-rule lost its teeth (threshold too high or the HLO "
+                "walk regressed)",
+            ))
+        checked.append(name)
+    return violations, {"rungs": checked}
+
+
+# ---------------------------------------------------------------------------
+# dequant-chain contract, at trace time
+# ---------------------------------------------------------------------------
+
+def _chain_paths(chains: dict[str, str]) -> tuple[list[list[str]], list[str]]:
+    """Maximal producer→…→tail paths from the CHAINS dict, plus error
+    strings for structural problems (cycles)."""
+    errors: list[str] = []
+    heads = [s for s in chains if s not in chains.values()]
+    paths: list[list[str]] = []
+    for head in sorted(heads):
+        path, site = [head], head
+        while site in chains:
+            site = chains[site]
+            if site in path:
+                errors.append(f"cycle through {site!r}: {' -> '.join(path)}")
+                break
+            path.append(site)
+        else:
+            paths.append(path)
+    if not heads and chains:
+        errors.append(f"no chain heads: every site is a consumer ({chains})")
+    return paths, errors
+
+
+def check_chains() -> tuple[list[Violation], dict]:
+    """Trace a quantized conv stack for every declared chain and count
+    dequant sites abstractly — exactly one (the tail) is the contract."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import layers
+    from repro.quant import apply as qapply
+    from repro.quant import calibrate, qconv
+
+    violations: list[Violation] = []
+    paths, errors = _chain_paths(qapply.CHAINS)
+    for err in errors:
+        violations.append(Violation("chain_dequant", "chains", "CHAINS", err))
+
+    C, K, L = 4, 3, 32
+    for path in paths:
+        key = " -> ".join(path)
+        # wire the stack the way quantize_params does: every site w8a8
+        # with a calibrated x_scale; each interior site's out_scale is its
+        # consumer's x_scale, the tail dequantizes
+        scales = {s: jnp.float32(0.05 * (i + 1)) for i, s in enumerate(path)}
+        weights = []
+        wbase = np.linspace(-1.0, 1.0, K * C * C, dtype=np.float32)
+        for i, site in enumerate(path):
+            out_scale = scales[path[i + 1]] if i + 1 < len(path) else None
+            weights.append(qconv.quantize_weight(
+                wbase.reshape(K, C, C), x_scale=scales[site],
+                out_scale=out_scale,
+            ))
+
+        def stack(x, weights=weights, path=path):
+            for site, qw in zip(path, weights):
+                x = layers.conv1d_bias_act(
+                    x, qw, None, padding="SAME", backend="sliding",
+                    precision="w8a8", site=site,
+                )
+            return x
+
+        with calibrate.counting_dequants() as deq:
+            try:
+                jax.eval_shape(stack, jax.ShapeDtypeStruct((1, L, C), "float32"))
+            except Exception as e:  # noqa: BLE001 — report, don't crash the pass
+                violations.append(Violation(
+                    "chain_dequant", "chains", key,
+                    f"chain stack failed to trace: {type(e).__name__}: {e}",
+                ))
+                continue
+        if deq != [path[-1]]:
+            violations.append(Violation(
+                "chain_dequant", "chains", key,
+                f"expected exactly one dequant at the tail "
+                f"[{path[-1]!r}], traced {deq!r} — an interior site is "
+                f"materializing f32 inside the int8 chain",
+            ))
+    return violations, {"chains": [" -> ".join(p) for p in paths]}
+
+
+def check_all(*, alpha: float | None = None) -> tuple[list[Violation], dict]:
+    """Both bloat passes: HLO α-rule + dequant chains."""
+    v1, s1 = check_bloat(alpha=alpha)
+    v2, s2 = check_chains()
+    return v1 + v2, {**s1, **s2, "alpha": bloat_alpha() if alpha is None else alpha}

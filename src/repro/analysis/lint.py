@@ -1,0 +1,195 @@
+"""Convention lint: AST pass over ``src/`` for the repo's frozen registries.
+
+Three rules, each backed by a registry that already exists at runtime —
+the lint only moves the failure from "first hit in production" to "CI":
+
+  * **lint_reason** — the ``reason`` argument of ``HEALTH.record`` must be
+    a member of the frozen ``health.Reason`` vocabulary when written as a
+    string literal, and must never be an f-string (open-ended reasons
+    defeat the closed vocabulary CI greps against — canonicalize through
+    ``health.canon_reason`` instead). Non-literal reasons (variables,
+    calls) are allowed: ``Health.record`` validates them at runtime.
+  * **lint_site** — any literal ``site=`` string (at ``HEALTH.record``,
+    ``faults.inject``, the ``conv*_bias_act`` entry points, …) must name a
+    site the rest of the system knows: a dispatch-ladder site, a
+    calibration site from ``quant.apply`` (``CHAINS`` / ``SITE_FOR_KEY``),
+    a static subsystem site, or the shape-derived ``calibrate.conv_site``
+    pattern. A typo'd site silently forks the health/calibration
+    namespace — events recorded under it match no CI assertion.
+  * **lint_raw_indexing** — kernel files (``kernels/*.py``) must not call
+    ``pl.load`` / ``pl.store``: every memory access in this repo's kernels
+    goes through a declared BlockSpec so the contract checker
+    (:mod:`repro.analysis.contracts`) can prove halo bounds. Raw
+    element-offset loads are exactly the accesses it cannot see.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+
+from repro.analysis.contracts import Violation
+from repro.health import Reason
+
+#: subsystem sites with no registry of their own
+STATIC_SITES = {"autotune", "ckpt", "serve/generate", "serve/decode", "train"}
+
+#: dispatch-ladder sites (``ops._ladder`` callers); fault injection
+#: matches hierarchically, so the bare family names are valid too
+DISPATCH_SITES = {
+    "conv1d", "conv2d", "conv1d_depthwise", "attention_decode", "pool1d",
+    "conv1d.w8a8", "conv1d.w8a16",
+    "conv2d.w8a8", "conv2d.w8a16",
+    "conv1d_depthwise.w8a8", "conv1d_depthwise.w8a16",
+}
+
+#: shape-derived default sites (``calibrate.conv_site``)
+CONV_SITE_RE = re.compile(r"^[a-z0-9_]+\|Cin\d+\|Cout\d+\|K[\dx]+$")
+
+_REASON_VALUES = {r.value for r in Reason}
+
+
+def known_sites() -> set[str]:
+    """The full literal-site universe: static + dispatch + calibration."""
+    from repro.quant import apply as qapply
+
+    return (
+        STATIC_SITES | DISPATCH_SITES
+        | set(qapply.CHAINS) | set(qapply.CHAINS.values())
+        | set(qapply.SITE_FOR_KEY.values())
+    )
+
+
+def _is_health_record(call: ast.Call) -> bool:
+    f = call.func
+    return (
+        isinstance(f, ast.Attribute) and f.attr == "record"
+        and (
+            (isinstance(f.value, ast.Name) and f.value.id == "HEALTH")
+            or (isinstance(f.value, ast.Attribute) and f.value.attr == "HEALTH")
+        )
+    )
+
+
+def _str_const(node) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, rel: str, *, kernel_file: bool, sites: set[str]):
+        self.rel = rel
+        self.kernel_file = kernel_file
+        self.sites = sites
+        self.violations: list[Violation] = []
+
+    def _flag(self, kind: str, node: ast.AST, detail: str) -> None:
+        self.violations.append(Violation(
+            kind, "lint", f"{self.rel}:{node.lineno}", detail
+        ))
+
+    def _check_site_literal(self, node: ast.AST, site: str) -> None:
+        if site in self.sites or CONV_SITE_RE.match(site):
+            return
+        self._flag(
+            "lint_site", node,
+            f"site {site!r} is not in the site registry (dispatch sites, "
+            f"quant.apply calibration sites, static subsystem sites, or "
+            f"the calibrate.conv_site pattern) — a typo'd site forks the "
+            f"health/calibration namespace",
+        )
+
+    def visit_Call(self, call: ast.Call) -> None:
+        self._lint_record(call)
+        for kw in call.keywords:
+            if kw.arg == "site":
+                s = _str_const(kw.value)
+                if s is not None:
+                    self._check_site_literal(kw.value, s)
+        if self.kernel_file and isinstance(call.func, ast.Attribute):
+            f = call.func
+            if (
+                f.attr in ("load", "store")
+                and isinstance(f.value, ast.Name) and f.value.id == "pl"
+            ):
+                self._flag(
+                    "lint_raw_indexing", call,
+                    f"pl.{f.attr}(...) bypasses the declared BlockSpecs — "
+                    f"the contract checker cannot prove halo bounds for "
+                    f"raw element offsets; express the access as an "
+                    f"index-mapped block instead",
+                )
+        self.generic_visit(call)
+
+    def _lint_record(self, call: ast.Call) -> None:
+        if not _is_health_record(call):
+            return None
+        site_node = call.args[0] if call.args else None
+        for kw in call.keywords:
+            if kw.arg == "site":
+                site_node = kw.value
+        if site_node is not None:
+            s = _str_const(site_node)
+            if s is not None:
+                self._check_site_literal(site_node, s)
+        reason_node = call.args[1] if len(call.args) > 1 else None
+        for kw in call.keywords:
+            if kw.arg == "reason":
+                reason_node = kw.value
+        if reason_node is None:
+            return None
+        if isinstance(reason_node, ast.JoinedStr):
+            self._flag(
+                "lint_reason", reason_node,
+                "f-string reason at HEALTH.record — open-ended reasons "
+                "defeat the frozen health.Reason vocabulary; canonicalize "
+                "via health.canon_reason and keep the dynamic part in "
+                "detail=",
+            )
+            return None
+        r = _str_const(reason_node)
+        if r is not None and r not in _REASON_VALUES:
+            self._flag(
+                "lint_reason", reason_node,
+                f"reason {r!r} is not in the frozen health.Reason "
+                f"vocabulary — add a member there first (the runtime "
+                f"check in Health.record will reject it too)",
+            )
+        return None
+
+
+def lint_file(
+    path: pathlib.Path, *, rel: str | None = None,
+    sites: set[str] | None = None,
+) -> list[Violation]:
+    rel = rel or str(path)
+    sites = known_sites() if sites is None else sites
+    try:
+        tree = ast.parse(path.read_text(), filename=rel)
+    except SyntaxError as e:
+        return [Violation("lint_syntax", "lint", rel, str(e))]
+    linter = _Linter(
+        rel, kernel_file="/kernels/" in path.as_posix(), sites=sites
+    )
+    linter.visit(tree)
+    return linter.violations
+
+
+def check_all(root: str | None = None) -> tuple[list[Violation], dict]:
+    """Lint every ``.py`` under ``root`` (default: the ``repro`` package)."""
+    if root is None:
+        base = pathlib.Path(__file__).resolve().parent.parent
+    else:
+        base = pathlib.Path(root)
+    sites = known_sites()
+    violations: list[Violation] = []
+    n = 0
+    for path in sorted(base.rglob("*.py")):
+        if "__pycache__" in path.parts:
+            continue
+        n += 1
+        violations.extend(
+            lint_file(path, rel=str(path.relative_to(base.parent)), sites=sites)
+        )
+    return violations, {"files": n, "sites": len(sites)}

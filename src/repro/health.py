@@ -8,6 +8,13 @@ lands here with a machine-checkable reason code. Serving prints the
 registry at exit and CI asserts the *expected* events appear (and, in
 clean runs, that none do).
 
+Reason codes are a closed vocabulary (:class:`Reason`, DESIGN.md §11):
+``record`` rejects anything outside it, and the ``repro.analysis`` lint
+pass enforces the same at every call site, so a typo'd reason fails fast
+instead of silently forking the event taxonomy that CI greps against.
+Exception-derived reasons go through :func:`canon_reason`, which maps a
+fault kind or exception class onto the vocabulary.
+
 Two kinds of state:
 
   * **events** — append-only ``HealthEvent`` log. ``record`` deduplicates
@@ -25,8 +32,79 @@ cycles. ``repro.kernels.ops`` re-exports the singleton as ``ops.HEALTH``.
 from __future__ import annotations
 
 import dataclasses
+import enum
 import sys
 import threading
+
+
+class Reason(str, enum.Enum):
+    """Frozen vocabulary of health reason codes.
+
+    Grouped by producer; a new degradation class means a new member HERE
+    first (the analysis lint flags literal reasons outside this enum, and
+    ``Health.record`` raises on them at runtime). Members are str-valued so
+    existing ``ev.reason == "pallas_compile"`` comparisons keep working.
+    """
+
+    # fault-injection kinds (repro.faults) — these surface as ``e.kind``
+    # on FaultError and flow into ladder/retry reasons verbatim
+    PALLAS_COMPILE = "pallas_compile"
+    PALLAS_RUNTIME = "pallas_runtime"
+    JAX_RUNTIME = "jax_runtime"
+    NAN_ACTIVATIONS = "nan_activations"
+    QUANT_SCALE_ZERO = "quant_scale_zero"
+    QUANT_SCALE_NAN = "quant_scale_nan"
+    AUTOTUNE_CORRUPT = "autotune_corrupt"
+    CKPT_CORRUPT = "ckpt_corrupt"
+    CKPT_WRITE_STALL = "ckpt_write_stall"
+    HEARTBEAT_STALE = "heartbeat_stale"
+    SLOW_STEP = "slow_step"
+    # degradation-ladder rung failures without a fault kind (ops._ladder)
+    PALLAS_ERROR = "pallas_error"
+    JAX_ERROR = "jax_error"
+    REF_ERROR = "ref_error"
+    # quant dispatch + calibration
+    QUANT_SLOWER = "quant_slower"
+    # autotune cache quarantine
+    CACHE_CORRUPT = "cache_corrupt"
+    CACHE_SCHEMA_MISMATCH = "cache_schema_mismatch"
+    # checkpointing
+    CKPT_INVALID = "ckpt_invalid"
+    # serving
+    DEADLINE_EXCEEDED = "deadline_exceeded"
+    STRAGGLER = "straggler"
+    NAN_LOGITS = "nan_logits"
+    # training restarts
+    RESTARTS_EXHAUSTED = "restarts_exhausted"
+    STEP_CRASH = "step_crash"
+    # canonical catch-all for exceptions with no mapped kind — the class
+    # name goes in ``detail``, not the reason (an open-ended reason set
+    # would defeat the frozen vocabulary)
+    RUNTIME_ERROR = "runtime_error"
+
+
+def canon_reason(exc: BaseException, default: str | None = None) -> str:
+    """Canonical :class:`Reason` value for an exception.
+
+    Order: a valid ``exc.kind`` (fault-injected errors carry their kind),
+    then ``FloatingPointError`` → ``nan_logits`` (the serve nan guard),
+    then ``default`` if it names a valid reason, else ``runtime_error``
+    with the class name left to the caller's ``detail``.
+    """
+    kind = getattr(exc, "kind", None)
+    if kind is not None:
+        try:
+            return Reason(kind).value
+        except ValueError:
+            pass
+    if isinstance(exc, FloatingPointError):
+        return Reason.NAN_LOGITS.value
+    if default is not None:
+        try:
+            return Reason(default).value
+        except ValueError:
+            pass
+    return Reason.RUNTIME_ERROR.value
 
 
 @dataclasses.dataclass
@@ -36,7 +114,8 @@ class HealthEvent:
     ``site``   — where: a dispatch site ("conv1d", "conv1d.w8a8"), a
                  calibration site ("whisper/conv1"), or a subsystem
                  ("autotune", "ckpt", "serve/generate").
-    ``reason`` — machine-checkable code: "pallas_compile", "pallas_error",
+    ``reason`` — machine-checkable code from the frozen :class:`Reason`
+                 vocabulary: "pallas_compile", "pallas_error",
                  "quant_scale_zero", "quant_scale_nan", "quant_slower",
                  "cache_corrupt", "ckpt_invalid", "nan_logits",
                  "deadline_exceeded", "straggler", …
@@ -74,7 +153,17 @@ class Health:
         self, site: str, reason: str, action: str, detail: str = ""
     ) -> HealthEvent:
         """Log one event; duplicate (site, reason, action) bumps count.
-        The first occurrence prints one ``[health]`` line to stderr."""
+        The first occurrence prints one ``[health]`` line to stderr.
+        ``reason`` must come from the frozen :class:`Reason` vocabulary —
+        an unknown code raises (route exceptions via :func:`canon_reason`).
+        """
+        try:
+            reason = Reason(reason).value
+        except ValueError:
+            raise ValueError(
+                f"unknown health reason {reason!r} at site {site!r}: "
+                f"add it to health.Reason or canonicalize via canon_reason"
+            ) from None
         with self._lock:
             for ev in self.events:
                 if (ev.site, ev.reason, ev.action) == (site, reason, action):
@@ -118,6 +207,68 @@ class Health:
     def summary(self) -> list[str]:
         """One formatted line per distinct event (serve prints these)."""
         return [ev.line() for ev in self.events]
+
+
+class DispatchLog:
+    """Dedup-counted dispatch log: ``key → (last value, hit count)``.
+
+    The dispatch sites in ``kernels.ops`` note which impl served each shape
+    key (``ATTN_DECODE_DISPATCH``) or why a shape fell back
+    (``_QUANT_FALLBACKS``). In a long serving run the same key is hit once
+    per decode step — like ``Health.record``, repeats must bump a counter,
+    not grow state. Storage is bounded by the number of DISTINCT keys, and
+    ``count(key)`` exposes how often each was served. The mapping surface
+    (``in`` / ``[]`` / ``get`` / ``items`` / ``clear`` / truthiness)
+    matches the plain dict these logs used to be.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._entries: dict[str, list] = {}  # key -> [value, count]
+
+    def __setitem__(self, key: str, value) -> None:
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                self._entries[key] = [value, 1]
+            else:
+                ent[0] = value  # e.g. a demoted rung's replacement impl
+                ent[1] += 1
+
+    def __getitem__(self, key: str):
+        return self._entries[key][0]
+
+    def get(self, key: str, default=None):
+        ent = self._entries.get(key)
+        return default if ent is None else ent[0]
+
+    def count(self, key: str) -> int:
+        ent = self._entries.get(key)
+        return 0 if ent is None else ent[1]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __iter__(self):
+        return iter(list(self._entries))
+
+    def keys(self):
+        return list(self._entries)
+
+    def items(self) -> list[tuple[str, object]]:
+        with self._lock:
+            return [(k, ent[0]) for k, ent in self._entries.items()]
+
+    def counts(self) -> dict[str, int]:
+        with self._lock:
+            return {k: ent[1] for k, ent in self._entries.items()}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
 
 
 #: The process-global registry (re-exported as ``repro.kernels.ops.HEALTH``).

@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import sys
 import time
 from pathlib import Path
 from typing import Any, Callable, Iterable
@@ -210,10 +211,29 @@ class Result:
     best: dict[str, Any]
     default_us: float
     best_us: float
+    pruned: int = 0  # candidates skipped on a contract verdict, untimed
 
     @property
     def speedup(self) -> float:
         return self.default_us / self.best_us if self.best_us else 1.0
+
+
+def _contract_checker(family: str, shape: dict[str, Any]):
+    """Trace-time contract verdicts for the search (``repro.analysis``):
+    a candidate tile that provably exceeds the VMEM budget or indexes out
+    of bounds is pruned before bench time is spent on it. The default
+    config is never pruned — it is what untuned dispatch runs, so it must
+    always carry a timing. Checker unavailable → no pruning (the search
+    must degrade to measuring, never crash)."""
+
+    def check(cand: dict[str, Any]):
+        try:
+            from repro.analysis import contracts
+        except Exception:  # noqa: BLE001 — analysis layer optional here
+            return None
+        return contracts.check_autotune_candidate(family, shape, cand)
+
+    return check
 
 
 def _search(
@@ -221,13 +241,25 @@ def _search(
     run: Callable[[dict[str, Any]], jax.Array],
     candidates: Iterable[dict[str, Any]],
     default: dict[str, Any],
+    contract: Callable[[dict[str, Any]], Any] | None = None,
 ) -> Result:
     """Time every candidate, persist the winner, return the result."""
     default_t = _time_fn(lambda: run(default))
     best_cfg, best_t = dict(default), default_t
+    pruned = 0
     for cand in candidates:
         if cand == default:
             continue
+        if contract is not None:
+            verdict = contract(cand)
+            if verdict is not None:
+                pruned += 1
+                print(
+                    f"[autotune] pruned {key} cand={cand}: "
+                    f"{verdict.kind} ({verdict.detail})",
+                    file=sys.stderr,
+                )
+                continue
         try:
             t = _time_fn(lambda: run(cand))
         except Exception:  # candidate invalid for this shape — skip
@@ -237,7 +269,7 @@ def _search(
     best_cfg["us"] = round(best_t * 1e6, 2)
     best_cfg["default_us"] = round(default_t * 1e6, 2)
     record(key, best_cfg)
-    return Result(key, best_cfg, default_t * 1e6, best_t * 1e6)
+    return Result(key, best_cfg, default_t * 1e6, best_t * 1e6, pruned)
 
 
 def autotune_conv1d(
@@ -312,7 +344,12 @@ def autotune_conv1d(
         "tile_l": min(DEFAULT_TILE_L, out_len), "cin_block": 0,
         "cout_block": 0, "regime": regime_for(K),
     }
-    return _search(key, run, cands, default)
+    contract = _contract_checker("conv1d", dict(
+        B=B, L=L, Cin=Cin, Cout=Cout, K=K, stride=stride,
+        precision=precision,
+        dtype=x.dtype.name if precision == "fp" else "float32",
+    ))
+    return _search(key, run, cands, default, contract=contract)
 
 
 def autotune_conv2d(
@@ -360,7 +397,12 @@ def autotune_conv2d(
         "tile_h": min(DEFAULT_TILE_H, oh), "tile_w": min(DEFAULT_TILE_W, ow),
         "cin_block": 0, "cout_block": 0, "regime": regime,
     }
-    return _search(key, run, cands, default)
+    contract = _contract_checker("conv2d", dict(
+        B=B, H=H, W=W, Cin=Cin, Cout=Cout, kh=kh, kw=kw, stride=stride,
+        precision=precision,
+        dtype=x.dtype.name if precision == "fp" else "float32",
+    ))
+    return _search(key, run, cands, default, contract=contract)
 
 
 def autotune_conv1d_depthwise(
@@ -397,7 +439,11 @@ def autotune_conv1d_depthwise(
         for cb in _blocks_for(C)
     ]
     default = {"tile_l": min(DEFAULT_TILE_L, out_len), "c_block": 0}
-    return _search(key, run, cands, default)
+    contract = _contract_checker("conv1d_depthwise", dict(
+        B=B, L=L, C=C, K=K, stride=stride, precision=precision,
+        dtype="float32",
+    ))
+    return _search(key, run, cands, default, contract=contract)
 
 
 def autotune_attention_decode(
@@ -464,7 +510,10 @@ def autotune_attention_decode(
         S if resolved_impl != "pallas" else min(attn_dec.DEFAULT_BLOCK_S, S)
     )
     default = {"block_s": default_bs, "h_block": 1}
-    return _search(key, run, cands, default)
+    contract = _contract_checker("attention_decode", dict(
+        B=B, S=S, KV=KV, G=H // KV, D=D, kind=kind,
+    ))
+    return _search(key, run, cands, default, contract=contract)
 
 
 def autotune_pool1d(

@@ -47,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import faults
+from repro import faults, health
 from repro.core import conv as core_conv
 from repro.health import HEALTH
 from repro.kernels import (
@@ -98,7 +98,10 @@ def _ladder(site: str, rungs):
         except Exception as e:  # noqa: BLE001 — any failure → next rung
             if i + 1 == len(live):
                 raise
-            reason = getattr(e, "kind", None) or f"{name}_error"
+            # canonicalize onto the frozen health.Reason vocabulary: a
+            # fault kind passes through, anything else becomes the rung's
+            # own error code with the exception repr in detail
+            reason = health.canon_reason(e, default=f"{name}_error")
             HEALTH.record(
                 site, reason, f"demote:{name}->{live[i + 1][0]}",
                 detail=repr(e)[:200],
@@ -282,8 +285,10 @@ def _check_quant_dispatch(precision, backend, dilation):
 
 
 # shape key → reason for shapes where the quant path measurably loses to the
-# float path and dispatch fell back (logged once per shape; inspectable)
-_QUANT_FALLBACKS: dict[str, str] = {}
+# float path and dispatch fell back (logged once per shape; inspectable).
+# DispatchLog dedup-counts repeats per key — a long serving run hitting the
+# same fallback every step bumps a counter instead of growing state
+_QUANT_FALLBACKS = health.DispatchLog()
 
 
 def _quant_fallback_reason(x, w, stride, precision) -> str | None:
@@ -308,8 +313,9 @@ def _quant_fallback_reason(x, w, stride, precision) -> str | None:
         f"tuned {precision} path {us_q:.0f}us > {x.dtype.name} "
         f"{us_f:.0f}us for {kq}; serving the float path"
     )
-    if kq not in _QUANT_FALLBACKS:
-        _QUANT_FALLBACKS[kq] = reason
+    first = kq not in _QUANT_FALLBACKS
+    _QUANT_FALLBACKS[kq] = reason  # repeat hits bump the per-key count
+    if first:
         print(f"[quant] fallback: {reason}", file=sys.stderr)
         HEALTH.record(
             f"conv1d.{precision}", "quant_slower", "fallback:fp",
@@ -917,7 +923,9 @@ def conv2d(
 # autotune shape key → impl that served it ("pallas" | "jax" | "ref"),
 # recorded at trace time. Serving prints these lines so CI can assert the
 # fused path actually dispatched for the decode loop (DESIGN.md §9).
-ATTN_DECODE_DISPATCH: dict[str, str] = {}
+# DispatchLog dedup-counts per key (bounded by distinct cache shapes, not
+# by decode steps) and ``.count(key)`` says how often each was served.
+ATTN_DECODE_DISPATCH = health.DispatchLog()
 
 
 def attention_decode(

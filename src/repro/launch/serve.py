@@ -50,7 +50,7 @@ from repro import faults
 from repro.configs import get_config, smoke_config
 from repro.distributed.ft import RestartPolicy, StepWatchdog, beat
 from repro.distributed.sharding import ParamDef, Runtime
-from repro.health import HEALTH
+from repro.health import HEALTH, canon_reason
 from repro.models import build_model
 
 
@@ -302,10 +302,10 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
                 run_dir=run_dir, host_id=host_id, watchdog=watchdog,
             )
         except Exception as e:  # noqa: BLE001 — bounded retry, then raise
-            reason = getattr(e, "kind", None) or (
-                "nan_logits" if isinstance(e, FloatingPointError)
-                else type(e).__name__
-            )
+            # frozen-vocabulary reason (health.Reason): fault kind →
+            # verbatim, FloatingPointError → nan_logits, anything else →
+            # runtime_error with the class name kept in detail
+            reason = canon_reason(e)
             delay = policy.next_backoff()
             if delay is None:
                 HEALTH.record(
@@ -412,8 +412,10 @@ def main():
 
     for akey, impl in sorted(kops.ATTN_DECODE_DISPATCH.items()):
         # one line per attention-read shape: CI asserts the fused kernel
-        # actually dispatched (the autotune key names the cache shape)
-        print(f"[serve] attn-decode: impl={impl} key={akey}")
+        # actually dispatched (the autotune key names the cache shape);
+        # the dedup-counted log stays bounded however long the run was
+        print(f"[serve] attn-decode: impl={impl} key={akey} "
+              f"calls={kops.ATTN_DECODE_DISPATCH.count(akey)}")
     bytes_now = cache_nbytes(model.cache_defs(args.batch, cache_len),
                              cfg.param_dtype)
     fp_model = build_model(cfg.replace(kv_quant="fp"), rt)
