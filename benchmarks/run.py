@@ -419,12 +419,37 @@ def serve_rows(quick: bool) -> list[str]:
     return rows
 
 
+def _provenance() -> dict:
+    """``__meta__`` header for BENCH_conv.json: enough to know what
+    machine/toolchain produced the numbers, plus the obs registry
+    snapshot (per-autotune-key dispatch call counts + wall time) so a
+    perf regression can be traced to WHICH kernels actually ran."""
+    import jax
+
+    from repro import obs
+
+    dev = jax.devices()[0]
+    return {
+        "bench_schema": 2,
+        "jax": jax.__version__,
+        "device_platform": dev.platform,
+        "device_kind": dev.device_kind,
+        "argv": sys.argv[1:],
+        "obs": obs.REGISTRY.snapshot(),
+    }
+
+
 def main() -> None:
     quick = "--quick" in sys.argv
     tune = "--autotune" in sys.argv
     grad = "--grad" in sys.argv
     qnt = "--quant" in sys.argv
     srv = "--serve" in sys.argv
+    # arm the dispatch-layer counters (not tracing) so the provenance
+    # header records which rung served each autotune key and for how long
+    from repro import obs
+
+    obs.enable_dispatch()
     from benchmarks import fig1_speedup, fig2_throughput, roofline_report, table_conv1d
 
     rows: list[str] = []
@@ -450,8 +475,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(r)
-    # machine-readable mirror of the CSV: {name: us_per_call}
-    bench = {}
+    # machine-readable mirror of the CSV: {name: us_per_call}, plus a
+    # "__meta__" provenance header (sorts first; perf-diff tooling keys
+    # start with fig/conv/... so the header never collides with a row)
+    bench = {"__meta__": _provenance()}
     for r in rows:
         name, us, _ = r.split(",", 2)
         bench[name] = float(us)

@@ -21,6 +21,13 @@ the lint only moves the failure from "first hit in production" to "CI":
     goes through a declared BlockSpec so the contract checker
     (:mod:`repro.analysis.contracts`) can prove halo bounds. Raw
     element-offset loads are exactly the accesses it cannot see.
+  * **lint_obs_name** — literal metric names at ``.counter(`` /
+    ``.gauge(`` / ``.histogram(`` / ``.facts(`` call sites must come from
+    the frozen ``obs.names.METRICS`` vocabulary, literal span names at
+    ``span`` / ``instant`` / ``traced`` from ``obs.names.SPANS``, and
+    neither may be an f-string — dynamic names fork the telemetry
+    namespace the report CLI and CI assertions key on (the registry
+    enforces the same at runtime; the lint moves the failure to CI).
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ import re
 
 from repro.analysis.contracts import Violation
 from repro.health import Reason
+from repro.obs import names as obs_names
 
 #: subsystem sites with no registry of their own
 STATIC_SITES = {"autotune", "ckpt", "serve/generate", "serve/decode", "train"}
@@ -47,6 +55,12 @@ DISPATCH_SITES = {
 CONV_SITE_RE = re.compile(r"^[a-z0-9_]+\|Cin\d+\|Cout\d+\|K[\dx]+$")
 
 _REASON_VALUES = {r.value for r in Reason}
+
+#: registry accessor methods whose literal first arg is a metric name
+_METRIC_METHODS = {"counter", "gauge", "histogram", "facts"}
+
+#: tracing entry points whose literal first arg is a span name
+_SPAN_FUNCS = {"span", "instant", "traced"}
 
 
 def known_sites() -> set[str]:
@@ -102,6 +116,7 @@ class _Linter(ast.NodeVisitor):
 
     def visit_Call(self, call: ast.Call) -> None:
         self._lint_record(call)
+        self._lint_obs_name(call)
         for kw in call.keywords:
             if kw.arg == "site":
                 s = _str_const(kw.value)
@@ -121,6 +136,40 @@ class _Linter(ast.NodeVisitor):
                     f"index-mapped block instead",
                 )
         self.generic_visit(call)
+
+    def _lint_obs_name(self, call: ast.Call) -> None:
+        """Literal metric/span names must be in the frozen obs vocabularies
+        (``obs.names``); f-string names are flagged outright. Non-literal
+        names (variables, concatenation) pass — the registry validates
+        those at runtime."""
+        f = call.func
+        vocab = kind = None
+        if isinstance(f, ast.Attribute) and f.attr in _METRIC_METHODS:
+            vocab, kind = obs_names.METRICS, "metric"
+        elif (
+            isinstance(f, ast.Name) and f.id in _SPAN_FUNCS
+            or isinstance(f, ast.Attribute) and f.attr in _SPAN_FUNCS
+        ):
+            vocab, kind = obs_names.SPANS, "span"
+        if vocab is None or not call.args:
+            return
+        node = call.args[0]
+        if isinstance(node, ast.JoinedStr):
+            self._flag(
+                "lint_obs_name", node,
+                f"f-string {kind} name — dynamic names fork the telemetry "
+                f"namespace the obs report and CI key on; use a name from "
+                f"obs.names and put the dynamic part in a label",
+            )
+            return
+        s = _str_const(node)
+        if s is not None and s not in vocab:
+            self._flag(
+                "lint_obs_name", node,
+                f"{kind} name {s!r} is not in the frozen obs.names "
+                f"vocabulary — add it there first (the obs registry "
+                f"rejects it at runtime too)",
+            )
 
     def _lint_record(self, call: ast.Call) -> None:
         if not _is_health_record(call):

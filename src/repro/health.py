@@ -36,6 +36,14 @@ import enum
 import sys
 import threading
 
+# stdlib-only like this module — no cycle, and every health event mirrors
+# into the obs metrics/trace surfaces (DESIGN.md §12)
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
+from repro.obs.metrics import DispatchLog  # noqa: F401 — canonical home
+                                           # moved to repro.obs.metrics;
+                                           # re-exported for existing users
+
 
 class Reason(str, enum.Enum):
     """Frozen vocabulary of health reason codes.
@@ -165,14 +173,30 @@ class Health:
                 f"add it to health.Reason or canonicalize via canon_reason"
             ) from None
         with self._lock:
+            hit = None
             for ev in self.events:
                 if (ev.site, ev.reason, ev.action) == (site, reason, action):
                     ev.count += 1
-                    return ev
-            ev = HealthEvent(site, reason, action, detail)
-            self.events.append(ev)
-        print(f"[health] {ev.line()}", file=sys.stderr)
-        return ev
+                    hit = ev
+                    break
+            if hit is None:
+                hit = HealthEvent(site, reason, action, detail)
+                self.events.append(hit)
+                first = True
+            else:
+                first = False
+        # mirror into obs: a counter series per (site, reason, action) and,
+        # when tracing is armed, an instant so demotions land on the
+        # timeline next to the kernel spans they explain
+        _obs_metrics.REGISTRY.counter("health.events").inc(
+            1.0, site=site, reason=reason, action=action
+        )
+        _obs_trace.instant(
+            "health.event", site=site, reason=reason, action=action
+        )
+        if first:
+            print(f"[health] {hit.line()}", file=sys.stderr)
+        return hit
 
     def events_for(
         self, site: str | None = None, reason: str | None = None
@@ -207,68 +231,6 @@ class Health:
     def summary(self) -> list[str]:
         """One formatted line per distinct event (serve prints these)."""
         return [ev.line() for ev in self.events]
-
-
-class DispatchLog:
-    """Dedup-counted dispatch log: ``key → (last value, hit count)``.
-
-    The dispatch sites in ``kernels.ops`` note which impl served each shape
-    key (``ATTN_DECODE_DISPATCH``) or why a shape fell back
-    (``_QUANT_FALLBACKS``). In a long serving run the same key is hit once
-    per decode step — like ``Health.record``, repeats must bump a counter,
-    not grow state. Storage is bounded by the number of DISTINCT keys, and
-    ``count(key)`` exposes how often each was served. The mapping surface
-    (``in`` / ``[]`` / ``get`` / ``items`` / ``clear`` / truthiness)
-    matches the plain dict these logs used to be.
-    """
-
-    def __init__(self) -> None:
-        self._lock = threading.Lock()
-        self._entries: dict[str, list] = {}  # key -> [value, count]
-
-    def __setitem__(self, key: str, value) -> None:
-        with self._lock:
-            ent = self._entries.get(key)
-            if ent is None:
-                self._entries[key] = [value, 1]
-            else:
-                ent[0] = value  # e.g. a demoted rung's replacement impl
-                ent[1] += 1
-
-    def __getitem__(self, key: str):
-        return self._entries[key][0]
-
-    def get(self, key: str, default=None):
-        ent = self._entries.get(key)
-        return default if ent is None else ent[0]
-
-    def count(self, key: str) -> int:
-        ent = self._entries.get(key)
-        return 0 if ent is None else ent[1]
-
-    def __contains__(self, key: str) -> bool:
-        return key in self._entries
-
-    def __len__(self) -> int:
-        return len(self._entries)
-
-    def __iter__(self):
-        return iter(list(self._entries))
-
-    def keys(self):
-        return list(self._entries)
-
-    def items(self) -> list[tuple[str, object]]:
-        with self._lock:
-            return [(k, ent[0]) for k, ent in self._entries.items()]
-
-    def counts(self) -> dict[str, int]:
-        with self._lock:
-            return {k: ent[1] for k, ent in self._entries.items()}
-
-    def clear(self) -> None:
-        with self._lock:
-            self._entries.clear()
 
 
 #: The process-global registry (re-exported as ``repro.kernels.ops.HEALTH``).

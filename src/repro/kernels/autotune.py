@@ -49,6 +49,8 @@ import jax
 
 from repro import faults
 from repro.health import HEALTH
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 DEFAULT_CACHE = ".cache/autotune.json"
 
@@ -243,29 +245,46 @@ def _search(
     default: dict[str, Any],
     contract: Callable[[dict[str, Any]], Any] | None = None,
 ) -> Result:
-    """Time every candidate, persist the winner, return the result."""
-    default_t = _time_fn(lambda: run(default))
-    best_cfg, best_t = dict(default), default_t
-    pruned = 0
-    for cand in candidates:
-        if cand == default:
-            continue
-        if contract is not None:
-            verdict = contract(cand)
-            if verdict is not None:
-                pruned += 1
-                print(
-                    f"[autotune] pruned {key} cand={cand}: "
-                    f"{verdict.kind} ({verdict.detail})",
-                    file=sys.stderr,
-                )
+    """Time every candidate, persist the winner, return the result.
+
+    Observability: the whole search runs under an ``autotune.search``
+    span with one ``autotune.candidate`` span per timed config (the
+    candidate timings become visible on the trace timeline), and the
+    per-key ``autotune.searches`` / ``candidates`` / ``pruned`` counters
+    land in the metrics registry unconditionally — a search runs once
+    per shape, so always-on counting costs nothing that matters."""
+    reg = obs_metrics.REGISTRY
+    reg.counter("autotune.searches").inc(1.0, key=key)
+    with obs_trace.span("autotune.search", key=key):
+        with obs_trace.span("autotune.candidate", key=key, cand="default"):
+            default_t = _time_fn(lambda: run(default))
+        reg.counter("autotune.candidates").inc(1.0, key=key)
+        best_cfg, best_t = dict(default), default_t
+        pruned = 0
+        for cand in candidates:
+            if cand == default:
                 continue
-        try:
-            t = _time_fn(lambda: run(cand))
-        except Exception:  # candidate invalid for this shape — skip
-            continue
-        if t < best_t:
-            best_cfg, best_t = dict(cand), t
+            if contract is not None:
+                verdict = contract(cand)
+                if verdict is not None:
+                    pruned += 1
+                    reg.counter("autotune.pruned").inc(1.0, key=key)
+                    print(
+                        f"[autotune] pruned {key} cand={cand}: "
+                        f"{verdict.kind} ({verdict.detail})",
+                        file=sys.stderr,
+                    )
+                    continue
+            try:
+                with obs_trace.span(
+                    "autotune.candidate", key=key, cand=str(cand)
+                ):
+                    t = _time_fn(lambda: run(cand))
+            except Exception:  # candidate invalid for this shape — skip
+                continue
+            reg.counter("autotune.candidates").inc(1.0, key=key)
+            if t < best_t:
+                best_cfg, best_t = dict(cand), t
     best_cfg["us"] = round(best_t * 1e6, 2)
     best_cfg["default_us"] = round(default_t * 1e6, 2)
     record(key, best_cfg)

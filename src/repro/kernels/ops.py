@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import functools
 import sys
+import time
 from typing import Literal, NamedTuple
 
 import jax
@@ -50,6 +51,9 @@ import numpy as np
 from repro import faults, health
 from repro.core import conv as core_conv
 from repro.health import HEALTH
+from repro.launch.hlo_flops import est_hbm_bytes
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.kernels import (
     attention_decode as attn_dec,
     autotune,
@@ -74,7 +78,7 @@ def use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _ladder(site: str, rungs):
+def _ladder(site: str, rungs, *, key: str | None = None, operands=()):
     """Graceful-degradation dispatch (DESIGN.md §10).
 
     ``rungs`` is an ordered list of ``(name, thunk)`` — pallas kernel →
@@ -87,14 +91,40 @@ def _ladder(site: str, rungs):
     exercise exactly this path. Dispatch happens at trace time: a kernel
     that traced fine but dies at runtime surfaces to the caller's retry
     layer (serve/train), not here.
+
+    Observability (DESIGN.md §12): when tracing (``REPRO_TRACE``) or the
+    dispatch metrics (``obs.metrics.enable_dispatch``) are armed, the
+    winning rung is wrapped in a ``kernel.dispatch`` span and recorded
+    under its autotune shape ``key`` — call count, cumulative wall time,
+    and estimated HBM bytes of ``operands`` + result. Because dispatch
+    runs at trace time, the wall time measures trace/eager cost, not
+    per-step compiled runtime — free in jitted hot loops, which re-trace
+    only on new shapes. Disabled path: one flag check, no allocation.
     """
     live = [(n, t) for n, t in rungs if not HEALTH.is_demoted(site, n)]
     if not live:
         live = [rungs[-1]]  # fully demoted site: keep serving the oracle
+    obs_on = obs_trace.TRACING or obs_metrics.DISPATCH_ON
     for i, (name, thunk) in enumerate(live):
         try:
             faults.maybe_fail_rung(name, site)
-            return thunk()
+            if not obs_on:
+                return thunk()
+            t0 = time.perf_counter()
+            with obs_trace.span(
+                "kernel.dispatch", site=site, key=key or site, rung=name
+            ):
+                out = thunk()
+            dt = time.perf_counter() - t0
+            labels = dict(site=site, key=key or site, rung=name)
+            reg = obs_metrics.REGISTRY
+            reg.counter("dispatch.calls").inc(1.0, **labels)
+            reg.counter("dispatch.seconds_total").inc(dt, **labels)
+            if operands:
+                reg.counter("dispatch.est_hbm_bytes_total").inc(
+                    float(est_hbm_bytes(*operands, out)), **labels
+                )
+            return out
         except Exception as e:  # noqa: BLE001 — any failure → next rung
             if i + 1 == len(live):
                 raise
@@ -210,6 +240,8 @@ class _Conv1dCfg(NamedTuple):
 def _resolve_conv1d(x, w, *, stride, tile_l, cin_block, cout_block, regime,
                     dtype_key: str | None = None):
     """explicit args → tuned cache entry → defaults (+ auto blocking).
+    Returns ``(shape key, resolved config)`` — the key labels the obs
+    dispatch series for this call.
 
     ``dtype_key`` overrides the dtype field of the autotune shape key —
     the quantized paths tune under their precision name ("w8a8"/"w8a16")
@@ -226,7 +258,7 @@ def _resolve_conv1d(x, w, *, stride, tile_l, cin_block, cout_block, regime,
     tile_l = cfg["tile_l"]
     if tile_l is None:
         tile_l = sliding_conv1d.DEFAULT_TILE_L
-    return dict(
+    return key, dict(
         stride=stride, tile_l=tile_l,
         cin_block=_auto_block(Cin, cfg["cin_block"]),
         cout_block=_auto_block(Cout, cfg["cout_block"]),
@@ -238,7 +270,7 @@ def _conv1d_sliding_dispatch(x, w, bias, *, activation, interpret, **tune):
     """Tuned forward kernel call WITHOUT the custom VJP — used for the
     forward primal and for dx inside the backward pass (where it picks up
     the dx conv's own shape key from the autotune cache)."""
-    cfg = _resolve_conv1d(x, w, **tune)
+    _, cfg = _resolve_conv1d(x, w, **tune)
     return sliding_conv1d.conv1d_sliding_pallas(
         x, w, bias, activation=activation, interpret=interpret, **cfg
     )
@@ -287,8 +319,10 @@ def _check_quant_dispatch(precision, backend, dilation):
 # shape key → reason for shapes where the quant path measurably loses to the
 # float path and dispatch fell back (logged once per shape; inspectable).
 # DispatchLog dedup-counts repeats per key — a long serving run hitting the
-# same fallback every step bumps a counter instead of growing state
-_QUANT_FALLBACKS = health.DispatchLog()
+# same fallback every step bumps a counter instead of growing state. Named:
+# hits mirror into the obs registry (dispatch.log_calls / facts) so
+# metrics.json carries the fallback record
+_QUANT_FALLBACKS = health.DispatchLog("quant_fallback")
 
 
 def _quant_fallback_reason(x, w, stride, precision) -> str | None:
@@ -449,7 +483,7 @@ def conv1d(
         x, w, w_scale, x_scale, out_dtype = _quant_operands(
             x, w, w_scale, x_scale, precision
         )
-        tuned = _resolve_conv1d(
+        qkey, tuned = _resolve_conv1d(
             x, w, stride=stride, tile_l=tile_l, cin_block=cin_block,
             cout_block=cout_block, regime=regime, dtype_key=precision,
         )
@@ -466,7 +500,7 @@ def conv1d(
                 accumulate=accumulate, out_dtype=out_dtype,
             )
 
-        return _ladder(site, [
+        return _ladder(site, key=qkey, operands=(x, w, bias), rungs=[
             ("pallas", lambda: sliding_conv_quant.conv1d_quant_pallas(
                 x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
                 mode=precision, activation=activation, out_dtype=out_dtype,
@@ -488,7 +522,7 @@ def conv1d(
         return epilogue_unfused(y, bias, activation)
     x = _pad1d(x, padding, w.shape[0], dilation)
     if backend == "sliding":
-        tuned = _resolve_conv1d(
+        key, tuned = _resolve_conv1d(
             x, w, stride=stride, tile_l=tile_l, cin_block=cin_block,
             cout_block=cout_block, regime=regime,
         )
@@ -497,7 +531,7 @@ def conv1d(
             bwd_tile_l=_bwd_tile1d(x, w, stride, bwd_tile_l),
             interpret=interpret, **tuned,
         )
-        return _ladder("conv1d", [
+        return _ladder("conv1d", key=key, operands=(x, w, bias), rungs=[
             ("pallas", lambda: _conv1d_sliding_op(cfg, x, w, bias)),
             ("jax", lambda: epilogue_unfused(
                 core_conv.conv1d_sliding(
@@ -639,7 +673,7 @@ def conv1d_depthwise(
                 accumulate=accumulate, out_dtype=out_dtype,
             )
 
-        return _ladder(site, [
+        return _ladder(site, key=key, operands=(x, w, bias), rungs=[
             ("pallas", lambda: sliding_conv_quant.conv1d_depthwise_quant_pallas(
                 x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
                 mode=precision, stride=stride,
@@ -659,7 +693,11 @@ def conv1d_depthwise(
         bwd_tile_l=bwd_tile_l if bwd_tile_l is not None else tile_l,
         interpret=interpret,
     )
-    return _ladder("conv1d_depthwise", [
+    dw_key = autotune.conv1d_dw_key(
+        *x.shape, w.shape[0], stride, x.dtype.name
+    )
+    return _ladder("conv1d_depthwise", key=dw_key,
+                   operands=(x, w, bias), rungs=[
         ("pallas", lambda: _conv1d_depthwise_op(cfg, x, w, bias)),
         ("jax", lambda: epilogue_unfused(
             core_conv.conv1d_depthwise_sliding(
@@ -695,6 +733,7 @@ class _Conv2dCfg(NamedTuple):
 
 def _resolve_conv2d(x, w, *, stride, tile_h, tile_w, cin_block, cout_block,
                     regime, dtype_key: str | None = None):
+    """Like :func:`_resolve_conv1d`: returns ``(shape key, config)``."""
     B, H, W, Cin = x.shape
     kh, kw, _, Cout = w.shape
     key = autotune.conv2d_key(B, H, W, Cin, Cout, kh, kw, *stride,
@@ -709,7 +748,7 @@ def _resolve_conv2d(x, w, *, stride, tile_h, tile_w, cin_block, cout_block,
         tile_h = sliding_conv2d.DEFAULT_TILE_H
     if tile_w is None:
         tile_w = sliding_conv2d.DEFAULT_TILE_W
-    return dict(
+    return key, dict(
         stride=stride, tile_h=tile_h, tile_w=tile_w,
         cin_block=_auto_block(Cin, cfg["cin_block"]),
         cout_block=_auto_block(Cout, cfg["cout_block"]),
@@ -718,7 +757,7 @@ def _resolve_conv2d(x, w, *, stride, tile_h, tile_w, cin_block, cout_block,
 
 
 def _conv2d_sliding_dispatch(x, w, bias, *, activation, interpret, **tune):
-    cfg = _resolve_conv2d(x, w, **tune)
+    _, cfg = _resolve_conv2d(x, w, **tune)
     return sliding_conv2d.conv2d_sliding_pallas(
         x, w, bias, activation=activation, interpret=interpret, **cfg
     )
@@ -839,7 +878,7 @@ def conv2d(
         x, w, w_scale, x_scale, out_dtype = _quant_operands(
             x, w, w_scale, x_scale, precision
         )
-        tuned = _resolve_conv2d(
+        qkey, tuned = _resolve_conv2d(
             x, w, stride=stride, tile_h=tile_h, tile_w=tile_w,
             cin_block=cin_block, cout_block=cout_block, regime=regime,
             dtype_key=precision,
@@ -855,7 +894,7 @@ def conv2d(
                 accumulate=accumulate, out_dtype=out_dtype,
             )
 
-        return _ladder(site, [
+        return _ladder(site, key=qkey, operands=(x, w, bias), rungs=[
             ("pallas", lambda: sliding_conv_quant.conv2d_quant_pallas(
                 x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
                 mode=precision, activation=activation, out_dtype=out_dtype,
@@ -882,7 +921,7 @@ def conv2d(
     if plo_h or phi_h or plo_w or phi_w:
         x = jnp.pad(x, ((0, 0), (plo_h, phi_h), (plo_w, phi_w), (0, 0)))
     if backend == "sliding":
-        tuned = _resolve_conv2d(
+        key, tuned = _resolve_conv2d(
             x, w, stride=stride, tile_h=tile_h, tile_w=tile_w,
             cin_block=cin_block, cout_block=cout_block, regime=regime,
         )
@@ -891,7 +930,7 @@ def conv2d(
             activation=activation, has_bias=bias is not None,
             bwd_tile_h=bth, bwd_tile_w=btw, interpret=interpret, **tuned,
         )
-        return _ladder("conv2d", [
+        return _ladder("conv2d", key=key, operands=(x, w, bias), rungs=[
             ("pallas", lambda: _conv2d_sliding_op(cfg, x, w, bias)),
             ("jax", lambda: epilogue_unfused(
                 core_conv.conv2d_sliding(
@@ -925,7 +964,9 @@ def conv2d(
 # fused path actually dispatched for the decode loop (DESIGN.md §9).
 # DispatchLog dedup-counts per key (bounded by distinct cache shapes, not
 # by decode steps) and ``.count(key)`` says how often each was served.
-ATTN_DECODE_DISPATCH = health.DispatchLog()
+# Named: hits mirror into the obs registry so the report CLI can rebuild
+# the ``calls=N`` lines from metrics.json alone
+ATTN_DECODE_DISPATCH = health.DispatchLog("attn_decode")
 
 
 def attention_decode(
@@ -1011,6 +1052,7 @@ def attention_decode(
     out = _ladder(
         "attention_decode",
         [(im, functools.partial(_run, im)) for im in order],
+        key=key, operands=(q, k, v, k_scale, v_scale),
     )
     return out.reshape(B, H, D)
 
@@ -1092,7 +1134,8 @@ def pool1d(
     window-size crossover heuristic) instead of hardcoding one form."""
     interpret = use_interpret() if interpret is None else interpret
     resolved = _pool_method(x, window, op, method)
-    return _ladder("pool1d", [
+    pool_key = autotune.pool1d_key(*x.shape, window, op, x.dtype.name)
+    return _ladder("pool1d", key=pool_key, operands=(x,), rungs=[
         ("pallas", lambda: _pool1d_op(window, op, resolved, interpret, x)),
         ("jax", lambda: kernels_ref.pool_ref(x, window=window, op=op)),
     ])

@@ -340,3 +340,25 @@ class HloCost:
 def analyze(text: str) -> dict[str, float]:
     h = HloCost(text)
     return {"flops": h.entry_flops(), "bytes": h.entry_bytes()}
+
+
+def est_hbm_bytes(*arrays) -> int:
+    """Estimated HBM traffic for one kernel call: operands + results,
+    each counted once — the same per-op convention :meth:`HloCost.comp_bytes`
+    uses, applied to the abstract values a dispatch site holds (jax
+    arrays, tracers, anything with ``.shape``/``.dtype``). The obs
+    dispatch counters (``dispatch.est_hbm_bytes_total``) feed this next
+    to measured wall time so per-key arithmetic intensity is readable
+    straight off the metrics snapshot. Items without a shape/dtype (None
+    biases, scalars without dtype) are skipped."""
+    total = 0
+    for a in arrays:
+        shape = getattr(a, "shape", None)
+        dtype = getattr(a, "dtype", None)
+        if shape is None or dtype is None:
+            continue
+        itemsize = getattr(dtype, "itemsize", None)
+        if itemsize is None:
+            itemsize = DTYPE_BYTES.get(str(dtype), 4)
+        total += math.prod(shape) * itemsize
+    return total

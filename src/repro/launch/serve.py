@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import faults
+from repro import faults, obs
 from repro.configs import get_config, smoke_config
 from repro.distributed.ft import RestartPolicy, StepWatchdog, beat
 from repro.distributed.sharding import ParamDef, Runtime
@@ -196,6 +196,11 @@ def prefill_cache(model, params, prompts, *, cache_len: int,
     defs = model.cache_defs(B, cache_len)
     if cfg.kv_quant == "int8":
         cache = quantize_cache_to_defs(cache, defs)
+    # metadata-only gauge (no device sync): the decode-cache footprint
+    # this request serves from
+    obs.REGISTRY.gauge("serve.kv_cache_bytes").set(
+        float(cache_nbytes(defs, cfg.param_dtype)), kind="served"
+    )
     return logits, pad_cache_to_defs(cache, full, defs)
 
 
@@ -217,48 +222,77 @@ def _generate_once(model, params, prompts, *, gen_len, cache_len,
     cfg = model.cfg
     eos = jnp.int32(cfg.eos_id)
     B, P = prompts.shape
-    t_start = time.time()
-    logits, cache = prefill_cache(
-        model, params, prompts, cache_len=cache_len, gen_len=gen_len
-    )
+    reg = obs.REGISTRY
+    # perf_counter, NOT the wall clock: steps/deadlines/watchdog measure
+    # durations — a wall-clock jump (NTP step, suspend) must not fire
+    # false straggler or deadline events. The wall clock remains only
+    # where an absolute timestamp is recorded (the heartbeat file).
+    t_start = time.perf_counter()
+    with obs.span("serve.prefill", arch=cfg.name):
+        logits, cache = prefill_cache(
+            model, params, prompts, cache_len=cache_len, gen_len=gen_len
+        )
     _, decode = _jitted(model)
 
     if nan_guard:
         logits = _check_finite(logits, -1)
     key = jax.random.key(seed)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    # TTFT: prefill through the argmax that yields the first token
+    t_first = time.perf_counter() - t_start
+    reg.histogram("serve.prefill_s").observe(t_first, arch=cfg.name)
+    reg.histogram("serve.ttft_s").observe(t_first, arch=cfg.name)
     done = tok[:, 0] == eos
     out = [tok]
+    step_hist = reg.histogram("serve.decode_step_s")
     for i in range(gen_len - 1):
-        t_step = time.time()
+        t_step = time.perf_counter()
         faults.sleep_point("slow_step", "serve")
-        logits, cache = decode(params, cache, tok, jnp.int32(P + i))
-        if nan_guard:
-            logits = _check_finite(logits, i)
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits[:, -1] / temperature
-            ).astype(jnp.int32)[:, None]
-        else:
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        tok = jnp.where(done[:, None], eos, tok)  # finished slots: masked
-        out.append(tok)
-        done = done | (tok[:, 0] == eos)
+        with obs.span("serve.decode_step", arch=cfg.name, step=P + i):
+            logits, cache = decode(params, cache, tok, jnp.int32(P + i))
+            if nan_guard:
+                logits = _check_finite(logits, i)
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits[:, -1] / temperature
+                ).astype(jnp.int32)[:, None]
+            else:
+                tok = jnp.argmax(
+                    logits[:, -1], axis=-1
+                ).astype(jnp.int32)[:, None]
+            tok = jnp.where(done[:, None], eos, tok)  # finished: masked
+            out.append(tok)
+            done = done | (tok[:, 0] == eos)
+        dt_step = time.perf_counter() - t_step
+        step_hist.observe(dt_step, arch=cfg.name)
         if watchdog is not None:
-            watchdog.observe(P + i, time.time() - t_step)
+            watchdog.observe(P + i, dt_step)
         if run_dir is not None:
             beat(run_dir, host_id)
-        if deadline_s is not None and time.time() - t_start > deadline_s:
+        if (
+            deadline_s is not None
+            and time.perf_counter() - t_start > deadline_s
+        ):
             # deadline: truncate the request — remaining positions pad
             # with eos and every slot is marked recyclable
             HEALTH.record(
                 "serve/generate", "deadline_exceeded", "truncate",
                 detail=f"{len(out)}/{gen_len} tokens in {deadline_s}s",
             )
+            reg.counter("serve.deadline_exceeded").inc(1.0, arch=cfg.name)
             out.append(jnp.full((B, gen_len - len(out)), eos, jnp.int32))
             done = jnp.ones_like(done)
             break
+    n_done = int(done.sum())
+    reg.counter("serve.tokens_generated").inc(
+        float(B * gen_len), arch=cfg.name
+    )
+    reg.gauge("serve.slots_total").set(float(B), arch=cfg.name)
+    reg.gauge("serve.slots_recyclable").set(float(n_done), arch=cfg.name)
+    reg.gauge("serve.slot_occupancy").set(
+        (B - n_done) / B if B else 0.0, arch=cfg.name
+    )
     return jnp.concatenate(out, axis=1), done
 
 
@@ -283,24 +317,34 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
     When ``run_dir`` is given the decode loop heartbeats per step and a
     ``watchdog`` (or a default one) flags straggler steps into ``HEALTH``.
     """
+    reg = obs.REGISTRY
     if watchdog is None and run_dir is not None:
-        watchdog = StepWatchdog(
-            on_straggler=lambda step, s, ema: HEALTH.record(
+        def _flag_straggler(step, s, ema):
+            HEALTH.record(
                 "serve/decode", "straggler", "flag",
                 detail=f"step {step}: {s:.3f}s vs EMA {ema:.3f}s",
             )
-        )
+            reg.counter("serve.stragglers").inc(1.0)
+
+        watchdog = StepWatchdog(on_straggler=_flag_straggler)
     policy = RestartPolicy(
         max_restarts=max_retries, base_backoff_s=0.05, max_backoff_s=2.0
     )
+    reg.counter("serve.requests").inc(1.0, arch=model.cfg.name)
     while True:
         try:
-            return _generate_once(
-                model, params, prompts, gen_len=gen_len,
-                cache_len=cache_len, temperature=temperature, seed=seed,
-                deadline_s=deadline_s, nan_guard=nan_guard,
-                run_dir=run_dir, host_id=host_id, watchdog=watchdog,
+            t_req = time.perf_counter()
+            with obs.span("serve.generate", arch=model.cfg.name):
+                result = _generate_once(
+                    model, params, prompts, gen_len=gen_len,
+                    cache_len=cache_len, temperature=temperature,
+                    seed=seed, deadline_s=deadline_s, nan_guard=nan_guard,
+                    run_dir=run_dir, host_id=host_id, watchdog=watchdog,
+                )
+            reg.histogram("serve.request_s").observe(
+                time.perf_counter() - t_req, arch=model.cfg.name
             )
+            return result
         except Exception as e:  # noqa: BLE001 — bounded retry, then raise
             # frozen-vocabulary reason (health.Reason): fault kind →
             # verbatim, FloatingPointError → nan_logits, anything else →
@@ -316,6 +360,7 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
             HEALTH.record(
                 "serve/generate", reason, "retry", detail=repr(e)[:200]
             )
+            reg.counter("serve.retries").inc(1.0, arch=model.cfg.name)
             time.sleep(delay)
 
 
@@ -328,17 +373,18 @@ def quantize_for_serving(model, params, prompts):
     cfg = model.cfg
     B, P = prompts.shape
     calib = quant.Calibration()
-    with quant.collecting(calib):
-        model.prefill(params, serve_batch(model, B, P, prompts))  # eager
-    spec = calib.spec(chains=quant.CHAINS)
-    qparams = quant.quantize_params(params, spec=spec)
+    with obs.span("serve.quantize", arch=cfg.name):
+        with quant.collecting(calib):
+            model.prefill(params, serve_batch(model, B, P, prompts))  # eager
+        spec = calib.spec(chains=quant.CHAINS)
+        qparams = quant.quantize_params(params, spec=spec)
     n = quant.quantized_site_count(qparams)
     if n == 0:
-        print(f"[serve] --quant: {cfg.name} has no conv sites; unchanged")
+        obs.info("serve", f"--quant: {cfg.name} has no conv sites; unchanged")
         return cfg, params
     chained = sum(1 for e in spec.values() if "out_scale" in e)
-    print(f"[serve] --quant: {n} conv weight(s) int8, "
-          f"{len(calib.seen)} calibrated site(s), {chained} chained")
+    obs.info("serve", f"--quant: {n} conv weight(s) int8, "
+             f"{len(calib.seen)} calibrated site(s), {chained} chained")
     return cfg.replace(conv_precision="w8a8"), qparams
 
 
@@ -367,7 +413,13 @@ def main():
                          "sliding_pallas routes through the ops dispatch "
                          "ladder (the chaos-CI path)")
     ap.add_argument("--run-dir", default=None,
-                    help="heartbeat/watchdog directory for the decode loop")
+                    help="heartbeat/watchdog directory for the decode "
+                         "loop; obs artifacts (metrics.json [+ "
+                         "trace.json]) are written here at exit")
+    ap.add_argument("--trace", action="store_true",
+                    help="arm span tracing (same as REPRO_TRACE=1); "
+                         "export as Chrome/Perfetto trace.json under "
+                         "--run-dir")
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="per-request wall-clock budget; expiry truncates "
                          "the batch with eos padding")
@@ -375,6 +427,8 @@ def main():
                     help="bounded retry budget per request")
     args = ap.parse_args()
 
+    if args.trace:
+        obs.enable()
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
@@ -396,38 +450,58 @@ def main():
         model = build_model(cfg, rt)
     cache_len = args.prompt_len + args.gen + (args.prompt_len + args.gen) % 2
     cache_len = resolve_cache_len(cfg, cache_len, args.prompt_len, args.gen)
-    t0 = time.time()
+    t0 = time.perf_counter()
     toks, done = generate(
         model, params, prompts, gen_len=args.gen,
         cache_len=cache_len, temperature=args.temperature, seed=args.seed,
         deadline_s=args.deadline_s, max_retries=args.retries,
         run_dir=args.run_dir,
     )
-    dt = time.time() - t0
-    print(f"[serve] generated {toks.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s); "
-          f"{int(done.sum())}/{args.batch} slots recyclable "
-          f"(eos={cfg.eos_id})")
+    dt = time.perf_counter() - t0
+    # the summary facts the obs report CLI rebuilds these lines from —
+    # metrics.json alone must reproduce this stdout summary
+    reg = obs.REGISTRY
+    run = reg.facts("serve.run")
+    run.set("arch", cfg.name)
+    run.set("shape", tuple(toks.shape))
+    run.set("elapsed_s", f"{dt:.2f}")
+    run.set("tok_per_s", f"{args.batch * args.gen / dt:.1f}")
+    run.set("recyclable", int(done.sum()))
+    run.set("batch", args.batch)
+    run.set("eos_id", cfg.eos_id)
+    run.set("sample", np.asarray(toks[0][:16]))
+    obs.info("serve",
+             f"generated {toks.shape} in {dt:.2f}s "
+             f"({args.batch * args.gen / dt:.1f} tok/s); "
+             f"{int(done.sum())}/{args.batch} slots recyclable "
+             f"(eos={cfg.eos_id})")
     from repro.kernels import ops as kops
 
     for akey, impl in sorted(kops.ATTN_DECODE_DISPATCH.items()):
         # one line per attention-read shape: CI asserts the fused kernel
         # actually dispatched (the autotune key names the cache shape);
         # the dedup-counted log stays bounded however long the run was
-        print(f"[serve] attn-decode: impl={impl} key={akey} "
-              f"calls={kops.ATTN_DECODE_DISPATCH.count(akey)}")
+        obs.info("serve",
+                 f"attn-decode: impl={impl} key={akey} "
+                 f"calls={kops.ATTN_DECODE_DISPATCH.count(akey)}")
     bytes_now = cache_nbytes(model.cache_defs(args.batch, cache_len),
                              cfg.param_dtype)
     fp_model = build_model(cfg.replace(kv_quant="fp"), rt)
     bytes_fp = cache_nbytes(fp_model.cache_defs(args.batch, cache_len),
                             cfg.param_dtype)
-    print(f"[serve] kv-cache bytes: {bytes_now} "
-          f"(fp {bytes_fp}, ratio {bytes_fp / bytes_now:.2f}x)")
-    print("[serve] sample:", np.asarray(toks[0][:16]))
+    reg.gauge("serve.kv_cache_bytes").set(float(bytes_now), kind="served")
+    reg.gauge("serve.kv_cache_bytes").set(float(bytes_fp), kind="fp")
+    obs.info("serve",
+             f"kv-cache bytes: {bytes_now} "
+             f"(fp {bytes_fp}, ratio {bytes_fp / bytes_now:.2f}x)")
+    obs.info("serve", f"sample: {np.asarray(toks[0][:16])}")
     for line in HEALTH.summary():
         # one reason-coded line per degradation event — the chaos CI job
         # asserts the expected ones appear (and clean runs assert none do)
-        print(f"[serve] health: {line}")
+        obs.info("serve", f"health: {line}")
+    if args.run_dir:
+        for p in obs.write_artifacts(args.run_dir):
+            obs.info("serve", f"obs artifact: {p}")
 
 
 if __name__ == "__main__":

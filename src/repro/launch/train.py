@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import faults
+from repro import faults, obs
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, smoke_config
 from repro.data import SyntheticLMData, make_batch_iterator
@@ -97,19 +97,22 @@ def train_loop(args) -> dict:
             "opt": None,
         }
         skeleton["opt"] = init_opt_state(skeleton["params"], opt_cfg)
-        state = ckpt.restore(start, skeleton)
+        with obs.span("train.resume", step=start):
+            state = ckpt.restore(start, skeleton)
         start_step = start + 1
-        print(f"[train] resumed from step {start}")
+        obs.REGISTRY.counter("train.resumes").inc(1.0, arch=cfg.name)
+        obs.info("train", f"resumed from step {start}")
     else:
         params = model.init(jax.random.key(args.seed))
         state = {"params": params, "opt": init_opt_state(params, opt_cfg)}
         start_step = 0
 
     wd = StepWatchdog(
-        on_straggler=lambda s, t, ema: print(
-            f"[ft] straggler at step {s}: {t:.2f}s vs EMA {ema:.2f}s"
+        on_straggler=lambda s, t, ema: obs.warn(
+            "ft", f"straggler at step {s}: {t:.2f}s vs EMA {ema:.2f}s"
         )
     )
+    reg = obs.REGISTRY
     losses = []
     it = make_batch_iterator(data, start_step=start_step)
     for step, host_batch in it:
@@ -127,25 +130,48 @@ def train_loop(args) -> dict:
                 cfg, args.batch, step_stream(args.seed, step, _TAG_PATCHES)
             )
         )
-        t0 = time.time()
-        faults.sleep_point("slow_step", "train")  # chaos: straggler step
-        state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])
-        dt = time.time() - t0
+        t0 = time.perf_counter()  # monotonic: step timing must not see
+        #                           wall-clock jumps (NTP, suspend)
+        with obs.span("train.step", step=step):
+            faults.sleep_point("slow_step", "train")  # chaos: straggler step
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
         wd.observe(step, dt)
         beat(args.run_dir, host_id=0)
         losses.append(loss)
+        toks = args.batch * args.seq
+        reg.counter("train.steps").inc(1.0, arch=cfg.name)
+        reg.counter("train.tokens").inc(float(toks), arch=cfg.name)
+        reg.histogram("train.step_s").observe(dt, arch=cfg.name)
+        reg.gauge("train.tokens_per_s").set(
+            toks / dt if dt > 0 else 0.0, arch=cfg.name
+        )
+        reg.gauge("train.loss").set(loss, arch=cfg.name)
         if step % args.log_every == 0:
-            print(
-                f"[train] step {step} loss {loss:.4f} "
+            obs.info(
+                "train",
+                f"step {step} loss {loss:.4f} "
                 f"gnorm {float(metrics['grad_norm']):.3f} "
                 f"lr {float(metrics['lr']):.2e} ({dt:.2f}s)"
             )
         if args.ckpt_every and step > 0 and step % args.ckpt_every == 0:
-            ckpt.save(step, state, blocking=False)
+            tc = time.perf_counter()
+            with obs.span("train.ckpt_save", step=step, blocking=False):
+                ckpt.save(step, state, blocking=False)
+            reg.histogram("train.ckpt_save_s").observe(
+                time.perf_counter() - tc, arch=cfg.name
+            )
         if args.fail_at is not None and step == args.fail_at:
             raise RuntimeError(f"injected failure at step {step}")
-    ckpt.save(args.steps - 1, state, blocking=True)
+    tc = time.perf_counter()
+    with obs.span("train.ckpt_save", step=args.steps - 1, blocking=True):
+        ckpt.save(args.steps - 1, state, blocking=True)
+    reg.histogram("train.ckpt_save_s").observe(
+        time.perf_counter() - tc, arch=cfg.name
+    )
+    if args.run_dir:
+        obs.write_artifacts(args.run_dir)
     return {"losses": losses, "final_loss": losses[-1] if losses else None}
 
 
@@ -176,13 +202,19 @@ def main():
                     help="inject a crash at this step (FT testing)")
     ap.add_argument("--max-restarts", type=int, default=0,
                     help="auto-restart budget after crashes")
+    ap.add_argument("--trace", action="store_true",
+                    help="arm span tracing (same as REPRO_TRACE=1); "
+                         "export as Chrome/Perfetto trace.json under "
+                         "--run-dir")
     args = ap.parse_args()
 
+    if args.trace:
+        obs.enable()
     policy = RestartPolicy(max_restarts=args.max_restarts)
     while True:
         try:
             out = train_loop(args)
-            print(f"[train] done; final loss {out['final_loss']:.4f}")
+            obs.info("train", f"done; final loss {out['final_loss']:.4f}")
             return
         except RuntimeError as e:
             delay = policy.next_backoff()
@@ -192,8 +224,8 @@ def main():
                 raise
             HEALTH.record("train", "step_crash", "restart",
                           detail=repr(e)[:200])
-            print(f"[ft] {e}; restarting in {delay:.1f}s "
-                  f"({policy.restarts}/{policy.max_restarts})")
+            obs.warn("ft", f"{e}; restarting in {delay:.1f}s "
+                           f"({policy.restarts}/{policy.max_restarts})")
             time.sleep(min(delay, 2.0))  # capped for tests
             args.fail_at = None  # the injected fault is transient
 

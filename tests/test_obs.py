@@ -1,0 +1,455 @@
+"""Observability layer (`repro.obs`, DESIGN.md §12): deterministic
+histogram quantiles, snapshot round-trips, Chrome-trace validity, the
+near-zero disabled path, and the instrumented serve/train/dispatch
+surfaces.
+
+The contracts under test:
+
+  * quantiles are a pure function of the persisted bucket counts — two
+    machines aggregating the same snapshot can never disagree;
+  * metric and span names come from the frozen ``obs.names``
+    vocabularies (the lint enforces literals, the registry everything);
+  * with tracing AND dispatch metrics off, instrumented sites do one
+    flag check — no allocation, no clock read, no registry writes;
+  * `HEALTH.record` mirrors into the ``health.events`` counter and (when
+    armed) a trace instant, so demotions land on the kernel timeline;
+  * serve/train smokes populate the metric names the report CLI and the
+    CI obs job assert on.
+"""
+import inspect
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.health import HEALTH, DispatchLog
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import BOUNDS, REGISTRY, hist_quantile
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Each test sees a fresh registry, an empty trace ring, and both
+    arm flags off; process-global state is restored afterwards."""
+    REGISTRY.reset()
+    obs_trace.clear()
+    was_tracing = obs_trace.TRACING
+    was_dispatch = obs_metrics.DISPATCH_ON
+    obs_trace.disable()
+    obs_metrics.enable_dispatch(False)
+    yield
+    REGISTRY.reset()
+    obs_trace.clear()
+    obs_trace.enable(was_tracing)
+    obs_metrics.enable_dispatch(was_dispatch)
+    HEALTH.reset()
+
+
+# -- histogram quantile determinism -------------------------------------------
+
+def test_hist_quantile_is_deterministic_function_of_counts():
+    """Same persisted counts → same quantile, computed by hand: linear
+    interpolation from the bucket's lower bound."""
+    counts = [0] * (len(BOUNDS) + 1)
+    # 10 observations in the (0.002, 0.005] bucket, 10 in (0.01, 0.02]
+    i_5ms = BOUNDS.index(5e-3)
+    i_20ms = BOUNDS.index(2e-2)
+    counts[i_5ms] = 10
+    counts[i_20ms] = 10
+    # p50 target = 10th obs → exactly fills the first bucket: its hi bound
+    assert hist_quantile(BOUNDS, counts, 0.5) == pytest.approx(5e-3)
+    # p75 target = 15th obs → halfway through the second bucket
+    assert hist_quantile(BOUNDS, counts, 0.75) == pytest.approx(
+        1e-2 + (2e-2 - 1e-2) * 0.5
+    )
+
+
+def test_hist_quantile_edges():
+    empty = [0] * (len(BOUNDS) + 1)
+    assert hist_quantile(BOUNDS, empty, 0.99) == 0.0
+    # everything in the +Inf overflow bucket → honestly saturates at the
+    # last finite bound instead of inventing a value
+    overflow = [0] * (len(BOUNDS) + 1)
+    overflow[-1] = 5
+    assert hist_quantile(BOUNDS, overflow, 0.5) == BOUNDS[-1]
+
+
+def test_histogram_observe_quantile_and_sums():
+    h = REGISTRY.histogram("serve.decode_step_s")
+    for v in (0.0015, 0.0015, 0.003, 0.03, 0.4):
+        h.observe(v, arch="a")
+    assert h.count(arch="a") == 5
+    assert h.sum(arch="a") == pytest.approx(0.436)
+    # deterministic given the fixed 1-2-5 grid
+    # p50 target 2.5 → (0.002, 0.005] bucket, halfway: 0.0035
+    assert h.quantile(0.5, arch="a") == pytest.approx(0.0035)
+    # p95 target 4.75 → (0.2, 0.5] bucket, 3/4 in: 0.425
+    assert h.quantile(0.95, arch="a") == pytest.approx(0.425)
+    # a second label set is an independent series
+    assert h.count(arch="b") == 0
+
+
+# -- name vocabulary enforcement ----------------------------------------------
+
+def test_registry_rejects_unknown_metric_names():
+    with pytest.raises(ValueError, match="unknown metric name"):
+        REGISTRY.counter("serve.not_a_metric")
+    with pytest.raises(ValueError, match="unknown metric name"):
+        REGISTRY.histogram("dispatch.bogus")
+
+
+def test_registry_rejects_kind_collisions():
+    REGISTRY.counter("serve.requests")
+    with pytest.raises(TypeError, match="already registered as counter"):
+        REGISTRY.gauge("serve.requests")
+
+
+def test_span_rejects_unknown_names_when_armed():
+    obs_trace.enable()
+    with pytest.raises(ValueError, match="unknown span name"):
+        obs.span("serve.not_a_span")
+    # traced() validates at decoration time even while disarmed
+    obs_trace.disable()
+    with pytest.raises(ValueError, match="unknown span name"):
+        obs.traced("nope.nope")
+
+
+# -- snapshot round-trip ------------------------------------------------------
+
+def test_snapshot_write_load_roundtrip(tmp_path):
+    REGISTRY.counter("dispatch.calls").inc(3.0, site="conv1d", rung="pallas")
+    REGISTRY.gauge("serve.kv_cache_bytes").set(1024.0, kind="served")
+    h = REGISTRY.histogram("serve.ttft_s")
+    h.observe(0.12, arch="whisper-medium")
+    REGISTRY.facts("serve.run").set("arch", "whisper-medium")
+
+    path = REGISTRY.write(tmp_path)
+    snap = obs_metrics.Registry.load(path)
+    assert snap["schema"] == obs_metrics.SCHEMA
+    assert snap["bounds"] == list(BOUNDS)
+    c = snap["counters"]["dispatch.calls"]
+    assert c == [{"labels": {"rung": "pallas", "site": "conv1d"},
+                  "value": 3.0}]
+    g = snap["gauges"]["serve.kv_cache_bytes"][0]
+    assert g["labels"] == {"kind": "served"} and g["value"] == 1024.0
+    hs = snap["histograms"]["serve.ttft_s"][0]
+    assert hs["count"] == 1 and hs["sum"] == pytest.approx(0.12)
+    # the quantile recomputed from the LOADED buckets matches the live one
+    assert hist_quantile(snap["bounds"], hs["buckets"], 0.5) == pytest.approx(
+        h.quantile(0.5, arch="whisper-medium")
+    )
+    assert snap["facts"]["serve.run"]["arch"] == "whisper-medium"
+
+
+def test_prometheus_exposition_shape(tmp_path):
+    REGISTRY.counter("serve.requests").inc(2.0, arch="a")
+    REGISTRY.histogram("serve.ttft_s").observe(0.0015, arch="a")
+    text = REGISTRY.to_prometheus()
+    assert '# TYPE repro_serve_requests counter' in text
+    assert 'repro_serve_requests{arch="a"} 2' in text
+    assert '# TYPE repro_serve_ttft_s histogram' in text
+    # cumulative buckets end at +Inf == _count
+    assert 'repro_serve_ttft_s_bucket{arch="a",le="+Inf"} 1' in text
+    assert 'repro_serve_ttft_s_count{arch="a"} 1' in text
+
+
+# -- tracing ------------------------------------------------------------------
+
+def test_trace_spans_nest_and_export_valid_chrome_json(tmp_path):
+    obs_trace.enable()
+    with obs.span("serve.generate", arch="a"):
+        with obs.span("serve.prefill", arch="a"):
+            time.sleep(0.002)
+        obs.instant("health.event", site="conv1d", reason="pallas_error",
+                    action="demote:pallas->jax")
+    path = obs_trace.export(tmp_path / "trace.json")
+    doc = json.load(open(path))
+    evs = doc["traceEvents"]
+    assert [e["name"] for e in evs] == [
+        "serve.prefill", "health.event", "serve.generate",
+    ]  # spans record on EXIT: inner closes first
+    prefill, inst, gen = evs
+    assert prefill["ph"] == "X" and gen["ph"] == "X" and inst["ph"] == "i"
+    # the outer span must fully contain the inner one on the timeline
+    assert gen["ts"] <= prefill["ts"]
+    assert gen["ts"] + gen["dur"] >= prefill["ts"] + prefill["dur"]
+    assert prefill["dur"] >= 2_000  # slept 2 ms; µs units
+    assert inst["args"]["reason"] == "pallas_error"
+    for e in evs:
+        assert {"name", "ph", "pid", "tid", "ts"} <= set(e)
+
+
+def test_disabled_span_is_shared_null_and_records_nothing():
+    s1 = obs.span("serve.generate")
+    s2 = obs.span("kernel.dispatch", site="conv1d")
+    assert s1 is s2  # one shared null CM — no per-call allocation
+    with s1:
+        pass
+    obs.instant("health.event", site="conv1d", reason="pallas_error",
+                action="demote")
+    assert obs_trace.events() == []
+
+
+def test_disabled_span_overhead_is_flag_check_cheap():
+    """The disabled path is a single module-global flag check; 200k calls
+    must land well under any instrumented site's real work (generous
+    bound so CI jitter can't flake it)."""
+    t0 = time.perf_counter()
+    for _ in range(200_000):
+        obs.span("serve.decode_step")
+    dt = time.perf_counter() - t0
+    assert dt < 2.0, f"disabled span() too slow: {dt:.3f}s / 200k calls"
+
+
+# -- health mirror ------------------------------------------------------------
+
+def test_health_record_mirrors_counter_and_trace_instant():
+    obs_trace.enable()
+    HEALTH.reset()
+    HEALTH.record("conv1d", "pallas_error", "demote:pallas->jax", "boom")
+    HEALTH.record("conv1d", "pallas_error", "demote:pallas->jax")
+    c = REGISTRY.counter("health.events")
+    assert c.value(site="conv1d", reason="pallas_error",
+                   action="demote:pallas->jax") == 2.0
+    insts = [e for e in obs_trace.events() if e["name"] == "health.event"]
+    assert len(insts) == 2
+    assert insts[0]["args"] == {
+        "site": "conv1d", "reason": "pallas_error",
+        "action": "demote:pallas->jax",
+    }
+    # the dedup contract is unchanged: one event, count bumped
+    assert len(HEALTH.events) == 1 and HEALTH.events[0].count == 2
+
+
+# -- DispatchLog --------------------------------------------------------------
+
+def test_unnamed_dispatch_log_stays_pure_mapping():
+    log = DispatchLog()
+    log["k"] = "pallas"
+    log["k"] = "jax"
+    assert log["k"] == "jax" and log.count("k") == 2
+    snap = REGISTRY.snapshot()
+    assert snap["counters"] == {} and snap["facts"] == {}
+
+
+def test_named_dispatch_log_mirrors_into_registry():
+    log = DispatchLog("attn_decode")
+    log["attn_dec|B2|S24|KV24|G1|D64|int8"] = "pallas"
+    log["attn_dec|B2|S24|KV24|G1|D64|int8"] = "pallas"
+    c = REGISTRY.counter("dispatch.log_calls")
+    assert c.value(log="attn_decode",
+                   key="attn_dec|B2|S24|KV24|G1|D64|int8") == 2.0
+    facts = REGISTRY.facts("dispatch.attn_decode")
+    assert facts.get("attn_dec|B2|S24|KV24|G1|D64|int8") == "pallas"
+    log.clear()
+    assert c.series() == []
+    assert facts.items() == []
+
+
+# -- kernel dispatch instrumentation ------------------------------------------
+
+def test_ladder_records_dispatch_metrics_and_spans(rng):
+    from repro.kernels import ops
+
+    x = jnp.asarray(rng.normal(size=(1, 32, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 8, 16)).astype(np.float32))
+
+    # fully off: the ladder takes the early-return path — nothing recorded
+    y_off = ops.conv1d(x, w, interpret=True)
+    assert REGISTRY.snapshot()["counters"] == {}
+    assert obs_trace.events() == []
+
+    obs_metrics.enable_dispatch()
+    obs_trace.enable()
+    y_on = ops.conv1d(x, w, interpret=True)
+    np.testing.assert_allclose(y_off, y_on)  # instrumentation is inert
+
+    calls = REGISTRY.counter("dispatch.calls").series()
+    assert len(calls) == 1
+    labels, n = calls[0]
+    assert n == 1.0
+    assert labels["site"] == "conv1d"
+    assert labels["key"].startswith("conv1d|B1|L32|Cin8|Cout16|K3|")
+    assert labels["rung"] in ("pallas", "jax", "ref")
+    secs = REGISTRY.counter("dispatch.seconds_total").value(**labels)
+    assert secs > 0.0
+    hbm = REGISTRY.counter("dispatch.est_hbm_bytes_total").value(**labels)
+    # x + w + out, f32: (1*32*8 + 3*8*16 + 1*30*16) * 4
+    assert hbm == (32 * 8 + 3 * 8 * 16 + 30 * 16) * 4.0
+    spans = [e for e in obs_trace.events() if e["name"] == "kernel.dispatch"]
+    assert spans and spans[0]["args"]["site"] == "conv1d"
+    assert spans[0]["args"]["rung"] == labels["rung"]
+
+
+# -- serve smoke --------------------------------------------------------------
+
+def test_serve_generate_populates_metrics(rng):
+    from repro.configs import get_config, smoke_config
+    from repro.distributed.sharding import Runtime
+    from repro.launch.serve import generate
+    from repro.models import build_model
+
+    cfg = smoke_config(get_config("qwen3-1.7b"))
+    model = build_model(cfg, Runtime())
+    params = model.init(jax.random.key(0))
+    prompts = jnp.asarray(
+        rng.integers(2, cfg.vocab_size, size=(2, 16)), jnp.int32
+    )
+    toks, done = generate(model, params, prompts, gen_len=4, cache_len=24)
+    assert toks.shape == (2, 4)
+
+    arch = cfg.name
+    assert REGISTRY.counter("serve.requests").value(arch=arch) == 1.0
+    assert REGISTRY.counter("serve.tokens_generated").value(arch=arch) == 8.0
+    assert REGISTRY.histogram("serve.ttft_s").count(arch=arch) == 1
+    assert REGISTRY.histogram("serve.prefill_s").count(arch=arch) == 1
+    # the first token falls out of prefill; gen_len-1 decode steps follow
+    assert REGISTRY.histogram("serve.decode_step_s").count(arch=arch) == 3
+    assert REGISTRY.histogram("serve.request_s").count(arch=arch) == 1
+    assert REGISTRY.gauge("serve.slots_total").value(arch=arch) == 2.0
+    occ = REGISTRY.gauge("serve.slot_occupancy").value(arch=arch)
+    assert occ is not None and 0.0 <= occ <= 1.0
+    kv = REGISTRY.gauge("serve.kv_cache_bytes").value(kind="served")
+    assert kv is not None and kv > 0
+
+
+def test_generate_uses_monotonic_clock():
+    """Step timing, deadlines, and the watchdog must not see wall-clock
+    jumps (NTP, suspend): `_generate_once` may only use perf_counter
+    (time.time() stays allowed for ABSOLUTE timestamps like heartbeats,
+    which live elsewhere)."""
+    from repro.launch import serve
+
+    src = inspect.getsource(serve._generate_once)
+    assert "time.time()" not in src, "wall clock in the decode loop"
+    assert "time.perf_counter()" in src
+
+
+# -- train smoke --------------------------------------------------------------
+
+def _train_args(tmp_path, **over):
+    import argparse
+
+    d = dict(
+        arch="qwen3-1.7b", smoke=True, steps=3, batch=2, seq=64,
+        lr=3e-4, seed=0, run_dir=str(tmp_path), ckpt_every=2, log_every=100,
+        grad_accum=1, conv_backend=None, audio_frontend="stub",
+        no_resume=True, fail_at=None, max_restarts=0,
+    )
+    d.update(over)
+    return argparse.Namespace(**d)
+
+
+def test_train_loop_populates_metrics_and_artifacts(tmp_path):
+    from repro.configs import get_config, smoke_config
+    from repro.launch.train import train_loop
+
+    out = train_loop(_train_args(tmp_path))
+    assert len(out["losses"]) == 3
+    arch = smoke_config(get_config("qwen3-1.7b")).name
+    assert REGISTRY.counter("train.steps").value(arch=arch) == 3.0
+    assert REGISTRY.counter("train.tokens").value(arch=arch) == 3 * 2 * 64.0
+    assert REGISTRY.histogram("train.step_s").count(arch=arch) == 3
+    # one async save at step 2 + the blocking final save
+    assert REGISTRY.histogram("train.ckpt_save_s").count(arch=arch) == 2
+    assert REGISTRY.gauge("train.loss").value(arch=arch) == pytest.approx(
+        out["losses"][-1]
+    )
+    tps = REGISTRY.gauge("train.tokens_per_s").value(arch=arch)
+    assert tps is not None and tps > 0
+    # artifacts persisted under run_dir (no trace.json: tracing is off)
+    snap = json.load(open(tmp_path / "metrics.json"))
+    assert "train.step_s" in snap["histograms"]
+    assert not (tmp_path / "trace.json").exists()
+
+
+# -- report CLI ---------------------------------------------------------------
+
+def test_report_rebuilds_serve_summary_from_artifacts(tmp_path, capsys):
+    run = REGISTRY.facts("serve.run")
+    run.set("arch", "whisper-medium")
+    run.set("shape", (2, 8))
+    run.set("elapsed_s", "1.50")
+    run.set("tok_per_s", "10.7")
+    run.set("recyclable", 0)
+    run.set("batch", 2)
+    run.set("eos_id", 50257)
+    run.set("sample", "[1 2 3]")
+    REGISTRY.facts("dispatch.attn_decode").set(
+        "attn_dec|B2|S24|KV24|G1|D64|int8", "pallas"
+    )
+    REGISTRY.counter("dispatch.log_calls").inc(
+        8.0, log="attn_decode", key="attn_dec|B2|S24|KV24|G1|D64|int8"
+    )
+    REGISTRY.gauge("serve.kv_cache_bytes").set(1000.0, kind="served")
+    REGISTRY.gauge("serve.kv_cache_bytes").set(2400.0, kind="fp")
+    for v in (0.01, 0.02, 0.03):
+        REGISTRY.histogram("serve.decode_step_s").observe(
+            v, arch="whisper-medium"
+        )
+    REGISTRY.counter("health.events").inc(
+        1.0, site="conv1d", reason="pallas_error", action="demote:pallas->jax"
+    )
+    obs.write_artifacts(tmp_path)
+
+    from repro.obs import report
+
+    lines = report.render(tmp_path)
+    text = "\n".join(lines)
+    assert ("[serve] generated (2, 8) in 1.50s (10.7 tok/s); "
+            "0/2 slots recyclable (eos=50257)") in text
+    assert ("[serve] attn-decode: impl=pallas "
+            "key=attn_dec|B2|S24|KV24|G1|D64|int8 calls=8") in text
+    assert "[serve] kv-cache bytes: 1000 (fp 2400, ratio 2.40x)" in text
+    assert "[serve] sample: [1 2 3]" in text
+    assert ("health: site=conv1d reason=pallas_error "
+            "action=demote:pallas->jax") in text
+    assert "decode-step" in text
+
+    # the __main__ entry point renders the same thing
+    import subprocess
+    import sys as _sys
+
+    proc = subprocess.run(
+        [_sys.executable, "-m", "repro.obs", "report", str(tmp_path)],
+        capture_output=True, text=True, env=_cli_env(),
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "kv-cache bytes: 1000" in proc.stdout
+
+
+def _cli_env():
+    import os
+    import pathlib
+
+    env = dict(os.environ)
+    src = pathlib.Path(__file__).resolve().parent.parent / "src"
+    env["PYTHONPATH"] = str(src) + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+# -- leveled logging ----------------------------------------------------------
+
+def test_log_levels_and_format(capsys):
+    from repro.obs import logs
+
+    old = logs.level()
+    try:
+        logs.set_level("info")
+        obs.debug("serve", "hidden")
+        obs.info("serve", "shown")
+        obs.warn("ft", "also shown")
+        out = capsys.readouterr().out
+        assert "[serve] shown\n" in out
+        assert "[ft] also shown\n" in out
+        assert "hidden" not in out
+        logs.set_level("warn")
+        obs.info("serve", "now hidden")
+        assert "now hidden" not in capsys.readouterr().out
+    finally:
+        logs.set_level(old)
