@@ -32,11 +32,32 @@ def machine_peak_gflops() -> tuple[float, float]:
     return t, 2 * n ** 3 / t / 1e9
 
 
+def machine_peak_membw() -> tuple[float, float]:
+    """Streaming memory bandwidth — the other roofline axis.
+
+    A jitted elementwise add over ``costmodel.MEMBW_ELEMS`` f32 elements
+    reads and writes each element once, so traffic is
+    ``costmodel.MEMBW_TRAFFIC_BYTES`` — the same constant the cost model
+    uses to recover GB/s from this row, keeping probe and consumer in
+    lockstep. Returns (seconds_per_pass, gigabytes_per_second)."""
+    from repro.analysis.costmodel import MEMBW_ELEMS, MEMBW_TRAFFIC_BYTES
+
+    a = jnp.ones((MEMBW_ELEMS,), jnp.float32)
+    f = jax.jit(lambda a: a + 1.0)
+    t = time_fn(f, a)
+    return t, MEMBW_TRAFFIC_BYTES / t / 1e9
+
+
 def run(sizes=SIZES) -> list[str]:
     rng = np.random.default_rng(0)
     t_peak, peak = machine_peak_gflops()
-    out = [row("fig2/machine_peak_gemm", t_peak,
-               f"gflops={peak:.1f} n=1024 f32")]
+    t_bw, gbps = machine_peak_membw()
+    out = [
+        row("fig2/machine_peak_gemm", t_peak,
+            f"gflops={peak:.1f} n=1024 f32"),
+        row("fig2/machine_peak_membw", t_bw,
+            f"gbps={gbps:.1f} stream-add f32"),
+    ]
     x = jnp.asarray(rng.normal(size=(1, H, W, CIN)).astype(np.float32))
     for k in sizes:
         wgt = jnp.asarray(rng.normal(size=(k, k, CIN, COUT)).astype(np.float32))

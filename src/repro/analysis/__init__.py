@@ -1,6 +1,6 @@
-"""Static analysis for the kernel + dispatch layer (DESIGN.md §11).
+"""Static analysis for the kernel + dispatch layer (DESIGN.md §11, §13).
 
-Three passes, run by ``python -m repro.analysis``:
+Five passes, run by ``python -m repro.analysis``:
 
   * :mod:`repro.analysis.contracts` — every Pallas kernel family declares
     its grid / BlockSpecs / index maps / scratch shapes as symbolic
@@ -15,7 +15,17 @@ Three passes, run by ``python -m repro.analysis``:
   * :mod:`repro.analysis.lint` — AST convention lint over ``src/``
     (frozen ``health.Reason`` codes at ``HEALTH.record`` sites, site
     strings from the calibration registry, no raw ``pl.load``-style
-    indexing outside a declared BlockSpec).
+    indexing outside a declared BlockSpec, no wall-clock ``time.time()``
+    in duration paths).
+  * :mod:`repro.analysis.costmodel` — static roofline cost model: a
+    runtime prediction ``max(flops/peak, hbm/bw, vmem/bw)`` for every
+    contract instance, validated (MAPE + Spearman rank) against the
+    measured BENCH/autotune rows; the autotuner ranks candidates on the
+    same prior to time fewer of them (DESIGN.md §13).
+  * :mod:`repro.analysis.ranges` — interval dataflow over the quant
+    graph: proves int32 accumulators can't overflow, requant outputs
+    stay in code range, and per-row KV scale folds are algebraically
+    valid for every shipped chain (DESIGN.md §13).
 """
 from repro.analysis.contracts import (  # noqa: F401
     KernelInstance,

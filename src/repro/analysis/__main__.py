@@ -1,9 +1,19 @@
-"""CLI: ``python -m repro.analysis [--contracts|--bloat|--lint|--all]``.
+"""CLI: ``python -m repro.analysis [--contracts|--bloat|--lint|--costmodel|--ranges|--all]``.
 
-Runs the selected passes (default: all three), prints a human report,
+Runs the selected passes (default: all five), prints a human report,
 writes ``ANALYSIS.json`` (machine-readable: per-violation kind / family /
-key / detail plus per-pass stats and the autotune prune report), and
-exits nonzero if any pass found a violation — this is the CI gate.
+key / detail plus per-pass stats, the autotune prune report, the cost
+model's per-family MAPE/Spearman table, and the quant-range chain
+proofs), and exits nonzero if any pass found a violation — this is the
+CI gate.
+
+Report schema
+-------------
+``SCHEMA = 2`` (this PR): adds the top-level ``"schema"`` key plus
+``stats.costmodel`` / ``stats.ranges``. Schema-1 reports (PR 7/8) had no
+``"schema"`` key and only contracts/bloat/lint stats; :func:`load_report`
+reads both, normalizing legacy reports to ``schema: 1`` so downstream
+tooling can switch on one field.
 """
 from __future__ import annotations
 
@@ -13,12 +23,37 @@ import json
 import sys
 import time
 
+#: report format version written to ANALYSIS.json. 1 = PR 7/8 (implicit:
+#: no "schema" key), 2 = adds costmodel + ranges stats.
+SCHEMA = 2
+
+
+def load_report(path: str) -> dict:
+    """Read an ANALYSIS.json of any schema version.
+
+    Legacy (PR 7/8) reports carried no ``"schema"`` key; they are
+    normalized to ``{"schema": 1, ...}`` with empty dicts for the stats
+    sections that did not exist yet, so readers can treat every report
+    as the current shape.
+    """
+    with open(path) as f:
+        report = json.load(f)
+    if "schema" not in report:
+        report["schema"] = 1
+    report.setdefault("stats", {})
+    for section in ("contracts", "bloat", "lint", "costmodel", "ranges"):
+        report["stats"].setdefault(section, {})
+    report.setdefault("violations", [])
+    report.setdefault("ok", not report["violations"])
+    return report
+
 
 def main(argv: list[str] | None = None) -> int:
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="static analysis: kernel contracts, memory bloat, "
-                    "convention lint",
+                    "convention lint, roofline cost model, quant-range "
+                    "interval analysis",
     )
     p.add_argument("--all", action="store_true", help="run every pass (default)")
     p.add_argument("--contracts", action="store_true",
@@ -27,9 +62,15 @@ def main(argv: list[str] | None = None) -> int:
                    help="HLO memory-bloat linter + dequant-chain check")
     p.add_argument("--lint", action="store_true",
                    help="AST convention lint over the repro package")
+    p.add_argument("--costmodel", action="store_true",
+                   help="roofline cost model: sweep predictions + validate "
+                        "against measured BENCH/autotune rows")
+    p.add_argument("--ranges", action="store_true",
+                   help="interval dataflow over the quant graph "
+                        "(accumulators, requant codes, KV scale folds)")
     p.add_argument("--quick", action="store_true",
-                   help="contracts: sample the key space instead of "
-                        "sweeping every filter size")
+                   help="contracts/costmodel/ranges: sample the key space "
+                        "instead of sweeping every filter size")
     p.add_argument("--json", default="ANALYSIS.json", metavar="PATH",
                    help="report path (default: %(default)s)")
     p.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
@@ -40,12 +81,20 @@ def main(argv: list[str] | None = None) -> int:
                         "(default: REPRO_BLOAT_ALPHA or 2.0)")
     p.add_argument("--lint-root", default=None, metavar="DIR",
                    help="lint this tree instead of the repro package")
+    p.add_argument("--bench", default=None, metavar="PATH",
+                   help="costmodel: measured bench JSON to validate "
+                        "against (default: BENCH_conv.json if present)")
+    p.add_argument("--autotune-cache", default=None, metavar="PATH",
+                   help="costmodel: autotune cache JSON to validate "
+                        "against (default: the live cache path)")
     args = p.parse_args(argv)
 
-    run_all = args.all or not (args.contracts or args.bloat or args.lint)
+    selected = (args.contracts or args.bloat or args.lint
+                or args.costmodel or args.ranges)
+    run_all = args.all or not selected
     violations = []
     stats: dict = {}
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     if run_all or args.contracts:
         from repro.analysis import contracts
@@ -94,7 +143,42 @@ def main(argv: list[str] | None = None) -> int:
         print(f"[analysis] lint: {s['files']} files against "
               f"{s['sites']} registered sites, {len(v)} violation(s)")
 
+    if run_all or args.costmodel:
+        from repro.analysis import costmodel
+
+        v, s = costmodel.check_all(
+            quick=args.quick, bench=args.bench, cache=args.autotune_cache,
+        )
+        violations += v
+        stats["costmodel"] = s
+        pk = s["peaks"]
+        val = s["validate"]
+        print(f"[analysis] costmodel: {s['instances']} instances, "
+              f"{val['rows']} measured rows validated "
+              f"({val['skipped']} skipped; peaks: {pk['gflops']:.1f} "
+              f"GFLOP/s, {pk['hbm_gbps']:.1f} GB/s [{pk['source']}]), "
+              f"{len(v)} violation(s)")
+        for fam, d in sorted(val.get("families", {}).items()):
+            gate = " [gated]" if d.get("gated") else ""
+            print(f"[analysis]   {fam}: n={d['n']} "
+                  f"mape={d['mape']:.2f} spearman={d['spearman']:.2f}"
+                  f"{gate}")
+
+    if run_all or args.ranges:
+        from repro.analysis import ranges
+
+        v, s = ranges.check_all(quick=args.quick)
+        violations += v
+        stats["ranges"] = s
+        n_safe = sum(1 for c in s["chains"].values() if c["status"] == "safe")
+        print(f"[analysis] ranges: {n_safe}/{len(s['chains'])} shipped "
+              f"chains proved safe, {s['kernel_stages']} kernel stages "
+              f"(acc bits max {s['acc_bits_max']:.1f}/31, overflow at "
+              f"reduce_len>={s['overflow_reduce_len']}), "
+              f"{len(v)} violation(s)")
+
     report = {
+        "schema": SCHEMA,
         "ok": not violations,
         "violations": [
             {"kind": v.kind, "family": v.family, "key": v.key,
@@ -102,7 +186,7 @@ def main(argv: list[str] | None = None) -> int:
             for v in violations
         ],
         "stats": stats,
-        "elapsed_s": round(time.time() - t0, 2),
+        "elapsed_s": round(time.perf_counter() - t0, 2),
     }
     with open(args.json, "w") as f:
         json.dump(report, f, indent=2)

@@ -1,0 +1,618 @@
+"""Static roofline cost model over the kernel contract geometry (DESIGN.md §13).
+
+The paper's core claim — sliding-window kernels beat GEMM convolution
+because their memory traffic is structurally smaller — is a property of
+launch geometry, not just a measurement. This pass *computes* it: for
+every :class:`~repro.analysis.contracts.KernelInstance` the §11 contract
+builders emit, predict runtime as
+
+    t = max(flops / peak_flops, hbm_bytes / hbm_bw, vmem_traffic / vmem_bw)
+
+where the traffic terms come from the same grid × BlockSpec declarations
+the safety checker already proves halo bounds over:
+
+  * **hbm_bytes** — one DMA per *block transfer*: walking the grid in
+    row-major (rightmost-fastest, the TPU execution order), a block is
+    re-fetched whenever its index-map offset differs from the previous
+    grid step (Pallas elides the re-fetch when the offset is unchanged —
+    the same revisit structure ``contracts._revisit_dims`` keys on).
+    Halo overlap and per-tile weight re-fetch therefore scale the way
+    they do on hardware: smaller tiles → more halo bytes.
+  * **vmem_traffic** — every grid point reads its input blocks from VMEM
+    and round-trips its accumulation scratch (read + write); outputs
+    write back once per transfer.
+
+Machine peaks come from the probes ``benchmarks/fig2_throughput.py``
+already records into ``BENCH_conv.json`` (``fig2/machine_peak_gemm`` for
+FLOP/s, ``fig2/machine_peak_membw`` for bandwidth), with env overrides
+(``REPRO_PEAK_GFLOPS``, ``REPRO_HBM_GBPS``) and conservative priors when
+neither exists — within one shape key the flops term is constant across
+candidates, so candidate *ranking* (what ``autotune._search`` consults,
+via :func:`candidate_cost`) is insensitive to the absolute peak values.
+
+:func:`validate` cross-checks predictions against every measured row in
+``BENCH_conv.json`` plus the autotune cache, reporting per-family MAPE
+and Spearman rank correlation into ``ANALYSIS.json``; a tuned family
+whose prediction order disagrees with measurement (ρ < 0.7) is a
+``cost_rank`` violation — the signal that cost-ordered search would be
+early-exiting on a lying prior.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import math
+import os
+import re
+from pathlib import Path
+from typing import Any, Callable, Iterable
+
+from repro.analysis.contracts import (
+    CONV1D,
+    FAMILIES,
+    FIG1,
+    FIG2,
+    Block,
+    KernelInstance,
+    Violation,
+    default_space,
+)
+
+#: grid size below which block transfers are counted exactly by walking
+#: the grid; above it the analytic fallback (varying-dims product) is used
+TRAFFIC_EVAL_CAP = 200_000
+
+#: streaming-copy probe size (f32 elements) — 128 MiB, far past any LLC,
+#: so the measured time is DRAM/HBM bandwidth; the probe is a read+write
+#: stream, hence the traffic it moves is ``2 * 4 * MEMBW_ELEMS`` bytes.
+#: ``benchmarks/fig2_throughput.machine_peak_membw`` imports these so the
+#: probe and its interpretation cannot drift.
+MEMBW_ELEMS = 1 << 25
+MEMBW_TRAFFIC_BYTES = 2 * 4 * MEMBW_ELEMS
+
+#: the GEMM probe's work (``fig2/machine_peak_gemm``: n=1024 f32, 2n³)
+GEMM_PROBE_FLOPS = 2 * 1024 ** 3
+
+# conservative priors when no probe row exists (CI runs the analysis job
+# against the committed BENCH, which always carries the GEMM row; the
+# balance prior only decides WHERE the roofline ridge sits, and within a
+# family the ranking is dominated by whichever term scales)
+DEFAULT_PEAK_GFLOPS = 100.0
+DEFAULT_BALANCE_FLOPS_PER_BYTE = 8.0
+VMEM_BW_RATIO = 8.0  # on-chip bandwidth multiple of HBM
+
+#: Spearman ρ below this on a tuned family is a ``cost_rank`` violation
+SPEARMAN_GATE = 0.7
+#: minimum rows in a family before the gate applies (ρ over 2 points is
+#: always ±1 — meaningless)
+GATE_MIN_ROWS = 3
+
+DEFAULT_BENCH = "BENCH_conv.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class Peaks:
+    """Machine peaks in base units (flop/s, bytes/s)."""
+
+    flops: float
+    hbm_bw: float
+    vmem_bw: float
+    source: str = "default"
+
+    def as_stats(self) -> dict[str, Any]:
+        return {
+            "gflops": round(self.flops / 1e9, 1),
+            "hbm_gbps": round(self.hbm_bw / 1e9, 1),
+            "vmem_gbps": round(self.vmem_bw / 1e9, 1),
+            "source": self.source,
+        }
+
+
+def _load_bench(bench) -> dict[str, Any]:
+    if isinstance(bench, dict):
+        return bench
+    path = Path(bench) if bench is not None else Path(DEFAULT_BENCH)
+    try:
+        return json.loads(path.read_text())
+    except (OSError, ValueError):
+        return {}
+
+
+def peaks(bench: dict | str | Path | None = None) -> Peaks:
+    """Resolve machine peaks: env override > BENCH probe rows > priors.
+
+    ``bench`` is a loaded ``BENCH_conv.json`` dict or a path to one
+    (default: ``BENCH_conv.json`` in the cwd, absent → priors).
+    """
+    rows = _load_bench(bench)
+    src = []
+
+    env_gf = os.environ.get("REPRO_PEAK_GFLOPS")
+    gemm_us = rows.get("fig2/machine_peak_gemm")
+    if env_gf:
+        flops = float(env_gf) * 1e9
+        src.append("env")
+    elif isinstance(gemm_us, (int, float)) and gemm_us > 0:
+        flops = GEMM_PROBE_FLOPS / (gemm_us * 1e-6)
+        src.append("gemm_probe")
+    else:
+        flops = DEFAULT_PEAK_GFLOPS * 1e9
+        src.append("prior")
+
+    env_bw = os.environ.get("REPRO_HBM_GBPS")
+    membw_us = rows.get("fig2/machine_peak_membw")
+    if env_bw:
+        hbm = float(env_bw) * 1e9
+        src.append("env")
+    elif isinstance(membw_us, (int, float)) and membw_us > 0:
+        hbm = MEMBW_TRAFFIC_BYTES / (membw_us * 1e-6)
+        src.append("membw_probe")
+    else:
+        hbm = flops / DEFAULT_BALANCE_FLOPS_PER_BYTE
+        src.append("balance_prior")
+
+    return Peaks(flops, hbm, hbm * VMEM_BW_RATIO, source="+".join(src))
+
+
+# ---------------------------------------------------------------------------
+# flops — per family, from the shape parameters the builders take
+# ---------------------------------------------------------------------------
+
+def _out_len(L, K, stride):
+    return (L - K) // stride + 1
+
+
+def instance_flops(family: str, shape: dict[str, Any], **extra) -> float:
+    """Arithmetic work of one kernel call, from the same shape dict the
+    contract builder takes. ``extra`` carries non-geometry knobs (the
+    pool ``method`` — van Herk scan is O(n) window-independent, shift is
+    O(n·w))."""
+    s = dict(shape)
+    if family in ("conv1d", "conv1d_bwd_dw"):
+        ol = _out_len(s["L"], s["K"], s.get("stride", 1))
+        return 2.0 * s["B"] * ol * s["K"] * s["Cin"] * s["Cout"]
+    if family in ("conv2d", "conv2d_bwd_dw"):
+        oh = _out_len(s["H"], s["kh"], s.get("stride", (1, 1))[0])
+        ow = _out_len(s["W"], s["kw"], s.get("stride", (1, 1))[1])
+        return 2.0 * s["B"] * oh * ow * s["kh"] * s["kw"] * s["Cin"] * s["Cout"]
+    if family in ("conv1d_depthwise", "conv1d_depthwise_bwd_dw"):
+        ol = _out_len(s["L"], s["K"], s.get("stride", 1))
+        return 2.0 * s["B"] * ol * s["K"] * s["C"]
+    if family == "pool1d":
+        ol = _out_len(s["L"], s["window"], 1)
+        if extra.get("method") == "scan":
+            return 4.0 * s["B"] * s["L"] * s["C"]  # two prefix phases
+        return float(s["B"] * ol * s["C"] * s["window"])
+    if family == "attention_decode":
+        h = s["KV"] * s["G"]
+        # qk + pv dots (2 flops each) + online-softmax bookkeeping
+        return 4.0 * s["B"] * h * s["S"] * s["D"] + 8.0 * s["B"] * h * s["S"]
+    if family == "ssm_scan":
+        return 4.0 * s["B"] * s["L"] * s["D"] * s["N"]
+    raise KeyError(f"no flops model for family {family!r}")
+
+
+# ---------------------------------------------------------------------------
+# traffic — from the KernelInstance grid × BlockSpec declarations
+# ---------------------------------------------------------------------------
+
+def _varying_dims(grid: tuple[int, ...], blk: Block) -> list[int]:
+    """Grid dims along which the block's index map moves (probe-based,
+    the inverse of ``contracts._revisit_dims``)."""
+    base = tuple(0 for _ in grid)
+    ref = blk.index_map(*base)
+    dims = []
+    for d, g in enumerate(grid):
+        if g <= 1:
+            continue
+        for q in sorted({1, g // 2, g - 1} & set(range(1, g))):
+            if blk.index_map(*(base[:d] + (q,) + base[d + 1:])) != ref:
+                dims.append(d)
+                break
+    return dims
+
+
+def block_transfers(grid: tuple[int, ...], blk: Block) -> int:
+    """DMA count for one block over a row-major grid walk: a transfer
+    happens whenever the index-map offset differs from the previous grid
+    step (Pallas skips the re-fetch on an unchanged offset). Scratch
+    (no map) never crosses HBM."""
+    if blk.index_map is None:
+        return 0
+    if math.prod(grid) <= TRAFFIC_EVAL_CAP:
+        count, last = 0, None
+        for idx in itertools.product(*(range(g) for g in grid)):
+            off = blk.index_map(*idx)
+            if off != last:
+                count += 1
+                last = off
+        return count
+    varying = _varying_dims(grid, blk)
+    if not varying:
+        return 1
+    # offset is a function of dims ≤ max(varying); everything to their
+    # right cycles under an unchanged offset
+    return math.prod(grid[: max(varying) + 1])
+
+
+def hbm_bytes(inst: KernelInstance) -> int:
+    """Modeled HBM traffic: block transfers × block bytes, in and out."""
+    return sum(
+        block_transfers(inst.grid, b) * b.nbytes()
+        for b in inst.inputs + inst.outputs
+    )
+
+
+def vmem_traffic(inst: KernelInstance) -> int:
+    """Modeled on-chip traffic: every grid point reads its input blocks
+    and round-trips its scratch; outputs write once per transfer."""
+    n = math.prod(inst.grid)
+    t = n * sum(b.nbytes() for b in inst.inputs)
+    t += 2 * n * sum(b.nbytes() for b in inst.scratch)
+    t += sum(
+        block_transfers(inst.grid, b) * b.nbytes() for b in inst.outputs
+    )
+    return t
+
+
+def predict_s(
+    inst: KernelInstance, flops: float, pk: Peaks | None = None
+) -> float:
+    """Roofline prediction (seconds) for one instance."""
+    pk = pk or peaks()
+    return max(
+        flops / pk.flops,
+        hbm_bytes(inst) / pk.hbm_bw,
+        vmem_traffic(inst) / pk.vmem_bw,
+    )
+
+
+def predict_us(
+    family: str,
+    shape: dict[str, Any],
+    cand: dict[str, Any] | None = None,
+    *,
+    peaks_: Peaks | None = None,
+    **extra,
+) -> float | None:
+    """Predicted µs for one (family, shape, candidate), or None when the
+    family has no builder / the candidate doesn't build (same degrade
+    contract as ``contracts.check_autotune_candidate``)."""
+    builder = FAMILIES.get(family)
+    if builder is None:
+        return None
+    try:
+        inst = builder(**shape, **(cand or {}))
+        fl = instance_flops(family, shape, **extra)
+    except (TypeError, ValueError, KeyError):
+        return None
+    return predict_s(inst, fl, peaks_) * 1e6
+
+
+def candidate_cost(
+    family: str, shape: dict[str, Any], *, bench=None
+) -> Callable[[dict[str, Any]], float | None] | None:
+    """The autotune hook: a ``cand → predicted µs`` callable for ranking
+    search candidates best-predicted-first, or None when the family is
+    not modeled. Peaks resolve once per search."""
+    if family not in FAMILIES:
+        return None
+    pk = peaks(bench)
+
+    def predict(cand: dict[str, Any]) -> float | None:
+        return predict_us(family, shape, cand, peaks_=pk)
+
+    return predict
+
+
+# ---------------------------------------------------------------------------
+# validate — predictions vs every measured row (BENCH + autotune cache)
+# ---------------------------------------------------------------------------
+
+_BENCH_PATTERNS = [
+    # conv1d/k{K}_sliding — the CONV1D table shape
+    (re.compile(r"^conv1d/k(\d+)_sliding$"),
+     lambda m: ("conv1d", dict(
+         B=1, L=CONV1D["L"], Cin=CONV1D["C"], Cout=CONV1D["C"],
+         K=int(m.group(1)),
+     ), {})),
+    (re.compile(r"^fig1/conv2d_k(\d+)_sliding$"),
+     lambda m: ("conv2d", dict(
+         B=1, H=FIG1["H"], W=FIG1["W"], Cin=FIG1["C"], Cout=FIG1["C"],
+         kh=int(m.group(1)), kw=int(m.group(1)),
+     ), {})),
+    (re.compile(r"^fig2/conv2d_k(\d+)_sliding$"),
+     lambda m: ("conv2d", dict(
+         B=1, H=FIG2["H"], W=FIG2["W"], Cin=FIG2["C"], Cout=FIG2["C"],
+         kh=int(m.group(1)), kw=int(m.group(1)),
+     ), {})),
+    (re.compile(r"^pool/w(\d+)_(max_)?(scan|shift)$"),
+     lambda m: ("pool1d", dict(
+         B=1, L=CONV1D["L"], C=CONV1D["C"], window=int(m.group(1)),
+     ), {"method": m.group(3)})),
+]
+
+
+def _bench_rows(bench: dict) -> Iterable[tuple[str, str, dict, dict, float]]:
+    """(family, row_name, shape, extra, measured_us) for every BENCH row
+    the model covers. im2col rows are a different algorithm (the paper's
+    baseline, not a contract family) and serve/* rows are end-to-end —
+    both are counted as skipped by the caller."""
+    for name, val in bench.items():
+        if not isinstance(val, (int, float)):
+            continue
+        for pat, build in _BENCH_PATTERNS:
+            m = pat.match(name)
+            if m:
+                family, shape, extra = build(m)
+                yield family, name, shape, extra, float(val)
+                break
+
+
+_KEY_PARSERS: dict[str, Callable[[list[str]], tuple[str, dict, dict]]] = {}
+
+
+def parse_key(key: str) -> tuple[str, dict[str, Any], dict[str, Any]] | None:
+    """(family, shape, extra) from an autotune cache key, or None for
+    keys the model doesn't cover. ``extra`` carries non-builder knobs
+    (``method`` for pool entries)."""
+    parts = key.split("|")
+    kind = parts[0]
+    grad = parts[-1] == "grad"
+    if grad:
+        parts = parts[:-1]
+
+    def num(tag: str, p: str) -> int:
+        assert p.startswith(tag), (tag, p)
+        return int(p[len(tag):])
+
+    try:
+        if kind == "conv1d" and len(parts) == 8:
+            prec = parts[7] if parts[7] in ("w8a8", "w8a16") else "fp"
+            shape = dict(
+                B=num("B", parts[1]), L=num("L", parts[2]),
+                Cin=num("Cin", parts[3]), Cout=num("Cout", parts[4]),
+                K=num("K", parts[5]), stride=num("s", parts[6]),
+            )
+            if grad:
+                return "conv1d_bwd_dw", shape, {}
+            return "conv1d", dict(shape, precision=prec), {}
+        if kind == "conv2d" and len(parts) == 9:
+            prec = parts[8] if parts[8] in ("w8a8", "w8a16") else "fp"
+            kh, kw = (int(v) for v in parts[6][1:].split("x"))
+            sh, sw = (int(v) for v in parts[7][1:].split("x"))
+            shape = dict(
+                B=num("B", parts[1]), H=num("H", parts[2]),
+                W=num("W", parts[3]), Cin=num("Cin", parts[4]),
+                Cout=num("Cout", parts[5]), kh=kh, kw=kw, stride=(sh, sw),
+            )
+            if grad:
+                return "conv2d_bwd_dw", shape, {}
+            return "conv2d", dict(shape, precision=prec), {}
+        if kind == "conv1ddw" and len(parts) == 7:
+            prec = parts[6] if parts[6] in ("w8a8", "w8a16") else "fp"
+            return "conv1d_depthwise", dict(
+                B=num("B", parts[1]), L=num("L", parts[2]),
+                C=num("C", parts[3]), K=num("K", parts[4]),
+                stride=num("s", parts[5]), precision=prec,
+            ), {}
+        if kind == "attn_dec" and len(parts) == 7:
+            return "attention_decode", dict(
+                B=num("B", parts[1]), S=num("S", parts[2]),
+                KV=num("KV", parts[3]), G=num("G", parts[4]),
+                D=num("D", parts[5]), kind=parts[6],
+            ), {}
+        if kind == "pool1d" and len(parts) == 7:
+            return "pool1d", dict(
+                B=num("B", parts[1]), L=num("L", parts[2]),
+                C=num("C", parts[3]), window=num("w", parts[4]),
+            ), {}
+    except (AssertionError, ValueError):
+        return None
+    return None
+
+
+#: cache-entry fields that are measurements / non-builder knobs, not
+#: candidate parameters
+_ENTRY_META = {"us", "default_us", "method"}
+
+
+def _cache_rows(cache: dict) -> Iterable[tuple[str, str, dict, dict, dict, float]]:
+    for key, entry in cache.items():
+        if key.startswith("__") or not isinstance(entry, dict):
+            continue
+        us = entry.get("us")
+        if not isinstance(us, (int, float)) or us <= 0:
+            continue
+        parsed = parse_key(key)
+        if parsed is None:
+            continue
+        family, shape, extra = parsed
+        cand = {k: v for k, v in entry.items() if k not in _ENTRY_META}
+        if "method" in entry:
+            extra = dict(extra, method=entry["method"])
+        yield family, key, shape, cand, extra, float(us)
+
+
+def _rank(xs: list[float]) -> list[float]:
+    """Average ranks (ties share the mean rank)."""
+    order = sorted(range(len(xs)), key=lambda i: xs[i])
+    ranks = [0.0] * len(xs)
+    i = 0
+    while i < len(order):
+        j = i
+        while j + 1 < len(order) and xs[order[j + 1]] == xs[order[i]]:
+            j += 1
+        r = (i + j) / 2.0
+        for k in range(i, j + 1):
+            ranks[order[k]] = r
+        i = j + 1
+    return ranks
+
+
+def spearman(xs: list[float], ys: list[float]) -> float:
+    """Spearman rank correlation (average-rank ties; no scipy here)."""
+    if len(xs) != len(ys) or len(xs) < 2:
+        return 0.0
+    rx, ry = _rank(xs), _rank(ys)
+    mx = sum(rx) / len(rx)
+    my = sum(ry) / len(ry)
+    cov = sum((a - mx) * (b - my) for a, b in zip(rx, ry))
+    vx = sum((a - mx) ** 2 for a in rx)
+    vy = sum((b - my) ** 2 for b in ry)
+    if vx == 0 or vy == 0:
+        return 0.0
+    return cov / math.sqrt(vx * vy)
+
+
+def mape(preds: list[float], meas: list[float]) -> float:
+    return sum(
+        abs(p - m) / m for p, m in zip(preds, meas)
+    ) / len(preds)
+
+
+#: bench-sourced families whose prediction order is gated (the pool rows
+#: mix a window-independent O(n) method with an O(n·w) one — the scan
+#: predictions tie by construction, so rank order there is reported but
+#: not gated)
+_GATED_BENCH_FAMILIES = ("conv1d", "conv2d")
+
+
+def validate(
+    bench: dict | str | Path | None = None,
+    cache: dict | str | Path | None = None,
+    *,
+    peaks_: Peaks | None = None,
+) -> tuple[list[Violation], dict[str, Any]]:
+    """Cross-check predictions against every measured row.
+
+    Sources: the ``BENCH_conv.json`` float rows (µs) the model covers and
+    every parseable ``us`` entry in the autotune cache. Per family:
+    MAPE (absolute-scale error — reported, not gated: the probe peaks are
+    coarse) and Spearman ρ (prediction *order* vs measurement — gated at
+    ``SPEARMAN_GATE`` for tuned families and the conv bench families with
+    ≥ ``GATE_MIN_ROWS`` rows, because order is what cost-ranked search
+    relies on).
+    """
+    pk = peaks_ or peaks(bench)
+    bench_rows = _load_bench(bench)
+    if cache is None:
+        from repro.kernels import autotune
+
+        cache = autotune.cache_path()
+    if not isinstance(cache, dict):
+        try:
+            cache = json.loads(Path(cache).read_text())
+        except (OSError, ValueError):
+            cache = {}
+
+    fams: dict[str, dict[str, list]] = {}
+    skipped = 0
+
+    def add(family, name, pred, meas, source):
+        f = fams.setdefault(
+            family, {"pred": [], "meas": [], "names": [], "sources": []}
+        )
+        f["pred"].append(pred)
+        f["meas"].append(meas)
+        f["names"].append(name)
+        f["sources"].append(source)
+
+    n_bench_rows = sum(
+        1 for v in bench_rows.values() if isinstance(v, (int, float))
+    )
+    matched = 0
+    for family, name, shape, extra, meas in _bench_rows(bench_rows):
+        pred = predict_us(family, shape, {}, peaks_=pk, **extra)
+        if pred is None:
+            skipped += 1
+            continue
+        matched += 1
+        add(family, name, pred, meas, "bench")
+    skipped += n_bench_rows - matched
+
+    for family, key, shape, cand, extra, meas in _cache_rows(cache):
+        pred = predict_us(family, shape, cand, peaks_=pk, **extra)
+        if pred is None:
+            skipped += 1
+            continue
+        add(family, key, pred, meas, "autotune")
+
+    violations: list[Violation] = []
+    fam_stats: dict[str, Any] = {}
+    for family, f in sorted(fams.items()):
+        rho = spearman(f["pred"], f["meas"])
+        err = mape(f["pred"], f["meas"])
+        n_tuned = f["sources"].count("autotune")
+        gated = (
+            n_tuned >= GATE_MIN_ROWS
+            or (
+                family in _GATED_BENCH_FAMILIES
+                and len(f["pred"]) >= GATE_MIN_ROWS
+            )
+        )
+        fam_stats[family] = {
+            "n": len(f["pred"]),
+            "n_tuned": n_tuned,
+            "mape": round(err, 3),
+            "spearman": round(rho, 3),
+            "gated": gated,
+        }
+        if gated and rho < SPEARMAN_GATE:
+            violations.append(Violation(
+                "cost_rank", family, f"rho={rho:.3f}",
+                f"prediction order disagrees with measurement over "
+                f"{len(f['pred'])} rows (gate {SPEARMAN_GATE}) — "
+                f"cost-ranked autotune search would early-exit on a "
+                f"lying prior",
+            ))
+    stats = {
+        "rows": sum(len(f["pred"]) for f in fams.values()),
+        "skipped": skipped,
+        "families": fam_stats,
+        "peaks": pk.as_stats(),
+    }
+    return violations, stats
+
+
+# ---------------------------------------------------------------------------
+# sweep — every contract instance must get a finite, positive prediction
+# ---------------------------------------------------------------------------
+
+def check_all(
+    *, quick: bool = False, bench: dict | str | Path | None = None,
+    cache: dict | str | Path | None = None,
+) -> tuple[list[Violation], dict[str, Any]]:
+    """The CLI/CI entry: predict every instance of the contract key space
+    (a non-finite or non-positive prediction is a ``cost_model``
+    violation — the prior autotune would rank on is garbage), then run
+    :func:`validate` against whatever measurements exist."""
+    pk = peaks(bench)
+    violations: list[Violation] = []
+    n = 0
+    fam_pred: dict[str, list[float]] = {}
+    for family, shape, cand in default_space(quick=quick):
+        pred = predict_us(family, shape, cand, peaks_=pk)
+        n += 1
+        if pred is None or not math.isfinite(pred) or pred <= 0:
+            violations.append(Violation(
+                "cost_model", family, str(shape),
+                f"prediction {pred!r} for candidate {cand} — the cost "
+                f"prior must be finite and positive for every contract "
+                f"instance",
+            ))
+            continue
+        fam_pred.setdefault(family, []).append(pred)
+    stats: dict[str, Any] = {
+        "instances": n,
+        "peaks": pk.as_stats(),
+        "pred_us": {
+            fam: {"min": round(min(p), 1), "max": round(max(p), 1)}
+            for fam, p in sorted(fam_pred.items())
+        },
+    }
+    v2, vstats = validate(bench, cache, peaks_=pk)
+    violations.extend(v2)
+    stats["validate"] = vstats
+    return violations, stats

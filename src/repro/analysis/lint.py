@@ -28,6 +28,15 @@ the lint only moves the failure from "first hit in production" to "CI":
     neither may be an f-string — dynamic names fork the telemetry
     namespace the report CLI and CI assertions key on (the registry
     enforces the same at runtime; the lint moves the failure to CI).
+  * **lint_walltime** — ``time.time()`` is banned in the repro package:
+    every duration measured there (dispatch wall time, autotune
+    candidate timing, serve TTFT/decode-step, train step time) must use
+    the monotonic ``time.perf_counter()`` — wall-clock time jumps under
+    NTP slew and produced the misleading timings PR 8 fixed. The few
+    legitimate wall-clock uses (artifact timestamps compared across
+    processes) are allowlisted per file in :data:`WALLCLOCK_ALLOWED`;
+    ``from time import time`` is flagged too (it hides the call form
+    the lint matches).
 """
 from __future__ import annotations
 
@@ -62,6 +71,20 @@ _METRIC_METHODS = {"counter", "gauge", "histogram", "facts"}
 #: tracing entry points whose literal first arg is a span name
 _SPAN_FUNCS = {"span", "instant", "traced"}
 
+#: the explicit wall-clock registry: files (package-relative, posix)
+#: allowed to call ``time.time()``, with the reason — these produce
+#: *timestamps* (points in calendar time, compared across processes or
+#: shown to operators), not durations. Everything else in the package
+#: is measuring elapsed time and must use ``time.perf_counter()``.
+WALLCLOCK_ALLOWED: dict[str, str] = {
+    "repro/distributed/ft.py":
+        "heartbeat files carry wall-clock timestamps whose staleness is "
+        "compared across processes",
+    "repro/checkpoint/manager.py":
+        "the checkpoint manifest records an operator-facing save "
+        "timestamp",
+}
+
 
 def known_sites() -> set[str]:
     """The full literal-site universe: static + dispatch + calibration."""
@@ -91,11 +114,20 @@ def _str_const(node) -> str | None:
     return None
 
 
+def _walltime_allowed(rel: str) -> bool:
+    posix = rel.replace("\\", "/")
+    return any(posix.endswith(k) for k in WALLCLOCK_ALLOWED)
+
+
 class _Linter(ast.NodeVisitor):
-    def __init__(self, rel: str, *, kernel_file: bool, sites: set[str]):
+    def __init__(
+        self, rel: str, *, kernel_file: bool, sites: set[str],
+        walltime_ok: bool = False,
+    ):
         self.rel = rel
         self.kernel_file = kernel_file
         self.sites = sites
+        self.walltime_ok = walltime_ok
         self.violations: list[Violation] = []
 
     def _flag(self, kind: str, node: ast.AST, detail: str) -> None:
@@ -114,9 +146,41 @@ class _Linter(ast.NodeVisitor):
             f"health/calibration namespace",
         )
 
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if (
+            not self.walltime_ok and node.module == "time"
+            and any(a.name == "time" for a in node.names)
+        ):
+            self._flag(
+                "lint_walltime", node,
+                "`from time import time` hides the wall-clock call from "
+                "the lint — import the module and use time.perf_counter() "
+                "for durations (wall clock is for allowlisted artifact "
+                "timestamps only)",
+            )
+        self.generic_visit(node)
+
+    def _lint_walltime(self, call: ast.Call) -> None:
+        if self.walltime_ok:
+            return
+        f = call.func
+        if (
+            isinstance(f, ast.Attribute) and f.attr == "time"
+            and isinstance(f.value, ast.Name) and f.value.id == "time"
+        ):
+            self._flag(
+                "lint_walltime", call,
+                "time.time() in the repro package — durations must use "
+                "the monotonic time.perf_counter() (wall clock jumps "
+                "under NTP slew; this is the regression class PR 8's "
+                "perf_counter fix removed). Genuine timestamps belong in "
+                "lint.WALLCLOCK_ALLOWED with a reason",
+            )
+
     def visit_Call(self, call: ast.Call) -> None:
         self._lint_record(call)
         self._lint_obs_name(call)
+        self._lint_walltime(call)
         for kw in call.keywords:
             if kw.arg == "site":
                 s = _str_const(kw.value)
@@ -219,7 +283,8 @@ def lint_file(
     except SyntaxError as e:
         return [Violation("lint_syntax", "lint", rel, str(e))]
     linter = _Linter(
-        rel, kernel_file="/kernels/" in path.as_posix(), sites=sites
+        rel, kernel_file="/kernels/" in path.as_posix(), sites=sites,
+        walltime_ok=_walltime_allowed(rel),
     )
     linter.visit(tree)
     return linter.violations

@@ -1,0 +1,356 @@
+"""Quant-range interval analysis over the int8 requant chains (DESIGN.md §13).
+
+The PTQ path of DESIGN §7–§9 moves values through three numeric regimes —
+int8 codes, an integer accumulator, and the f32 dequant/requant epilogue —
+and each has a silent failure mode this pass makes *machine-checked*:
+
+  * **acc_overflow** — an int8×int8 contraction accumulates products of
+    magnitude ≤ 127² over ``taps × Cin`` terms; the bound
+    ``127² · taps · Cin`` must stay inside int32 (the ``acc_dtype`` the
+    §11 contract already requires). Checked for every quant kernel
+    instance of the contract key space AND every shipped chain stage.
+  * **requant_clip** — a chained producer requantizes onto its consumer's
+    calibration grid: ``q = clip(round(y / out_scale), -127, 127)``. The
+    chain algebra (``calibrate.Calibration.spec``) sets ``out_scale`` to
+    the consumer's ``x_scale``, so the consumer's calibrated interval
+    ``[-127·s, 127·s]`` maps exactly onto the int8 code range. A spec
+    whose ``out_scale`` is *smaller* than the consumer's grid pushes
+    calibrated-in-range values past ±127 — real saturation error, not
+    the intended percentile tail clipping.
+  * **scale_fold** — the fused int8-KV decode read (DESIGN §9) folds the
+    dequant scale out of the dot products: ``(q·k_q)·s_k`` requires
+    ``s_k`` constant along the contracted head_dim axis, which the
+    per-(pos, head) scale layout of ``models.common.kv_scale_defs``
+    guarantees (row axis collapsed to 1). A scale granularity that varies
+    along the contraction axis makes the fold algebraically wrong.
+
+Zero/NaN scales are **unreachable**, not safe: ``quant.apply`` screens
+them at quantize time and ``ops._guard_quant_scales`` falls the dispatch
+back to float, so a chain carrying one is reported with status
+``"unreachable"`` — the guarded fallback serves it — never ``"safe"``
+(interval claims proved under a poisoned scale would be vacuous).
+
+Intervals here are exact worst-case bounds over the code domain: int8
+codes live in ``[-127, 127]`` by construction (the quantizers clip), max
+pools are monotone and grid-preserving (max of codes == codes of max on
+a shared per-tensor scale — the edge_cnn chain rides codes through its
+pools), and the only operations that can leave the domain are the
+accumulator (checked against int32) and the requant (checked against the
+code range via the scale ratio).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Iterable
+
+from repro.analysis.contracts import Violation, default_space
+
+INT32_MAX = 2 ** 31 - 1
+CODE_MAX = 127  # int8 quantizers clip to ±127 (-128 is never produced)
+
+#: accumulator reduction length (taps × contracted channels) above which
+#: the int32 bound 127²·n overflows — ``127² · 133153 > 2³¹ - 1``
+OVERFLOW_REDUCE_LEN = INT32_MAX // (CODE_MAX * CODE_MAX) + 1
+
+#: tolerated relative out_scale-vs-consumer-grid mismatch (float32
+#: round-trip noise in a persisted spec, not a real regrid)
+SCALE_RTOL = 1e-4
+
+
+@dataclasses.dataclass(frozen=True)
+class Interval:
+    """Closed real interval — the abstract value domain."""
+
+    lo: float
+    hi: float
+
+    @classmethod
+    def codes(cls) -> "Interval":
+        return cls(-CODE_MAX, CODE_MAX)
+
+    @classmethod
+    def for_scale(cls, scale: float) -> "Interval":
+        """Dequantized-value interval a concrete calibration scale claims:
+        every code maps into ``[-127·s, 127·s]``. With absmax calibration
+        this covers the observed data exactly; with percentile
+        calibration values beyond the percentile point saturate to the
+        endpoints (intended clipping — the interval is still the true
+        range of what the int8 path *represents*)."""
+        return cls(-CODE_MAX * scale, CODE_MAX * scale)
+
+    def scaled(self, s: float) -> "Interval":
+        lo, hi = self.lo * s, self.hi * s
+        return Interval(min(lo, hi), max(lo, hi))
+
+    def contains(self, other: "Interval") -> bool:
+        return self.lo <= other.lo and other.hi <= self.hi
+
+    def width(self) -> float:
+        return self.hi - self.lo
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One quant-graph producer: an int8×int8 contraction + epilogue.
+
+    ``taps`` is the filter footprint (K for conv1d, kh·kw for conv2d, 1
+    for a GEMM), ``cin`` the contracted channel count (1 for depthwise).
+    ``pools`` are the max-pool windows the stage's int8 output codes ride
+    through before reaching the chain consumer (monotone + grid-
+    preserving, so the code interval passes unchanged).
+    """
+
+    site: str
+    taps: int
+    cin: int
+    pools: tuple[int, ...] = ()
+
+    def reduce_len(self) -> int:
+        return self.taps * self.cin
+
+    def acc_bound(self) -> int:
+        return CODE_MAX * CODE_MAX * self.reduce_len()
+
+
+#: shipped chain-site geometry — mirrors the model code the sites live in
+#: (whisper.frontend_defs, examples/edge_cnn.init_params, llava.patch_embed
+#: + transformer.projector_apply); a site missing here fails check_all
+#: loudly rather than silently passing.
+SITE_GEOM: dict[str, Stage] = {
+    # whisper conv frontend: two k=3 conv1d over 80 mels → d_model=1024
+    "whisper/conv1": Stage("whisper/conv1", taps=3, cin=80),
+    "whisper/conv2": Stage("whisper/conv2", taps=3, cin=1024),
+    # edge_cnn: 5×5×1→16, then 3×3×16→32 and 3×3×32→32, with 2×2 max
+    # pools between the conv stages (codes ride through them)
+    "edge/c1": Stage("edge/c1", taps=25, cin=1, pools=(2,)),
+    "edge/c2": Stage("edge/c2", taps=9, cin=16, pools=(2,)),
+    "edge/c3": Stage("edge/c3", taps=9, cin=32),
+    # llava: patch embedding conv2d k=14 s=14 over RGB → projector GEMM
+    # contracting the 1152-dim vision axis (the chain's single dequant)
+    "llava/patch_embed": Stage("llava/patch_embed", taps=196, cin=3),
+    "llava/projector": Stage("llava/projector", taps=1, cin=1152),
+}
+
+
+def _scale_reason(s) -> str | None:
+    """Reuse the upstream guard's verdict when importable (the runtime
+    screen in ``quant.apply``); inline fallback keeps the pass usable
+    without the quant layer."""
+    try:
+        from repro.quant.apply import _scale_reason as upstream
+
+        return upstream(s)
+    except Exception:  # noqa: BLE001 — analysis must not require quant
+        if s is None:
+            return None
+        if isinstance(s, float) and math.isnan(s):
+            return "quant_scale_nan"
+        if s == 0:
+            return "quant_scale_zero"
+        return None
+
+
+def shipped_chains() -> list[tuple[str, ...]]:
+    """The quant requant chains as site paths, assembled from
+    ``quant.apply.CHAINS`` (producer → consumer edges): heads are
+    producers no other site feeds."""
+    from repro.quant.apply import CHAINS
+
+    heads = [s for s in CHAINS if s not in set(CHAINS.values())]
+    paths = []
+    for head in sorted(heads):
+        path = [head]
+        while path[-1] in CHAINS:
+            path.append(CHAINS[path[-1]])
+        paths.append(tuple(path))
+    return paths
+
+
+# ---------------------------------------------------------------------------
+# checks
+# ---------------------------------------------------------------------------
+
+def check_stage(stage: Stage) -> list[Violation]:
+    """Accumulator proof for one int8×int8 contraction stage."""
+    bound = stage.acc_bound()
+    if bound > INT32_MAX:
+        return [Violation(
+            "acc_overflow", "ranges", stage.site,
+            f"int8×int8 accumulator bound 127²·{stage.taps}·{stage.cin} "
+            f"= {bound} exceeds int32 max {INT32_MAX} "
+            f"(reduce_len {stage.reduce_len()} ≥ {OVERFLOW_REDUCE_LEN})",
+        )]
+    return []
+
+
+def check_requant(
+    site: str, out_scale: float, consumer_scale: float
+) -> list[Violation]:
+    """Requant-onto-consumer-grid proof with concrete scales: the
+    producer's calibrated output interval (the consumer's input claim,
+    ``[-127·s_cons, 127·s_cons]``) divided by ``out_scale`` must land
+    inside the int8 code range."""
+    code_hi = CODE_MAX * consumer_scale / out_scale
+    if code_hi > CODE_MAX * (1.0 + SCALE_RTOL):
+        return [Violation(
+            "requant_clip", "ranges", site,
+            f"requant maps the consumer's calibrated interval to codes "
+            f"±{code_hi:.1f} (out_scale {out_scale:.3g} < consumer grid "
+            f"{consumer_scale:.3g}) — calibrated-in-range values "
+            f"saturate, which is numeric error, not the intended "
+            f"percentile tail clipping",
+        )]
+    return []
+
+
+def check_kv_fold(
+    scale_shape: tuple[int, ...] | None = None,
+    *,
+    head_dim: int = 8,
+) -> list[Violation]:
+    """Dequant-fold proof for the fused int8-KV decode read: the scale
+    leaf paired with a ``(…, kv_seq, kv_heads, head_dim)`` cache leaf
+    must be constant along head_dim — the axis both decode dots contract
+    (``(q·k_q)·s_k``) or broadcast rows over (``(p·s_v)·v_q``). Default:
+    derive the shipped layout from ``models.common.kv_scale_defs``; a
+    ``scale_shape`` whose last axis is not collapsed is the seeded
+    scale-fold mismatch fixture."""
+    if scale_shape is None:
+        from repro.models.common import ParamDef, kv_scale_defs
+
+        kv = ParamDef(
+            (1, 2, 4, 2, head_dim),
+            ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+            init="zeros", dtype="int8",
+        )
+        scale_shape = kv_scale_defs({"k": kv})["k_scale"].shape
+    if scale_shape[-1] != 1:
+        return [Violation(
+            "scale_fold", "ranges", "kv_cache",
+            f"KV scale granularity {scale_shape} varies along the "
+            f"contracted head_dim axis (last dim {scale_shape[-1]} != 1) "
+            f"— folding the scale out of the decode dot "
+            f"((q·k_q)·s_k, DESIGN §9) is only valid for a scale "
+            f"constant over the contraction",
+        )]
+    return []
+
+
+def _quant_space_stages(quick: bool = False) -> Iterable[Stage]:
+    """Every int8×int8 kernel instance of the contract key space, as an
+    accumulator stage (the same shapes the §11 safety gate sweeps)."""
+    seen = set()
+    for family, shape, _cand in default_space(quick=quick):
+        if shape.get("precision") != "w8a8":
+            continue
+        if family == "conv1d":
+            taps, cin = shape["K"], shape["Cin"]
+        elif family == "conv2d":
+            taps, cin = shape["kh"] * shape["kw"], shape["Cin"]
+        elif family == "conv1d_depthwise":
+            taps, cin = shape["K"], 1
+        else:
+            continue
+        key = (family, taps, cin)
+        if key in seen:
+            continue
+        seen.add(key)
+        yield Stage(f"{family}|taps{taps}|Cin{cin}", taps=taps, cin=cin)
+
+
+def check_chain(
+    path: tuple[str, ...],
+    spec: dict[str, dict[str, Any]] | None = None,
+) -> tuple[str, list[Violation], dict[str, Any]]:
+    """Prove one requant chain: (status, violations, detail).
+
+    Status is ``"safe"`` (every stage's accumulator bounded, every
+    requant edge maps onto its consumer grid), ``"unreachable"`` (a
+    zero/NaN scale in ``spec`` — the upstream guards fall this chain
+    back to float, so no int8 claim is made, and none is *proved*
+    either), or ``"violated"``.
+
+    Without a concrete ``spec`` the requant edges are proved
+    *symbolically*: ``calibrate.Calibration.spec`` constructs
+    ``out_scale`` as the consumer's ``x_scale``, so the scale ratio is
+    1 by construction and only the accumulator bounds carry numeric
+    content. With a spec (e.g. a persisted calibration), the ratio is
+    checked numerically — a mis-wired spec is exactly what the symbolic
+    argument cannot see.
+    """
+    violations: list[Violation] = []
+    acc_bits = 0.0
+    for site in path:
+        stage = SITE_GEOM.get(site)
+        if stage is None:
+            violations.append(Violation(
+                "acc_overflow", "ranges", site,
+                "chain site has no geometry in ranges.SITE_GEOM — the "
+                "accumulator cannot be bounded; register the stage",
+            ))
+            continue
+        violations.extend(check_stage(stage))
+        acc_bits = max(acc_bits, math.log2(stage.acc_bound()))
+
+    mode = "symbolic"
+    if spec is not None:
+        mode = "concrete"
+        for prod, cons in zip(path, path[1:]):
+            out_scale = (spec.get(prod) or {}).get("out_scale")
+            cons_scale = (spec.get(cons) or {}).get("x_scale")
+            for s in (out_scale, cons_scale):
+                if _scale_reason(s):
+                    return "unreachable", [], {
+                        "mode": mode,
+                        "edge": f"{prod}->{cons}",
+                        "reason": _scale_reason(s),
+                    }
+            if out_scale is None or cons_scale is None:
+                continue  # uncalibrated edge: no requant happens (dequant)
+            violations.extend(check_requant(prod, out_scale, cons_scale))
+
+    status = "violated" if violations else "safe"
+    detail = {
+        "mode": mode,
+        "acc_bits": round(acc_bits, 1),
+        "headroom_bits": round(31 - acc_bits, 1),
+        "pools": {
+            s: list(SITE_GEOM[s].pools)
+            for s in path if s in SITE_GEOM and SITE_GEOM[s].pools
+        },
+    }
+    return status, violations, detail
+
+
+def check_all(
+    *,
+    spec: dict[str, dict[str, Any]] | None = None,
+    quick: bool = False,
+) -> tuple[list[Violation], dict[str, Any]]:
+    """The CLI/CI entry: prove every shipped chain, every quant kernel
+    accumulator of the contract key space, and the KV dequant-fold
+    layout. Returns (violations, stats) like the sibling passes."""
+    violations: list[Violation] = []
+    chains: dict[str, Any] = {}
+    for path in shipped_chains():
+        status, v, detail = check_chain(path, spec)
+        violations.extend(v)
+        chains["->".join(path)] = {"status": status, **detail}
+
+    n = 0
+    worst = 0
+    for stage in _quant_space_stages(quick=quick):
+        n += 1
+        violations.extend(check_stage(stage))
+        worst = max(worst, stage.acc_bound())
+
+    violations.extend(check_kv_fold())
+
+    stats = {
+        "chains": chains,
+        "kernel_stages": n,
+        "acc_bits_max": round(math.log2(worst), 1) if worst else 0.0,
+        "overflow_reduce_len": OVERFLOW_REDUCE_LEN,
+    }
+    return violations, stats

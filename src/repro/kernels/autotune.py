@@ -214,10 +214,23 @@ class Result:
     default_us: float
     best_us: float
     pruned: int = 0  # candidates skipped on a contract verdict, untimed
+    timed: int = 0  # configs actually measured (incl. the default)
+    cost_skipped: int = 0  # ranked early-exit leftovers, untimed
+    ranked: bool = False  # candidates were ordered by the cost model
 
     @property
     def speedup(self) -> float:
         return self.default_us / self.best_us if self.best_us else 1.0
+
+
+#: ranked search stops after this many consecutive candidates fail to
+#: improve the best measured time (prediction order means the rest are
+#: predicted even slower); 0 disables early exit
+COST_PATIENCE = 3
+
+
+def _cost_patience() -> int:
+    return int(os.environ.get("REPRO_AUTOTUNE_PATIENCE", COST_PATIENCE))
 
 
 def _contract_checker(family: str, shape: dict[str, Any]):
@@ -238,32 +251,93 @@ def _contract_checker(family: str, shape: dict[str, Any]):
     return check
 
 
+def _cost_model(family: str, shape: dict[str, Any]):
+    """Static roofline predictions for the search (``repro.analysis``,
+    DESIGN.md §13): candidates are *ranked* best-predicted-first so the
+    measured-time curve is front-loaded and the search can early-exit
+    once measurements stop improving on the prediction order. Same
+    degradation contract as :func:`_contract_checker`: model unavailable
+    → no ranking (the search must degrade to exhaustive measurement,
+    never crash). ``REPRO_AUTOTUNE_COST=0`` is the kill switch."""
+    if os.environ.get("REPRO_AUTOTUNE_COST", "1") == "0":
+        return None
+
+    predict = None
+
+    def cost(cand: dict[str, Any]):
+        nonlocal predict
+        if predict is None:
+            try:
+                from repro.analysis import costmodel
+
+                predict = costmodel.candidate_cost(family, shape)
+            except Exception:  # noqa: BLE001 — analysis layer optional
+                predict = False
+        if not predict:
+            return None
+        try:
+            return predict(cand)
+        except Exception:  # noqa: BLE001 — a bad prior must not crash
+            return None
+
+    return cost
+
+
+def _ranked(
+    cands: list[dict[str, Any]],
+    cost: Callable[[dict[str, Any]], float | None] | None,
+) -> tuple[list[dict[str, Any]], bool]:
+    """Candidates ordered by predicted time (stable), ranked=True only
+    when every candidate got a finite prediction — a partially-predicted
+    ordering would make the early-exit compare apples to nothing."""
+    if cost is None or not cands:
+        return cands, False
+    preds = [cost(c) for c in cands]
+    if any(p is None or not (p == p and p != float("inf")) for p in preds):
+        return cands, False
+    order = sorted(range(len(cands)), key=lambda i: preds[i])
+    return [cands[i] for i in order], True
+
+
 def _search(
     key: str,
     run: Callable[[dict[str, Any]], jax.Array],
     candidates: Iterable[dict[str, Any]],
     default: dict[str, Any],
     contract: Callable[[dict[str, Any]], Any] | None = None,
+    cost: Callable[[dict[str, Any]], float | None] | None = None,
 ) -> Result:
-    """Time every candidate, persist the winner, return the result.
+    """Time candidates (cost-ranked when a model is available), persist
+    the winner, return the result.
+
+    With ``cost``, candidates are timed best-predicted-first and the
+    search stops after ``COST_PATIENCE`` consecutive candidates fail to
+    improve the best measured time — on a faithful prediction order the
+    remainder is predicted even slower, so measuring it buys nothing
+    (``ANALYSIS.json``'s per-family Spearman gate is what keeps that
+    order honest). Fewer candidates timed, same winner — asserted by
+    tests/test_costmodel.py and the CI autotune step. The default config
+    is always timed first (it is what untuned dispatch runs).
 
     Observability: the whole search runs under an ``autotune.search``
     span with one ``autotune.candidate`` span per timed config (the
     candidate timings become visible on the trace timeline), and the
-    per-key ``autotune.searches`` / ``candidates`` / ``pruned`` counters
-    land in the metrics registry unconditionally — a search runs once
-    per shape, so always-on counting costs nothing that matters."""
+    per-key ``autotune.searches`` / ``candidates`` / ``pruned`` /
+    ``cost_skipped`` counters land in the metrics registry
+    unconditionally — a search runs once per shape, so always-on
+    counting costs nothing that matters."""
     reg = obs_metrics.REGISTRY
     reg.counter("autotune.searches").inc(1.0, key=key)
+    cands = [c for c in candidates if c != default]
+    cands, ranked = _ranked(cands, cost)
+    patience = _cost_patience() if ranked else 0
     with obs_trace.span("autotune.search", key=key):
         with obs_trace.span("autotune.candidate", key=key, cand="default"):
             default_t = _time_fn(lambda: run(default))
         reg.counter("autotune.candidates").inc(1.0, key=key)
         best_cfg, best_t = dict(default), default_t
-        pruned = 0
-        for cand in candidates:
-            if cand == default:
-                continue
+        pruned = timed = cost_skipped = since_improve = 0
+        for i, cand in enumerate(cands):
             if contract is not None:
                 verdict = contract(cand)
                 if verdict is not None:
@@ -282,13 +356,27 @@ def _search(
                     t = _time_fn(lambda: run(cand))
             except Exception:  # candidate invalid for this shape — skip
                 continue
+            timed += 1
             reg.counter("autotune.candidates").inc(1.0, key=key)
             if t < best_t:
                 best_cfg, best_t = dict(cand), t
+                since_improve = 0
+            else:
+                since_improve += 1
+            if patience and since_improve >= patience:
+                cost_skipped = len(cands) - i - 1
+                if cost_skipped:
+                    reg.counter("autotune.cost_skipped").inc(
+                        float(cost_skipped), key=key
+                    )
+                break
     best_cfg["us"] = round(best_t * 1e6, 2)
     best_cfg["default_us"] = round(default_t * 1e6, 2)
     record(key, best_cfg)
-    return Result(key, best_cfg, default_t * 1e6, best_t * 1e6, pruned)
+    return Result(
+        key, best_cfg, default_t * 1e6, best_t * 1e6, pruned,
+        timed=timed + 1, cost_skipped=cost_skipped, ranked=ranked,
+    )
 
 
 def autotune_conv1d(
@@ -363,12 +451,14 @@ def autotune_conv1d(
         "tile_l": min(DEFAULT_TILE_L, out_len), "cin_block": 0,
         "cout_block": 0, "regime": regime_for(K),
     }
-    contract = _contract_checker("conv1d", dict(
+    cshape = dict(
         B=B, L=L, Cin=Cin, Cout=Cout, K=K, stride=stride,
         precision=precision,
         dtype=x.dtype.name if precision == "fp" else "float32",
-    ))
-    return _search(key, run, cands, default, contract=contract)
+    )
+    return _search(key, run, cands, default,
+                   contract=_contract_checker("conv1d", cshape),
+                   cost=_cost_model("conv1d", cshape))
 
 
 def autotune_conv2d(
@@ -416,12 +506,14 @@ def autotune_conv2d(
         "tile_h": min(DEFAULT_TILE_H, oh), "tile_w": min(DEFAULT_TILE_W, ow),
         "cin_block": 0, "cout_block": 0, "regime": regime,
     }
-    contract = _contract_checker("conv2d", dict(
+    cshape = dict(
         B=B, H=H, W=W, Cin=Cin, Cout=Cout, kh=kh, kw=kw, stride=stride,
         precision=precision,
         dtype=x.dtype.name if precision == "fp" else "float32",
-    ))
-    return _search(key, run, cands, default, contract=contract)
+    )
+    return _search(key, run, cands, default,
+                   contract=_contract_checker("conv2d", cshape),
+                   cost=_cost_model("conv2d", cshape))
 
 
 def autotune_conv1d_depthwise(
@@ -458,11 +550,13 @@ def autotune_conv1d_depthwise(
         for cb in _blocks_for(C)
     ]
     default = {"tile_l": min(DEFAULT_TILE_L, out_len), "c_block": 0}
-    contract = _contract_checker("conv1d_depthwise", dict(
+    cshape = dict(
         B=B, L=L, C=C, K=K, stride=stride, precision=precision,
         dtype="float32",
-    ))
-    return _search(key, run, cands, default, contract=contract)
+    )
+    return _search(key, run, cands, default,
+                   contract=_contract_checker("conv1d_depthwise", cshape),
+                   cost=_cost_model("conv1d_depthwise", cshape))
 
 
 def autotune_attention_decode(
@@ -529,10 +623,10 @@ def autotune_attention_decode(
         S if resolved_impl != "pallas" else min(attn_dec.DEFAULT_BLOCK_S, S)
     )
     default = {"block_s": default_bs, "h_block": 1}
-    contract = _contract_checker("attention_decode", dict(
-        B=B, S=S, KV=KV, G=H // KV, D=D, kind=kind,
-    ))
-    return _search(key, run, cands, default, contract=contract)
+    cshape = dict(B=B, S=S, KV=KV, G=H // KV, D=D, kind=kind)
+    return _search(key, run, cands, default,
+                   contract=_contract_checker("attention_decode", cshape),
+                   cost=_cost_model("attention_decode", cshape))
 
 
 def autotune_pool1d(
@@ -601,7 +695,9 @@ def autotune_conv1d_grad(
         t for t in (tile_candidates or TILE_L_CANDIDATES) if t <= out_len
     ] or [min(DEFAULT_TILE_L, out_len)]
     default = {"tile_l": min(DEFAULT_TILE_L, out_len)}
-    return _search(key, run, [{"tile_l": t} for t in tiles], default)
+    cshape = dict(B=B, L=L, Cin=Cin, Cout=Cout, K=K, stride=stride)
+    return _search(key, run, [{"tile_l": t} for t in tiles], default,
+                   cost=_cost_model("conv1d_bwd_dw", cshape))
 
 
 def autotune_conv2d_grad(
@@ -641,4 +737,7 @@ def autotune_conv2d_grad(
     default = {
         "tile_h": min(DEFAULT_TILE_H, oh), "tile_w": min(DEFAULT_TILE_W, ow),
     }
-    return _search(key, run, cands, default)
+    cshape = dict(B=B, H=H, W=W, Cin=Cin, Cout=Cout, kh=kh, kw=kw,
+                  stride=stride)
+    return _search(key, run, cands, default,
+                   cost=_cost_model("conv2d_bwd_dw", cshape))

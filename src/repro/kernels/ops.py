@@ -500,7 +500,9 @@ def conv1d(
                 accumulate=accumulate, out_dtype=out_dtype,
             )
 
-        return _ladder(site, key=qkey, operands=(x, w, bias), rungs=[
+        return _ladder(site, key=qkey,
+                       operands=(x, w, bias, w_scale, x_scale, out_scale),
+                       rungs=[
             ("pallas", lambda: sliding_conv_quant.conv1d_quant_pallas(
                 x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
                 mode=precision, activation=activation, out_dtype=out_dtype,
@@ -673,7 +675,9 @@ def conv1d_depthwise(
                 accumulate=accumulate, out_dtype=out_dtype,
             )
 
-        return _ladder(site, key=key, operands=(x, w, bias), rungs=[
+        return _ladder(site, key=key,
+                       operands=(x, w, bias, w_scale, x_scale, out_scale),
+                       rungs=[
             ("pallas", lambda: sliding_conv_quant.conv1d_depthwise_quant_pallas(
                 x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
                 mode=precision, stride=stride,
@@ -894,7 +898,9 @@ def conv2d(
                 accumulate=accumulate, out_dtype=out_dtype,
             )
 
-        return _ladder(site, key=qkey, operands=(x, w, bias), rungs=[
+        return _ladder(site, key=qkey,
+                       operands=(x, w, bias, w_scale, x_scale, out_scale),
+                       rungs=[
             ("pallas", lambda: sliding_conv_quant.conv2d_quant_pallas(
                 x, w, w_scale, bias, x_scale=x_scale, out_scale=out_scale,
                 mode=precision, activation=activation, out_dtype=out_dtype,

@@ -185,7 +185,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, rules=None,
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path | None):
-    t0 = time.time()
+    t0 = time.perf_counter()
     mesh_tag = "multi" if multi_pod else "single"
     tag = f"{arch}__{shape_name}__{mesh_tag}"
     try:
@@ -194,9 +194,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path | None):
             rec = {"cell": tag, **meta}
             print(f"[dryrun] {tag}: SKIP ({meta['skipped']})")
         else:
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost_raw = compiled.cost_analysis()
             if isinstance(cost_raw, (list, tuple)):  # jax 0.4.x: per-device list

@@ -342,17 +342,40 @@ def analyze(text: str) -> dict[str, float]:
     return {"flops": h.entry_flops(), "bytes": h.entry_bytes()}
 
 
+def _array_leaves(items):
+    """Flatten nested containers to array-likes: the int8 dispatch sites
+    hold structured operands — KV-cache dicts whose ``<name>_scale``
+    siblings ride next to the code leaves, ``QuantizedWeight`` (a
+    NamedTuple bundling ``(q, scale, …)``) — and a counter that skips
+    structure undercounts exactly the f32 scale arrays the fused int8
+    kernels read."""
+    for a in items:
+        if a is None:
+            continue
+        if isinstance(a, dict):
+            yield from _array_leaves(a.values())
+        elif isinstance(a, (list, tuple)):
+            yield from _array_leaves(a)
+        else:
+            yield a
+
+
 def est_hbm_bytes(*arrays) -> int:
     """Estimated HBM traffic for one kernel call: operands + results,
     each counted once — the same per-op convention :meth:`HloCost.comp_bytes`
     uses, applied to the abstract values a dispatch site holds (jax
-    arrays, tracers, anything with ``.shape``/``.dtype``). The obs
-    dispatch counters (``dispatch.est_hbm_bytes_total``) feed this next
-    to measured wall time so per-key arithmetic intensity is readable
-    straight off the metrics snapshot. Items without a shape/dtype (None
-    biases, scalars without dtype) are skipped."""
+    arrays, tracers, anything with ``.shape``/``.dtype``). Nested
+    containers (dicts, tuples, NamedTuples like ``QuantizedWeight``) are
+    flattened so the f32 scale siblings of int8 operands count — the
+    fused int8-KV decode kernel reads one per-(pos, head) scale row per
+    code row, and the quantized conv kernels read their weight/act scale
+    arrays; skipping them made ``dispatch.est_hbm_bytes_total``
+    undercount int8 paths. The obs dispatch counters feed this next to
+    measured wall time so per-key arithmetic intensity is readable
+    straight off the metrics snapshot. Leaves without a shape/dtype
+    (None biases, plain Python scalars) are skipped."""
     total = 0
-    for a in arrays:
+    for a in _array_leaves(arrays):
         shape = getattr(a, "shape", None)
         dtype = getattr(a, "dtype", None)
         if shape is None or dtype is None:

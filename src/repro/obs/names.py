@@ -28,6 +28,7 @@ METRICS = frozenset({
     "autotune.searches",
     "autotune.candidates",
     "autotune.pruned",
+    "autotune.cost_skipped",       # ranked early-exit leftovers, untimed
     # health registry mirror (site/reason/action labels)
     "health.events",
     # serving

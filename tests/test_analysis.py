@@ -385,3 +385,114 @@ def test_cli_fails_on_violation(tmp_path):
     report = json.loads(out.read_text())
     assert report["ok"] is False
     assert report["violations"][0]["kind"] == "lint_reason"
+
+
+# ---------------------------------------------------------------------------
+# lint_walltime: the time.time() ban (PR 8's perf_counter fix, enforced)
+# ---------------------------------------------------------------------------
+
+def test_lint_flags_walltime_call(tmp_path):
+    f = tmp_path / "timed.py"
+    f.write_text(
+        "import time\n"
+        "t0 = time.time()\n"
+        "elapsed = time.time() - t0\n"
+    )
+    vio = lint.lint_file(f)
+    assert _kinds(vio) == ["lint_walltime", "lint_walltime"]
+    assert "perf_counter" in vio[0].detail
+
+
+def test_lint_flags_from_time_import_time(tmp_path):
+    f = tmp_path / "hidden.py"
+    f.write_text("from time import time\nt = time()\n")
+    vio = lint.lint_file(f)
+    assert _kinds(vio) == ["lint_walltime"]
+    # importing anything else from time is fine
+    g = tmp_path / "ok.py"
+    g.write_text("from time import perf_counter\nt = perf_counter()\n")
+    assert lint.lint_file(g) == []
+
+
+def test_lint_walltime_allowlist_exempts_registered_files(tmp_path):
+    d = tmp_path / "repro" / "distributed"
+    d.mkdir(parents=True)
+    f = d / "ft.py"
+    f.write_text("import time\nstamp = time.time()\n")
+    rel = "repro/distributed/ft.py"
+    assert rel in lint.WALLCLOCK_ALLOWED  # registry entry carries a reason
+    assert lint.WALLCLOCK_ALLOWED[rel]
+    assert lint.lint_file(f, rel=rel) == []
+    # the same code under an unregistered path is flagged
+    assert _kinds(lint.lint_file(f, rel="repro/kernels/ft.py")) \
+        == ["lint_walltime"]
+
+
+def test_lint_walltime_ignores_perf_counter(tmp_path):
+    f = tmp_path / "mono.py"
+    f.write_text(
+        "import time\n"
+        "t0 = time.perf_counter()\n"
+        "dt = time.perf_counter() - t0\n"
+    )
+    assert lint.lint_file(f) == []
+
+
+# ---------------------------------------------------------------------------
+# CLI: the two new passes + the schema-2 report contract
+# ---------------------------------------------------------------------------
+
+def test_cli_costmodel_and_ranges_pass(tmp_path):
+    import json
+
+    from repro.analysis.__main__ import SCHEMA, main
+
+    out = tmp_path / "ANALYSIS.json"
+    rc = main(["--costmodel", "--ranges", "--quick", "--json", str(out)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["schema"] == SCHEMA == 2
+    assert report["ok"] is True
+    cm = report["stats"]["costmodel"]
+    assert cm["instances"] > 50
+    assert {"gflops", "hbm_gbps", "vmem_gbps", "source"} \
+        <= set(cm["peaks"])
+    fams = cm["validate"]["families"]
+    for d in fams.values():  # the MAPE/Spearman table CI uploads
+        assert {"n", "mape", "spearman", "gated"} <= set(d)
+    rg = report["stats"]["ranges"]
+    assert rg["chains"]
+    assert all(c["status"] == "safe" for c in rg["chains"].values())
+
+
+def test_load_report_reads_legacy_schema1(tmp_path):
+    import json
+
+    from repro.analysis.__main__ import load_report
+
+    legacy = {  # the PR 7/8 shape: no "schema", three stats sections
+        "ok": True,
+        "violations": [],
+        "stats": {"contracts": {"instances": 7}, "bloat": {}, "lint": {}},
+        "elapsed_s": 1.0,
+    }
+    p = tmp_path / "legacy.json"
+    p.write_text(json.dumps(legacy))
+    rep = load_report(str(p))
+    assert rep["schema"] == 1
+    assert rep["stats"]["contracts"]["instances"] == 7
+    # the sections that postdate the report read as empty, not KeyError
+    assert rep["stats"]["costmodel"] == {}
+    assert rep["stats"]["ranges"] == {}
+
+
+def test_load_report_passthrough_schema2(tmp_path):
+    import json
+
+    from repro.analysis.__main__ import load_report, main
+
+    out = tmp_path / "ANALYSIS.json"
+    assert main(["--ranges", "--json", str(out)]) == 0
+    rep = load_report(str(out))
+    assert rep["schema"] == 2
+    assert rep["stats"]["ranges"]["chains"]

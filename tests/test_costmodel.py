@@ -1,0 +1,342 @@
+"""repro.analysis.costmodel: the static roofline model and its autotune hook.
+
+Three claims under test, mirroring the CI gates:
+
+  * the model is *total and sane* over the contract key space — every
+    instance gets a finite positive prediction, peaks resolve through
+    the env > probe-row > prior ladder, and the block-transfer traffic
+    model moves the right way (smaller tiles re-fetch more halo);
+  * prediction *order* matches measurement — Spearman >= 0.7 on the
+    committed BENCH rows for the gated conv families, and the
+    predicted-best config lands in the measured top-3;
+  * the cost-ranked ``_search`` times strictly fewer candidates than the
+    exhaustive search while returning the identical winner (the whole
+    point of the prior), and the ``REPRO_AUTOTUNE_COST=0`` kill switch
+    restores exhaustive behavior.
+
+Plus the ``est_hbm_bytes`` satellite: structured int8 operands (dicts,
+NamedTuples) must contribute their f32 scale siblings, and the
+view-vs-fused decode byte ratio is pinned so the undercount can't
+silently return.
+"""
+import json
+import pathlib
+
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.analysis import costmodel  # noqa: E402
+from repro.analysis.contracts import FAMILIES, default_space  # noqa: E402
+from repro.kernels import autotune  # noqa: E402
+from repro.launch.hlo_flops import est_hbm_bytes  # noqa: E402
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+BENCH = REPO / "BENCH_conv.json"
+
+#: memory-bound conv1d shape: the traffic term dominates the roofline
+#: max(), so predictions differ per tile (compute-bound shapes tie — the
+#: flops term is candidate-independent within one key)
+MEMBOUND = dict(B=1, L=262144, Cin=2, Cout=2, K=9, stride=1,
+                precision="fp", dtype="float32")
+
+
+def _tile_cand(t):
+    return {"tile_l": t, "cin_block": 0, "cout_block": 0,
+            "regime": "generic"}
+
+
+# ---------------------------------------------------------------------------
+# peaks resolution ladder
+# ---------------------------------------------------------------------------
+
+def test_peaks_priors_when_no_bench():
+    pk = costmodel.peaks({})
+    assert pk.source == "prior+balance_prior"
+    assert pk.flops == costmodel.DEFAULT_PEAK_GFLOPS * 1e9
+    assert pk.hbm_bw == pk.flops / costmodel.DEFAULT_BALANCE_FLOPS_PER_BYTE
+    assert pk.vmem_bw == pk.hbm_bw * costmodel.VMEM_BW_RATIO
+
+
+def test_peaks_from_probe_rows():
+    pk = costmodel.peaks({
+        "fig2/machine_peak_gemm": 20000.0,       # µs for 2·1024³ flops
+        "fig2/machine_peak_membw": 50000.0,      # µs for the stream pass
+    })
+    assert pk.source == "gemm_probe+membw_probe"
+    assert pk.flops == pytest.approx(
+        costmodel.GEMM_PROBE_FLOPS / 20000e-6)
+    assert pk.hbm_bw == pytest.approx(
+        costmodel.MEMBW_TRAFFIC_BYTES / 50000e-6)
+
+
+def test_peaks_env_override_wins(monkeypatch):
+    monkeypatch.setenv("REPRO_PEAK_GFLOPS", "500")
+    monkeypatch.setenv("REPRO_HBM_GBPS", "40")
+    pk = costmodel.peaks({"fig2/machine_peak_gemm": 20000.0})
+    assert pk.source == "env+env"
+    assert pk.flops == 500e9
+    assert pk.hbm_bw == 40e9
+
+
+def test_membw_probe_constants_shared_with_benchmark():
+    # the bench probe and the model recover GB/s from the SAME constant —
+    # a drift here silently mis-calibrates every memory-bound prediction
+    from benchmarks.fig2_throughput import machine_peak_membw  # noqa: F401
+
+    assert costmodel.MEMBW_TRAFFIC_BYTES == 2 * 4 * costmodel.MEMBW_ELEMS
+
+
+# ---------------------------------------------------------------------------
+# traffic model
+# ---------------------------------------------------------------------------
+
+def test_smaller_tiles_move_more_halo_bytes():
+    """Halo re-fetch scales with grid count: tile 128 crosses HBM more
+    than tile 4096 for the same shape, and the total is monotone."""
+    totals = []
+    for t in (128, 512, 4096):
+        inst = FAMILIES["conv1d"](**MEMBOUND, **_tile_cand(t))
+        totals.append(costmodel.hbm_bytes(inst))
+    assert totals[0] > totals[1] > totals[2]
+
+
+def test_predictions_distinct_and_monotone_on_membound_shape():
+    cost = costmodel.candidate_cost("conv1d", MEMBOUND)
+    preds = [cost(_tile_cand(t)) for t in (128, 256, 512, 1024, 2048)]
+    assert all(p is not None for p in preds)
+    assert preds == sorted(preds, reverse=True)
+    assert len(set(preds)) == len(preds)
+
+
+def test_sweep_every_instance_finite():
+    v, stats = costmodel.check_all(quick=True, bench={}, cache={})
+    cost_v = [x for x in v if x.kind == "cost_model"]
+    assert cost_v == [], [x.line() for x in cost_v]
+    assert stats["instances"] > 50
+    for fam, rng in stats["pred_us"].items():
+        assert 0 < rng["min"] <= rng["max"], (fam, rng)
+
+
+def test_unknown_family_and_bad_candidate_degrade_to_none():
+    assert costmodel.candidate_cost("not_a_family", {}) is None
+    cost = costmodel.candidate_cost("conv1d", MEMBOUND)
+    assert cost({"tile_l": 128, "bogus_knob": 1}) is None
+
+
+# ---------------------------------------------------------------------------
+# key parsing + rank stats
+# ---------------------------------------------------------------------------
+
+def test_parse_key_round_trips_every_family():
+    # keys come from the autotune builders themselves, so this test IS
+    # the round-trip: a key-format change must update parse_key too
+    cases = {
+        autotune.conv1d_key(1, 4096, 64, 64, 9, 1, "float32"):
+            ("conv1d", {"K": 9, "Cin": 64}),
+        autotune.conv2d_key(1, 96, 96, 32, 32, 3, 3, 1, 1, "float32"):
+            ("conv2d", {"kh": 3, "stride": (1, 1)}),
+        autotune.conv1d_key(1, 4096, 64, 64, 9, 1, "float32", grad=True):
+            ("conv1d_bwd_dw", {"K": 9}),
+        autotune.conv1d_dw_key(1, 4096, 64, 9, 1, "fp"):
+            ("conv1d_depthwise", {"K": 9, "C": 64}),
+        autotune.attn_dec_key(2, 1, 8, 4, 64, "int8"):
+            ("attention_decode", {"D": 64, "kind": "int8"}),
+        autotune.pool1d_key(1, 4096, 64, 16, "max", "float32"):
+            ("pool1d", {"window": 16}),
+    }
+    for key, (family, probe) in cases.items():
+        parsed = costmodel.parse_key(key)
+        assert parsed is not None, key
+        fam, shape, _extra = parsed
+        assert fam == family, key
+        for k, val in probe.items():
+            assert shape[k] == val, (key, k, shape)
+    assert costmodel.parse_key("garbage|key") is None
+
+
+def test_spearman_and_mape_units():
+    assert costmodel.spearman([1, 2, 3], [10, 20, 30]) == pytest.approx(1.0)
+    assert costmodel.spearman([1, 2, 3], [30, 20, 10]) == pytest.approx(-1.0)
+    # ties get average ranks, not arbitrary order
+    assert costmodel.spearman([1, 1, 2], [1, 1, 2]) == pytest.approx(1.0)
+    assert costmodel.mape([90, 110], [100, 100]) == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# validation against the committed measurements
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not BENCH.exists(), reason="no committed BENCH")
+def test_validate_committed_bench_rank_order():
+    violations, stats = costmodel.validate(str(BENCH), cache={})
+    assert violations == [], [v.line() for v in violations]
+    fams = stats["families"]
+    for fam in ("conv1d", "conv2d"):
+        assert fam in fams, sorted(fams)
+        assert fams[fam]["spearman"] >= costmodel.SPEARMAN_GATE, fams[fam]
+        assert fams[fam]["gated"] is True
+
+
+@pytest.mark.skipif(not BENCH.exists(), reason="no committed BENCH")
+def test_predicted_best_in_measured_top3_per_family():
+    bench = json.loads(BENCH.read_text())
+    pk = costmodel.peaks(bench)
+    fams: dict = {}
+    for family, name, shape, extra, meas in costmodel._bench_rows(bench):
+        pred = costmodel.predict_us(family, shape, {}, peaks_=pk, **extra)
+        if pred is not None:
+            fams.setdefault(family, []).append((pred, meas, name))
+    for family, rows in fams.items():
+        if len(rows) < 3:
+            continue
+        best_pred = min(rows)[2]
+        top3 = {n for _, m, n in sorted(rows, key=lambda r: r[1])[:3]}
+        assert best_pred in top3, (family, best_pred, top3)
+
+
+def test_validate_gates_on_lying_rank_order():
+    # a bench whose measured order INVERTS the predicted order must fire
+    # cost_rank for the gated family
+    pk = costmodel.peaks({})
+    preds = {}
+    for k in (3, 9, 33):
+        shape = dict(B=1, L=16384, Cin=64, Cout=64, K=k)
+        preds[k] = costmodel.predict_us("conv1d", shape, {}, peaks_=pk)
+    worst = max(preds.values())
+    bench = {
+        f"conv1d/k{k}_sliding": worst - preds[k] + 1.0 for k in preds
+    }
+    violations, stats = costmodel.validate(bench, cache={})
+    assert any(v.kind == "cost_rank" and v.family == "conv1d"
+               for v in violations), stats["families"]
+
+
+# ---------------------------------------------------------------------------
+# cost-ranked autotune search
+# ---------------------------------------------------------------------------
+
+def _deterministic_search(monkeypatch, tmp_path, cost):
+    """Run ranked-vs-exhaustive `_search` where the 'measurement' is the
+    model's own prediction — order faithful by construction, so the
+    ranked arm must early-exit with the identical winner."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    monkeypatch.setattr(autotune, "_time_fn", lambda fn, **kw: fn())
+    real_cost = costmodel.candidate_cost("conv1d", MEMBOUND)
+    cands = [_tile_cand(t) for t in (128, 256, 512, 1024, 2048, 4096)]
+    default = dict(cands[0])
+    run = lambda cfg: real_cost(cfg) * 1e-6  # noqa: E731
+    ranked = autotune._search("conv1d|t|r", run, cands, default, cost=cost)
+    exhaust = autotune._search("conv1d|t|e", run, cands, default, cost=None)
+    return ranked, exhaust
+
+
+def _cfg(result):
+    return {k: result.best[k]
+            for k in ("tile_l", "cin_block", "cout_block", "regime")}
+
+
+def test_ranked_search_times_fewer_same_winner(monkeypatch, tmp_path):
+    cost = costmodel.candidate_cost("conv1d", MEMBOUND)
+    ranked, exhaust = _deterministic_search(monkeypatch, tmp_path, cost)
+    assert ranked.ranked and not exhaust.ranked
+    assert ranked.timed < exhaust.timed, (ranked.timed, exhaust.timed)
+    assert ranked.cost_skipped > 0
+    assert exhaust.cost_skipped == 0
+    assert _cfg(ranked) == _cfg(exhaust) == _tile_cand(4096)
+
+
+def test_ranking_requires_total_predictions(monkeypatch, tmp_path):
+    # one None prediction → NO reorder, no early exit (a partial prior
+    # would push unpredicted candidates to an arbitrary position)
+    real = costmodel.candidate_cost("conv1d", MEMBOUND)
+    flaky = lambda c: None if c["tile_l"] == 512 else real(c)  # noqa: E731
+    ranked, exhaust = _deterministic_search(monkeypatch, tmp_path, flaky)
+    assert not ranked.ranked
+    assert ranked.timed == exhaust.timed
+    assert _cfg(ranked) == _cfg(exhaust)
+
+
+def test_cost_kill_switch_and_patience_env(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_COST", "0")
+    assert autotune._cost_model("conv1d", MEMBOUND) is None
+    monkeypatch.delenv("REPRO_AUTOTUNE_COST", raising=False)
+    assert autotune._cost_model("conv1d", MEMBOUND) is not None
+    monkeypatch.setenv("REPRO_AUTOTUNE_PATIENCE", "7")
+    assert autotune._cost_patience() == 7
+    monkeypatch.delenv("REPRO_AUTOTUNE_PATIENCE", raising=False)
+    assert autotune._cost_patience() == autotune.COST_PATIENCE
+
+
+def test_end_to_end_autotune_reports_ranked(tmp_path, monkeypatch):
+    """A real (interpret-mode) conv1d search goes through the cost hook:
+    the Result must be marked ranked with every candidate accounted for
+    as timed, pruned, or cost-skipped."""
+    import numpy as np
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 256, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(9, 8, 8)).astype(np.float32))
+    res = autotune.autotune_conv1d(
+        x, w, interpret=True, tile_candidates=[64, 128, 256])
+    assert res.ranked
+    assert res.timed >= 1
+    assert res.best["us"] > 0
+
+
+# ---------------------------------------------------------------------------
+# est_hbm_bytes: structured operands count their scale siblings
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def test_est_hbm_bytes_flattens_structured_operands():
+    q = _sds((2, 4, 64), jnp.float32)
+    codes = _sds((2, 128, 4, 64), jnp.int8)
+    scale = _sds((2, 128, 4, 1), jnp.float32)
+    flat = est_hbm_bytes(q, codes, scale)
+    nested = est_hbm_bytes(q, {"k": codes, "k_scale": scale})
+    tupled = est_hbm_bytes(q, (codes, scale), None)  # None bias skipped
+    assert flat == nested == tupled
+    assert flat == q.size * 4 + codes.size * 1 + scale.size * 4
+
+
+def test_view_vs_fused_decode_bytes_ratio_pinned():
+    """The reason the fused int8 read exists, in bytes: the dequant-view
+    path streams the cache at 4 B/elem while the fused path reads 1 B
+    codes + one f32 scale per (pos, head) row. For head_dim=64 that is
+    4 / (1 + 4/64) = 3.765×; the scale rows are what the old counter
+    dropped, which inflated this ratio to a flat 4×."""
+    B, S, KV, D = 2, 128, 4, 64
+    q = _sds((B, KV, D), jnp.float32)
+    kf = _sds((B, S, KV, D), jnp.float32)
+    ki = _sds((B, S, KV, D), jnp.int8)
+    sc = _sds((B, S, KV, 1), jnp.float32)
+    view = est_hbm_bytes(q, kf, kf)
+    fused = est_hbm_bytes(q, ki, ki, sc, sc)
+    cache_elems = B * S * KV * D
+    expect_view = q.size * 4 + 2 * cache_elems * 4
+    expect_fused = q.size * 4 + 2 * cache_elems + 2 * B * S * KV * 4
+    assert (view, fused) == (expect_view, expect_fused)
+    # cache-only ratio (q bytes identical on both sides): exactly the
+    # closed form — and strictly below the naive no-scales 4×, which is
+    # what the old structure-skipping counter reported
+    qb = q.size * 4
+    assert (view - qb) / (fused - qb) == pytest.approx(4 / (1 + 4 / D))
+    assert view / fused < 4.0
+
+
+def test_default_space_quant_instances_covered_by_cost_model():
+    pk = costmodel.peaks({})
+    seen = 0
+    for family, shape, cand in default_space(quick=True):
+        if shape.get("precision") != "w8a8":
+            continue
+        seen += 1
+        pred = costmodel.predict_us(family, shape, cand, peaks_=pk)
+        assert pred is not None and pred > 0, (family, shape, cand)
+    assert seen > 0

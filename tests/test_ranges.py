@@ -1,0 +1,232 @@
+"""repro.analysis.ranges: interval dataflow over the quant graph.
+
+Positive direction: every shipped requant chain (whisper frontend,
+edge_cnn 3-deep, llava patch→projector) proves safe, every w8a8 kernel
+instance of the contract key space has int32 accumulator headroom, and
+the shipped KV-scale layout satisfies the dequant-fold algebra.
+
+Negative direction (the seeded fixtures from the ISSUE): an oversized
+reduction fires ``acc_overflow``, a mis-wired requant spec fires
+``requant_clip``, a per-element KV scale fires ``scale_fold`` — each
+with exactly its typed violation. Zero/NaN scales make a chain
+``unreachable`` (the upstream guards serve it in float), never "safe".
+"""
+import math
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.analysis import ranges  # noqa: E402
+from repro.analysis.ranges import Interval, Stage  # noqa: E402
+from repro.quant.calibrate import Calibration  # noqa: E402
+
+
+def _kinds(violations):
+    return [v.kind for v in violations]
+
+
+# ---------------------------------------------------------------------------
+# shipped chains prove safe
+# ---------------------------------------------------------------------------
+
+def test_shipped_chains_all_safe():
+    paths = ranges.shipped_chains()
+    assert paths, "no shipped chains — quant.apply.CHAINS is empty?"
+    for path in paths:
+        status, violations, detail = ranges.check_chain(path)
+        assert status == "safe", (path, [v.line() for v in violations])
+        assert detail["mode"] == "symbolic"
+        assert 0 < detail["acc_bits"] < 31
+        assert detail["headroom_bits"] > 0
+
+
+def test_edge_chain_is_three_deep_with_pools():
+    paths = {p[0]: p for p in ranges.shipped_chains()}
+    edge = paths["edge/c1"]
+    assert len(edge) >= 3, edge  # c1 → c2 → c3
+    _, _, detail = ranges.check_chain(edge)
+    # the int8 codes ride through the 2×2 max pools between conv stages:
+    # monotone + grid-preserving, so the interval analysis records them
+    # rather than widening at them
+    assert detail["pools"] == {"edge/c1": [2], "edge/c2": [2]}
+
+
+def test_chain_geometry_matches_model_code():
+    from repro.configs.base import get_config
+    from repro.models.whisper import frontend_defs
+
+    d = frontend_defs(get_config("whisper-medium"))
+    g1, g2 = ranges.SITE_GEOM["whisper/conv1"], ranges.SITE_GEOM["whisper/conv2"]
+    assert (g1.taps, g1.cin) == (d["conv1_w"].shape[0], d["conv1_w"].shape[1])
+    assert (g2.taps, g2.cin) == (d["conv2_w"].shape[0], d["conv2_w"].shape[1])
+
+
+def test_quant_kernel_space_accumulators_safe():
+    violations, stats = ranges.check_all(quick=False)
+    assert violations == [], [v.line() for v in violations]
+    assert stats["kernel_stages"] > 10
+    assert stats["acc_bits_max"] < 31
+    assert stats["overflow_reduce_len"] == ranges.OVERFLOW_REDUCE_LEN
+    assert all(c["status"] == "safe" for c in stats["chains"].values())
+
+
+def test_kv_fold_shipped_layout_valid():
+    assert ranges.check_kv_fold() == []
+
+
+# ---------------------------------------------------------------------------
+# seeded fixtures: one typed violation each
+# ---------------------------------------------------------------------------
+
+def test_fixture_acc_overflow():
+    # reduce_len 33·8192 = 270336 ≥ 133145 → 127²·n blows int32
+    stage = Stage("fixture", taps=33, cin=8192)
+    vio = ranges.check_stage(stage)
+    assert _kinds(vio) == ["acc_overflow"]
+    assert str(stage.acc_bound()) in vio[0].detail
+    # threshold is exact: one below stays safe
+    n = ranges.OVERFLOW_REDUCE_LEN
+    assert ranges.check_stage(Stage("edge-", taps=1, cin=n - 1)) == []
+    assert _kinds(ranges.check_stage(Stage("edge+", taps=1, cin=n))) \
+        == ["acc_overflow"]
+
+
+def test_fixture_requant_clip():
+    # out_scale 4× finer than the consumer grid → codes reach ±508
+    vio = ranges.check_requant("fixture", out_scale=0.01,
+                               consumer_scale=0.04)
+    assert _kinds(vio) == ["requant_clip"]
+    assert "508" in vio[0].detail
+    # the chain-algebra case (out_scale == consumer grid) is exact-safe,
+    # and f32 round-trip noise within SCALE_RTOL doesn't fire
+    assert ranges.check_requant("ok", 0.04, 0.04) == []
+    assert ranges.check_requant(
+        "noise", 0.04 * (1 - ranges.SCALE_RTOL / 2), 0.04) == []
+    # a COARSER out_scale only shrinks codes — never a clip
+    assert ranges.check_requant("coarse", 0.08, 0.04) == []
+
+
+def test_fixture_scale_fold_mismatch():
+    # per-element scale varies along the contracted head_dim axis
+    vio = ranges.check_kv_fold(scale_shape=(1, 2, 4, 2, 8))
+    assert _kinds(vio) == ["scale_fold"]
+    assert "head_dim" in vio[0].detail
+    assert ranges.check_kv_fold(scale_shape=(1, 2, 4, 2, 1)) == []
+
+
+def test_concrete_spec_miswired_out_scale_fires_on_chain():
+    path = ("whisper/conv1", "whisper/conv2")
+    good = {
+        "whisper/conv1": {"x_scale": 0.02, "out_scale": 0.04},
+        "whisper/conv2": {"x_scale": 0.04},
+    }
+    status, vio, detail = ranges.check_chain(path, spec=good)
+    assert (status, vio, detail["mode"]) == ("safe", [], "concrete")
+    bad = {
+        "whisper/conv1": {"x_scale": 0.02, "out_scale": 0.005},
+        "whisper/conv2": {"x_scale": 0.04},
+    }
+    status, vio, _ = ranges.check_chain(path, spec=bad)
+    assert status == "violated"
+    assert "requant_clip" in _kinds(vio)
+
+
+# ---------------------------------------------------------------------------
+# zero / NaN scales: unreachable, not safe
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("poison,reason", [
+    (0.0, "zero"), (float("nan"), "nan"), (-0.01, "zero"),
+])
+def test_poisoned_scale_is_unreachable_not_safe(poison, reason):
+    path = ("whisper/conv1", "whisper/conv2")
+    spec = {
+        "whisper/conv1": {"x_scale": 0.02, "out_scale": poison},
+        "whisper/conv2": {"x_scale": 0.04},
+    }
+    status, vio, detail = ranges.check_chain(path, spec=spec)
+    assert status == "unreachable"
+    assert vio == []  # no proof is claimed either way
+    assert reason in detail["reason"]
+
+
+def test_check_all_with_poisoned_spec_not_reported_safe():
+    spec = {
+        "whisper/conv1": {"x_scale": 0.02, "out_scale": float("nan")},
+        "whisper/conv2": {"x_scale": 0.04},
+    }
+    violations, stats = ranges.check_all(spec=spec)
+    chain = stats["chains"]["whisper/conv1->whisper/conv2"]
+    assert chain["status"] == "unreachable"
+    assert not any(v.key.startswith("whisper") for v in violations)
+
+
+# ---------------------------------------------------------------------------
+# interval semantics: percentile vs absmax calibration
+# ---------------------------------------------------------------------------
+
+def test_percentile_interval_narrower_than_absmax():
+    """Percentile calibration deliberately clips the tail: its claimed
+    interval is strictly narrower than absmax's, which must cover every
+    observed value. Both feed the same requant algebra downstream."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(4, 256, 8)).astype(np.float32)
+    x[0, 0, 0] = 40.0  # one outlier absmax must chase, percentile won't
+
+    pct, absm = Calibration(percentile=99.0), Calibration(percentile=None)
+    pct.observe("site", x)
+    absm.observe("site", x)
+    i_pct = Interval.for_scale(float(pct.site_scale("site")))
+    i_abs = Interval.for_scale(float(absm.site_scale("site")))
+
+    assert i_abs.contains(i_pct)
+    assert i_pct.width() < i_abs.width()
+    # f32 scale round-trip costs ~1 ulp, hence the hair of tolerance
+    assert i_abs.hi >= 40.0 * (1 - 1e-6)  # absmax covers the outlier...
+    assert i_pct.hi < 39.0                # ...percentile saturates it
+    obs = Interval(float(x.min()) * (1 + 1e-6), float(x.max()) * (1 - 1e-6))
+    assert i_abs.contains(obs)
+    assert not i_pct.contains(obs)
+
+
+def test_interval_algebra():
+    c = Interval.codes()
+    assert (c.lo, c.hi) == (-127, 127)
+    s = c.scaled(0.5)
+    assert (s.lo, s.hi) == (-63.5, 63.5)
+    flipped = c.scaled(-0.5)  # negative scale still yields a valid interval
+    assert flipped.lo < flipped.hi
+    assert Interval.for_scale(0.1).contains(Interval(-12.7, 12.7))
+
+
+def test_codes_through_max_pool_unchanged():
+    """The edge_cnn chain's load-bearing claim, checked concretely: max
+    pooling int8 codes then dequantizing == dequantizing then pooling
+    (max is monotone; one shared per-tensor scale) — so the interval
+    rides through the pool unchanged and the chain may stay in codes."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(1)
+    codes = rng.integers(-127, 128, size=(1, 8, 8, 4)).astype(np.int8)
+    scale = 0.03
+    q = jnp.asarray(codes)
+
+    def pool(x):  # 2×2 max pool, stride 2
+        return jax.lax.reduce_window(
+            x, -jnp.inf if x.dtype == jnp.float32 else jnp.array(
+                -128, x.dtype),
+            jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+    pooled_then_deq = pool(q).astype(np.float32) * scale
+    deq_then_pooled = pool(q.astype(np.float32) * scale)
+    np.testing.assert_allclose(pooled_then_deq, deq_then_pooled, rtol=1e-6)
+    assert Interval.codes().contains(
+        Interval(float(pool(q).min()), float(pool(q).max())))
+
+
+def test_overflow_constant_is_exact():
+    n = ranges.OVERFLOW_REDUCE_LEN
+    assert 127 * 127 * (n - 1) <= ranges.INT32_MAX < 127 * 127 * n
+    assert math.log2(127 * 127 * (n - 1)) < 31
