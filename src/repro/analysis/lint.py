@@ -28,6 +28,11 @@ the lint only moves the failure from "first hit in production" to "CI":
     neither may be an f-string — dynamic names fork the telemetry
     namespace the report CLI and CI assertions key on (the registry
     enforces the same at runtime; the lint moves the failure to CI).
+  * **lint_ladder_key** — every ``_ladder(...)`` dispatch call must pass
+    the ``key=`` dispatch-key kwarg. The runtime fault domain (DESIGN.md
+    §15) attributes an in-compiled-call kernel failure back to its
+    (site, rung) through that key; a ladder call without it would opt its
+    kernel family out of runtime demotion silently.
   * **lint_walltime** — ``time.time()`` is banned in the repro package:
     every duration measured there (dispatch wall time, autotune
     candidate timing, serve TTFT/decode-step, train step time) must use
@@ -49,7 +54,10 @@ from repro.health import Reason
 from repro.obs import names as obs_names
 
 #: subsystem sites with no registry of their own
-STATIC_SITES = {"autotune", "ckpt", "serve/generate", "serve/decode", "train"}
+STATIC_SITES = {
+    "autotune", "ckpt", "serve/generate", "serve/decode", "serve/slot",
+    "serve/admission", "train",
+}
 
 #: dispatch-ladder sites (``ops._ladder`` callers); fault injection
 #: matches hierarchically, so the bare family names are valid too
@@ -177,10 +185,29 @@ class _Linter(ast.NodeVisitor):
                 "lint.WALLCLOCK_ALLOWED with a reason",
             )
 
+    def _lint_ladder_key(self, call: ast.Call) -> None:
+        f = call.func
+        name = (
+            f.id if isinstance(f, ast.Name)
+            else f.attr if isinstance(f, ast.Attribute)
+            else None
+        )
+        if name != "_ladder":
+            return
+        if not any(kw.arg == "key" for kw in call.keywords):
+            self._flag(
+                "lint_ladder_key", call,
+                "_ladder(...) without key= — the dispatch key is how the "
+                "runtime catch layer maps an in-compiled-call kernel "
+                "failure back to its (site, rung); omitting it opts this "
+                "kernel family out of runtime demotion (DESIGN.md §15)",
+            )
+
     def visit_Call(self, call: ast.Call) -> None:
         self._lint_record(call)
         self._lint_obs_name(call)
         self._lint_walltime(call)
+        self._lint_ladder_key(call)
         for kw in call.keywords:
             if kw.arg == "site":
                 s = _str_const(kw.value)

@@ -77,7 +77,9 @@ def _step_of(p: Path) -> int | None:
     name = p.name
     if not (p.is_dir() and name.startswith("step_")):
         return None
-    if name.endswith(".tmp") or name.endswith(".corrupt"):
+    # quarantine names may carry a collision suffix (step_N.corrupt.1, …)
+    # — anything marked corrupt is autopsy evidence, silently invisible
+    if name.endswith(".tmp") or ".corrupt" in name:
         return None
     try:
         return int(name.split("_", 1)[1])
@@ -188,11 +190,16 @@ class CheckpointManager:
 
     def quarantine(self, step: int, reason: str = "") -> None:
         """Move a torn checkpoint to ``step_N.corrupt`` (kept for autopsy,
-        invisible to ``latest_step``/``_gc``) and record the event."""
+        invisible to ``latest_step``/``_gc``) and record the event. A
+        pre-existing quarantine for the same step is EVIDENCE, not free
+        space — repeat quarantines take suffixed names
+        (``step_N.corrupt.1``, …) instead of destroying the previous one."""
         d = self.dir / f"step_{step}"
         target = self.dir / f"step_{step}.corrupt"
-        if target.exists():
-            shutil.rmtree(target)
+        n = 0
+        while target.exists():
+            n += 1
+            target = self.dir / f"step_{step}.corrupt.{n}"
         if d.exists():
             d.rename(target)
         HEALTH.record(

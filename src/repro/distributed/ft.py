@@ -17,6 +17,7 @@ On a real multi-pod deployment these hooks sit on every host:
 from __future__ import annotations
 
 import os
+import random
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -53,18 +54,36 @@ class StepWatchdog:
 
 @dataclass
 class RestartPolicy:
+    """Bounded exponential-backoff restart budget with deterministic
+    seeded jitter.
+
+    ``jitter`` spreads simultaneous restarts (the classic thundering-herd
+    guard when many hosts crash together): each grant is scaled by
+    ``1 + jitter * u`` with ``u ~ U[0, 1)`` drawn from a PRNG seeded by
+    ``(seed, restarts)`` — a pure function of the attempt index, so chaos
+    tests replay the exact delay sequence and two hosts with different
+    seeds decorrelate. With ``jitter <= 1`` the granted sequence stays
+    non-decreasing until the cap (the doubling dominates the spread:
+    ``2·m ≥ m·(1 + j)``), which the hypothesis properties pin down.
+    Default ``jitter=0.0`` keeps the historical deterministic schedule.
+    """
+
     max_restarts: int = 5
     base_backoff_s: float = 1.0
     max_backoff_s: float = 300.0
+    jitter: float = 0.0  # fraction of the delay added, scaled by u~U[0,1)
+    seed: int = 0
     restarts: int = 0
 
     def next_backoff(self) -> float | None:
         """Seconds to wait before restarting, or None if budget exhausted."""
         if self.restarts >= self.max_restarts:
             return None
-        delay = min(
-            self.base_backoff_s * (2 ** self.restarts), self.max_backoff_s
-        )
+        delay = self.base_backoff_s * (2 ** self.restarts)
+        if self.jitter > 0.0:
+            u = random.Random(f"{self.seed}:{self.restarts}").random()
+            delay *= 1.0 + self.jitter * u
+        delay = min(delay, self.max_backoff_s)
         self.restarts += 1
         return delay
 

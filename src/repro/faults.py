@@ -24,9 +24,15 @@ Fault kinds (each consumed by a specific hook site):
   kind                  hook / effect
   ====================  =====================================================
   pallas_compile        ops dispatch ladder, pallas rung — raises FaultError
-  pallas_runtime        same rung, distinct reason code
+                        at TRACE time (the ladder demotes in place)
+  pallas_runtime        ``guest_trap``: raises *inside the compiled call*
+                        (jax.debug.callback) on the pallas rung — the
+                        failure surfaces at RUN time to serve/train's
+                        runtime catch layer (DESIGN.md §15)
   jax_runtime           ops dispatch ladder, compiled-JAX rung — raises
-  nan_activations       ``corrupt_array``: poisons a tensor with NaN
+  nan_activations       ``corrupt_array``: poisons a tensor with NaN;
+                        ``corrupt_rows``: poisons one batch row (slot);
+                        ``guest_trap``: a kernel emitting NaN at run time
   quant_scale_zero      ``corrupt_scale``: calibration emits a 0.0 scale
   quant_scale_nan       ``corrupt_scale``: calibration emits a NaN scale
   autotune_corrupt      autotune ``_load``: treats the cache file as corrupt
@@ -168,9 +174,11 @@ def maybe_fail(kind: str, site: str | None = None) -> None:
         raise FaultError(kind, site)
 
 
-# rung name → the fault kinds that can fire at that rung of the ops ladder
+# rung name → the fault kinds that fire at TRACE time at that rung of the
+# ops ladder (``pallas_runtime`` moved to the guest trap below: it fires
+# inside the compiled call, which is the class it names)
 RUNG_KINDS = {
-    "pallas": ("pallas_compile", "pallas_runtime"),
+    "pallas": ("pallas_compile",),
     "jax": ("jax_runtime",),
 }
 
@@ -179,6 +187,133 @@ def maybe_fail_rung(rung: str, site: str) -> None:
     """Ladder hook: check every fault kind registered for this rung."""
     for kind in RUNG_KINDS.get(rung, ()):
         maybe_fail(kind, site)
+
+
+# -- runtime fault domain (DESIGN.md §15) -------------------------------------
+#
+# A kernel that traces/compiles fine but dies *on device at run time* never
+# reaches the dispatch ladder — dispatch already returned. The guest trap
+# closes that gap: ``ops._ladder`` wraps the winning rung's output in a
+# ``jax.debug.callback`` which executes on the host INSIDE every run of the
+# compiled function. When an armed runtime fault fires (or the env-gated
+# non-finite sentinel sees a poisoned output), the callback records a
+# ``Trip`` carrying the dispatch key and raises — XLA surfaces it as an
+# ``XlaRuntimeError`` at the jit call, where serve/train's catch layer
+# consumes the trip to map the failure back to its (site, rung).
+
+#: rung name → fault kinds the guest trap fires inside the compiled call
+RUNTIME_RUNG_KINDS = {
+    "pallas": ("pallas_runtime",),
+}
+
+#: arm the non-finite output sentinel at every ladder site (cheap: one
+#: ``isfinite`` reduction per dispatch output, only when enabled)
+SENTINEL_ENV = "REPRO_RUNTIME_SENTINEL"
+
+
+@dataclasses.dataclass(frozen=True)
+class Trip:
+    """Host-side record of one runtime trap firing: the (site, rung) the
+    failure maps back to, the autotune dispatch key, and the fault kind."""
+
+    site: str
+    rung: str
+    key: str | None
+    kind: str
+
+
+_TRIP: list[Trip] = []  # single-slot mailbox, guarded by _LOCK
+
+
+def _record_trip(trip: Trip) -> None:
+    with _LOCK:
+        _TRIP[:] = [trip]
+
+
+def consume_trip(site: str | None = None) -> Trip | None:
+    """Pop the pending runtime trip (the catch layer's attribution read).
+    Returns None when the failure was not a trapped kernel fault. With
+    ``site`` given, pops only a trip recorded for that site — the eager
+    ladder filters so it never steals another site's attribution from
+    the serve/train catch layers."""
+    with _LOCK:
+        if not _TRIP:
+            return None
+        if site is not None and _TRIP[0].site != site:
+            return None
+        return _TRIP.pop()
+
+
+def sentinel_on() -> bool:
+    return os.environ.get(SENTINEL_ENV, "") not in ("", "0")
+
+
+def trap_armed(rung: str, site: str) -> bool:
+    """Trace-time gate: compile the guest trap into this rung's output?
+    True when a runtime-kind injection matches the site, a NaN injection
+    targets the kernel site, or the sentinel env is set. O(1) when clean
+    — the hot path pays one env read and an empty-list scan."""
+    if sentinel_on():
+        return True
+    for kind in RUNTIME_RUNG_KINDS.get(rung, ()):
+        if active(kind, site) is not None:
+            return True
+    return active("nan_activations", site) is not None
+
+
+def guest_trap(site: str, rung: str, key: str | None, out):
+    """Wrap a rung's output with the in-compiled-call runtime hooks.
+
+    Inserted at trace time only when :func:`trap_armed`; the callback then
+    runs on the host inside EVERY execution of the compiled function:
+
+      * an armed ``pallas_runtime``-class injection fires → Trip + raise
+        (the "kernel dies on device" drill);
+      * an armed ``nan_activations`` injection at the kernel site fires →
+        Trip + raise (a kernel emitting NaN at run time);
+      * with the sentinel armed, a genuinely non-finite output → same.
+
+    In eager dispatch the callback executes immediately, so the ladder's
+    own try/except demotes in place; under jit the raise surfaces as an
+    ``XlaRuntimeError`` from the compiled call and serve/train's runtime
+    catch layer attributes it via :func:`consume_trip`."""
+    if not trap_armed(rung, site):
+        return out
+    import jax
+    import jax.numpy as jnp
+
+    leaves = jax.tree_util.tree_leaves(out)
+    flag = jnp.bool_(False)
+    if sentinel_on():
+        for leaf in leaves:
+            if jnp.issubdtype(leaf.dtype, jnp.inexact):
+                flag = flag | ~jnp.isfinite(leaf).all()
+    kinds = RUNTIME_RUNG_KINDS.get(rung, ()) + ("nan_activations",)
+
+    def _trap(bad):
+        for kind in kinds:
+            if take(kind, site):
+                _record_trip(Trip(site, rung, key, kind))
+                raise FaultError(kind, site)
+        if bool(bad):
+            _record_trip(Trip(site, rung, key, "nan_activations"))
+            raise FaultError("nan_activations", site)
+
+    jax.debug.callback(_trap, flag)
+    return out
+
+
+def corrupt_rows(kind: str, site_prefix: str, x):
+    """Per-row (slot) poison: an injection armed at ``{site_prefix}.{i}``
+    NaNs batch row ``i`` of ``x``; armed at ``site_prefix`` itself it
+    poisons every row. The serve decode loop calls this on the logits so
+    chaos runs can poison ONE request slot without touching siblings."""
+    rows = [i for i in range(x.shape[0]) if take(kind, f"{site_prefix}.{i}")]
+    if not rows:
+        return x
+    import jax.numpy as jnp
+
+    return x.at[jnp.asarray(rows)].set(jnp.nan)
 
 
 def sleep_point(kind: str, site: str | None = None) -> float:

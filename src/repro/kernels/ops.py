@@ -88,9 +88,21 @@ def _ladder(site: str, rungs, *, key: str | None = None, operands=()):
     reason-coded ``HEALTH`` event, and the next rung serves the call. The
     last rung's failure propagates — there is nothing left to degrade to.
     ``faults.maybe_fail_rung`` fires inside the try, so injected failures
-    exercise exactly this path. Dispatch happens at trace time: a kernel
-    that traced fine but dies at runtime surfaces to the caller's retry
-    layer (serve/train), not here.
+    exercise exactly this path. Dispatch happens at trace time; a kernel
+    that traces fine but dies *at runtime* is covered by the guest trap:
+    ``faults.guest_trap`` wraps the winning rung's output (armed by
+    runtime-fault injections or the ``REPRO_RUNTIME_SENTINEL`` non-finite
+    sentinel), records the (site, rung, key) attribution trip, and the
+    failure surfaces from the compiled call to serve/train's runtime
+    catch layer, which demotes here and re-jits (DESIGN.md §15). The
+    ``key`` kwarg is REQUIRED at every call site (lint-enforced): it is
+    the dispatch-key metadata that attribution rides on.
+
+    Demotions are circuit breakers, not process-lifetime: a successful
+    dispatch credits ``HEALTH.note_success``, and once a demoted rung's
+    cooldown elapses ``HEALTH.is_demoted`` grants it one probation call
+    through this exact path — success repromotes it, failure re-demotes
+    with a grown cooldown.
 
     Observability (DESIGN.md §12): when tracing (``REPRO_TRACE``) or the
     dispatch metrics (``obs.metrics.enable_dispatch``) are armed, the
@@ -109,12 +121,16 @@ def _ladder(site: str, rungs, *, key: str | None = None, operands=()):
         try:
             faults.maybe_fail_rung(name, site)
             if not obs_on:
-                return thunk()
+                out = thunk()
+                out = faults.guest_trap(site, name, key, out)
+                HEALTH.note_success(site, name)
+                return out
             t0 = time.perf_counter()
             with obs_trace.span(
                 "kernel.dispatch", site=site, key=key or site, rung=name
             ):
                 out = thunk()
+            out = faults.guest_trap(site, name, key, out)
             dt = time.perf_counter() - t0
             labels = dict(site=site, key=key or site, rung=name)
             reg = obs_metrics.REGISTRY
@@ -124,19 +140,25 @@ def _ladder(site: str, rungs, *, key: str | None = None, operands=()):
                 reg.counter("dispatch.est_hbm_bytes_total").inc(
                     float(est_hbm_bytes(*operands, out)), **labels
                 )
+            HEALTH.note_success(site, name)
             return out
         except Exception as e:  # noqa: BLE001 — any failure → next rung
             if i + 1 == len(live):
                 raise
             # canonicalize onto the frozen health.Reason vocabulary: a
             # fault kind passes through, anything else becomes the rung's
-            # own error code with the exception repr in detail
-            reason = health.canon_reason(e, default=f"{name}_error")
+            # own error code with the exception repr in detail. An eager
+            # guest-trap trip (no jit boundary between us and the
+            # debug.callback) loses its FaultError type through XLA —
+            # recover the kind from the attribution mailbox.
+            trip = faults.consume_trip(site)
+            default = trip.kind if trip is not None else f"{name}_error"
+            reason = health.canon_reason(e, default=default)
             HEALTH.record(
                 site, reason, f"demote:{name}->{live[i + 1][0]}",
                 detail=repr(e)[:200],
             )
-            HEALTH.demote(site, name)
+            HEALTH.demote(site, name, reason=reason)
     raise AssertionError("unreachable")
 
 

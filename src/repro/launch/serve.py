@@ -35,12 +35,27 @@ runtime failure re-run the request instead of crashing the server), an
 optional per-request ``deadline_s`` truncates overlong decodes with an
 eos-padded result and a reason-coded health event, and the decode loop
 drives a ``StepWatchdog`` + heartbeat like train when ``run_dir`` is given.
+
+Runtime fault domain (DESIGN.md §15): a kernel that dies *inside* the
+compiled call (the ``faults.guest_trap`` drill, or a real device fault
+surfacing as ``XlaRuntimeError``) is mapped back to its (site, rung) via
+the trip mailbox, demoted in ``HEALTH``, and the request re-jits without
+the dead rung — the retrace cost lands in ``runtime.retrace_ms``. Blast
+radius is bounded below the request level too: a single poisoned slot
+(non-finite logits in one batch row) is quarantined — eos-masked and
+recycled — instead of failing the batch; admission sheds new requests
+when the decode-step p95 projects past the deadline budget; and a
+crash-safe request journal under ``--run-dir`` replays in-flight
+requests to bit-identical greedy tokens after a restart.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 import weakref
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +65,7 @@ from repro import faults, obs
 from repro.configs import get_config, smoke_config
 from repro.distributed.ft import RestartPolicy, StepWatchdog, beat
 from repro.distributed.sharding import ParamDef, Runtime
-from repro.health import HEALTH, canon_reason
+from repro.health import HEALTH, Reason, canon_reason
 from repro.models import build_model
 
 
@@ -145,6 +160,80 @@ def _jitted(model):
     return fns
 
 
+class LoadShedError(RuntimeError):
+    """Request rejected at admission: the decode-step p95 projects the
+    request past its deadline budget — shedding beats accepting work that
+    is already doomed to truncate (DESIGN.md §15)."""
+
+
+#: decode-step samples required before admission trusts the p95 estimate
+_SHED_MIN_SAMPLES = 8
+#: runtime (in-compiled-call) demotions one request may absorb before its
+#: failure propagates — each one re-jits, so this bounds retrace thrash
+_MAX_RUNTIME_DEMOTIONS = 8
+# set by the runtime catch layer after it drops the jit cache; the next
+# prefill logs its duration as the re-jit cost the demotion bought
+_RETRACE_PENDING = False
+
+
+class RequestJournal:
+    """Crash-safe append-only request journal (DESIGN.md §15).
+
+    One jsonl record per transition: ``begin`` (the full request — prompts
+    and decode parameters) at admission, ``end`` (tokens + done mask) at
+    completion. Every append rewrites the file via tmp+rename (the
+    ``ft.beat`` idiom), so a crash leaves either the old or the new
+    journal, never a torn line. A restarted server replays ``pending()``
+    — begins without a matching end — and greedy decode being
+    deterministic, the replay reproduces bit-identical tokens.
+    """
+
+    def __init__(self, run_dir):
+        self.path = Path(run_dir) / "requests.jsonl"
+
+    def _append(self, rec: dict) -> None:
+        prev = self.path.read_text() if self.path.exists() else ""
+        tmp = self.path.with_name(f".{self.path.name}.{os.getpid()}.tmp")
+        tmp.write_text(prev + json.dumps(rec) + "\n")
+        tmp.replace(self.path)
+
+    def begin(self, req_id: str, prompts, *, gen_len: int, cache_len: int,
+              temperature: float, seed: int) -> None:
+        self._append({
+            "id": req_id, "event": "begin",
+            "prompts": np.asarray(prompts).tolist(),
+            "gen_len": gen_len, "cache_len": cache_len,
+            "temperature": temperature, "seed": seed,
+        })
+
+    def end(self, req_id: str, tokens, done) -> None:
+        self._append({
+            "id": req_id, "event": "end",
+            "tokens": np.asarray(tokens).tolist(),
+            "done": np.asarray(done).tolist(),
+        })
+
+    def records(self) -> list[dict]:
+        if not self.path.exists():
+            return []
+        return [
+            json.loads(line)
+            for line in self.path.read_text().splitlines()
+            if line.strip()
+        ]
+
+    def pending(self) -> list[dict]:
+        """Begin records with no matching end — in flight at the crash."""
+        begun: dict[str, dict] = {}
+        ended: set[str] = set()
+        for r in self.records():
+            if r["event"] == "begin":
+                begun[r["id"]] = r
+            elif r["event"] == "end":
+                ended.add(r["id"])
+        return [r for rid, r in begun.items() if rid not in ended]
+
+
 def serve_batch(model, B, P, prompts):
     batch = {"tokens": prompts}
     cfg = model.cfg
@@ -191,7 +280,22 @@ def prefill_cache(model, params, prompts, *, cache_len: int,
     cache_len = resolve_cache_len(cfg, cache_len, P, gen_len)
     batch = serve_batch(model, B, P, prompts)
     prefill, _ = _jitted(model)
+    t_p = time.perf_counter()
     logits, cache = prefill(params, batch)
+    # sync the compiled call's DIRECT outputs: an in-compiled-call failure
+    # (guest trap, device fault) is only guaranteed to surface as
+    # XlaRuntimeError on these arrays — a dependent computation enqueued
+    # before the error lands can read garbage instead (DESIGN.md §15).
+    # Free in practice: the argmax below syncs on logits anyway.
+    jax.block_until_ready((logits, cache))
+    global _RETRACE_PENDING
+    if _RETRACE_PENDING:
+        # first prefill after a runtime demotion dropped the jit cache:
+        # its duration IS the re-jit cost the demotion bought
+        _RETRACE_PENDING = False
+        dt_ms = (time.perf_counter() - t_p) * 1000.0
+        obs.REGISTRY.counter("runtime.retrace_ms").inc(dt_ms, arch=cfg.name)
+        obs.info("serve", f"retrace after runtime demotion: {dt_ms:.0f}ms")
     full = init_cache_concrete(model, B, cache_len)
     defs = model.cache_defs(B, cache_len)
     if cfg.kv_quant == "int8":
@@ -204,16 +308,41 @@ def prefill_cache(model, params, prompts, *, cache_len: int,
     return logits, pad_cache_to_defs(cache, full, defs)
 
 
-def _check_finite(logits, step: int):
-    """Per-step numeric guard: NaN/Inf logits would silently argmax to
-    token 0 and poison the whole continuation — fail fast so the retry
-    wrapper re-runs the request instead. One scalar reduction per step;
-    the decode loop is already host-synchronous (the sampled token feeds
-    the next step), so this adds no extra device sync."""
+def _screen_logits(logits, step: int):
+    """Per-step numeric guard with slot-level blast radius (DESIGN.md
+    §15): NaN/Inf logits would silently argmax to token 0 and poison the
+    continuation. Every slot bad → fail fast, the retry wrapper re-runs
+    the request (the batch-wide failure class: a broken kernel). SOME
+    slots bad → return the (B,) bad mask so the decode loop quarantines
+    just those slots (eos-mask + recycle) — one poisoned request must not
+    kill its siblings. One reduction per step; the decode loop is already
+    host-synchronous (the sampled token feeds the next step), so this
+    adds no extra device sync."""
     logits = faults.corrupt_array("nan_activations", "serve/logits", logits)
-    if not bool(jnp.isfinite(logits).all()):
+    logits = faults.corrupt_rows("nan_activations", "serve/slot", logits)
+    ok = jnp.isfinite(logits).all(axis=tuple(range(1, logits.ndim)))
+    bad = ~ok
+    if not bool(bad.any()):
+        return logits, None
+    if bool(bad.all()):
         raise FloatingPointError(f"non-finite logits at decode step {step}")
-    return logits
+    return logits, bad
+
+
+def _quarantine(bad, done, step: int, arch: str):
+    """Fold a bad-slot mask into ``done``: the slots' remaining tokens pin
+    to eos (the decode loop's existing finished-slot masking) and they are
+    reported recyclable. Counts only newly-poisoned slots."""
+    newly = bad & ~done
+    n = int(newly.sum())
+    if n:
+        HEALTH.record(
+            "serve/slot", "nan_logits", "quarantine",
+            detail=f"step {step}: {n} slot(s) "
+                   f"{np.flatnonzero(np.asarray(newly)).tolist()}",
+        )
+        obs.REGISTRY.counter("serve.quarantined").inc(float(n), arch=arch)
+    return done | bad
 
 
 def _generate_once(model, params, prompts, *, gen_len, cache_len,
@@ -234,8 +363,9 @@ def _generate_once(model, params, prompts, *, gen_len, cache_len,
         )
     _, decode = _jitted(model)
 
+    bad = None
     if nan_guard:
-        logits = _check_finite(logits, -1)
+        logits, bad = _screen_logits(logits, -1)
     key = jax.random.key(seed)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     # TTFT: prefill through the argmax that yields the first token
@@ -243,6 +373,9 @@ def _generate_once(model, params, prompts, *, gen_len, cache_len,
     reg.histogram("serve.prefill_s").observe(t_first, arch=cfg.name)
     reg.histogram("serve.ttft_s").observe(t_first, arch=cfg.name)
     done = tok[:, 0] == eos
+    if bad is not None:
+        done = _quarantine(bad, done, -1, cfg.name)
+        tok = jnp.where(done[:, None], eos, tok)
     out = [tok]
     step_hist = reg.histogram("serve.decode_step_s")
     for i in range(gen_len - 1):
@@ -250,8 +383,16 @@ def _generate_once(model, params, prompts, *, gen_len, cache_len,
         faults.sleep_point("slow_step", "serve")
         with obs.span("serve.decode_step", arch=cfg.name, step=P + i):
             logits, cache = decode(params, cache, tok, jnp.int32(P + i))
+            # direct-output sync: guarantees an in-compiled-call failure
+            # surfaces HERE as XlaRuntimeError instead of feeding garbage
+            # to the sampler (the loop is host-synchronous per step
+            # regardless — the sampled token feeds the next step)
+            jax.block_until_ready(logits)
+            bad = None
             if nan_guard:
-                logits = _check_finite(logits, i)
+                logits, bad = _screen_logits(logits, i)
+            if bad is not None:
+                done = _quarantine(bad, done, i, cfg.name)
             if temperature > 0:
                 key, sub = jax.random.split(key)
                 tok = jax.random.categorical(
@@ -266,6 +407,9 @@ def _generate_once(model, params, prompts, *, gen_len, cache_len,
             done = done | (tok[:, 0] == eos)
         dt_step = time.perf_counter() - t_step
         step_hist.observe(dt_step, arch=cfg.name)
+        # clean-call credit toward demoted rungs' probation cooldowns —
+        # jitted decode never re-dispatches, so loop steps are the clock
+        HEALTH.tick()
         if watchdog is not None:
             watchdog.observe(P + i, dt_step)
         if run_dir is not None:
@@ -296,11 +440,43 @@ def _generate_once(model, params, prompts, *, gen_len, cache_len,
     return jnp.concatenate(out, axis=1), done
 
 
+def _admission_check(model, gen_len: int, deadline_s: float | None) -> None:
+    """Load shedding (DESIGN.md §15): with a deadline budget set and
+    enough decode-step samples to trust the histogram, reject a request
+    whose projected decode time (step p95 × gen_len) already exceeds the
+    budget — shedding at admission beats accepting work that is doomed to
+    truncate mid-decode after consuming a batch slot. Non-positive
+    deadlines bypass admission: they are the force-truncate idiom (the
+    request is accepted and truncates at its first step), not a budget."""
+    if deadline_s is None or deadline_s <= 0:
+        return
+    reg = obs.REGISTRY
+    hist = reg.histogram("serve.decode_step_s")
+    n = hist.count(arch=model.cfg.name)
+    if n < _SHED_MIN_SAMPLES:
+        return
+    p95 = hist.quantile(0.95, arch=model.cfg.name)
+    projected = p95 * gen_len
+    if projected <= deadline_s:
+        return
+    HEALTH.record(
+        "serve/admission", "load_shed", "shed",
+        detail=f"p95 {p95 * 1e3:.1f}ms x {gen_len} = {projected:.2f}s "
+               f"> deadline {deadline_s}s (n={n})",
+    )
+    reg.counter("serve.shed").inc(1.0, arch=model.cfg.name)
+    raise LoadShedError(
+        f"projected decode {projected:.2f}s exceeds deadline {deadline_s}s"
+    )
+
+
 def generate(model, params, prompts, *, gen_len: int, cache_len: int,
              temperature: float = 0.0, seed: int = 0,
              deadline_s: float | None = None, max_retries: int = 2,
              nan_guard: bool = True, run_dir=None, host_id: int = 0,
-             watchdog: StepWatchdog | None = None):
+             watchdog: StepWatchdog | None = None,
+             journal: RequestJournal | None = None,
+             request_id: str | None = None):
     """prompts: (B, P) int32 -> ((B, gen_len) int32, done mask (B,) bool).
 
     Slots whose sequence hit ``cfg.eos_id`` are finished: they keep
@@ -310,14 +486,33 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
 
     Robustness (DESIGN.md §10): the request runs under a bounded retry —
     a failure mid-decode (non-finite logits caught by the per-step
-    ``nan_guard``, a kernel dying at runtime) re-runs it up to
-    ``max_retries`` times with short backoff before propagating.
-    ``deadline_s`` bounds wall-clock per request: on expiry the result is
-    truncated (eos-padded, all slots done) instead of running open-ended.
-    When ``run_dir`` is given the decode loop heartbeats per step and a
-    ``watchdog`` (or a default one) flags straggler steps into ``HEALTH``.
+    ``nan_guard``) re-runs it up to ``max_retries`` times with short
+    backoff before propagating. ``deadline_s`` bounds wall-clock per
+    request: on expiry the result is truncated (eos-padded, all slots
+    done) instead of running open-ended, and at admission the request is
+    SHED (``LoadShedError``, no retry) when the decode-step p95 projects
+    past the budget. When ``run_dir`` is given the decode loop heartbeats
+    per step and a ``watchdog`` (or a default one) flags straggler steps
+    into ``HEALTH``.
+
+    Runtime fault domain (DESIGN.md §15): a kernel failure *inside* the
+    compiled call carries a ``faults.Trip`` naming its (site, rung,
+    dispatch key). The catch layer demotes that rung in ``HEALTH``, drops
+    the model's jit cache so the re-run re-traces without it (the next
+    prefill logs the retrace cost), and re-runs WITHOUT consuming the
+    retry budget — bounded separately by ``_MAX_RUNTIME_DEMOTIONS``.
+    Demoted rungs re-enter via probation: when a breaker's cooldown
+    elapses, the jit cache is dropped once so the re-trace can grant the
+    probe. With ``journal`` given the request is journaled begin/end for
+    crash replay (``request_id`` names it).
     """
     reg = obs.REGISTRY
+    _admission_check(model, gen_len, deadline_s)
+    if journal is not None:
+        journal.begin(
+            request_id or "req", prompts, gen_len=gen_len,
+            cache_len=cache_len, temperature=temperature, seed=seed,
+        )
     if watchdog is None and run_dir is not None:
         def _flag_straggler(step, s, ema):
             HEALTH.record(
@@ -331,7 +526,23 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
         max_restarts=max_retries, base_backoff_s=0.05, max_backoff_s=2.0
     )
     reg.counter("serve.requests").inc(1.0, arch=model.cfg.name)
+    global _RETRACE_PENDING
+    runtime_demotions = 0
+    probed: set[tuple[str, str]] = set()
     while True:
+        # probation poll: a demoted rung whose cooldown elapsed only gets
+        # its probe at a fresh dispatch — drop the jit cache ONCE per
+        # breaker per request so the re-trace can grant it (jitted loops
+        # never re-dispatch on their own)
+        ready = [pr for pr in HEALTH.probation_ready() if pr not in probed]
+        if ready:
+            probed.update(ready)
+            if _JITTED.pop(model, None) is not None:
+                obs.info(
+                    "serve",
+                    "probation re-jit for "
+                    + ", ".join(f"{s}/{i}" for s, i in ready),
+                )
         try:
             t_req = time.perf_counter()
             with obs.span("serve.generate", arch=model.cfg.name):
@@ -344,8 +555,38 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
             reg.histogram("serve.request_s").observe(
                 time.perf_counter() - t_req, arch=model.cfg.name
             )
+            if journal is not None:
+                journal.end(request_id or "req", result[0], result[1])
             return result
         except Exception as e:  # noqa: BLE001 — bounded retry, then raise
+            trip = faults.consume_trip()
+            if trip is not None:
+                # runtime kernel failure inside the compiled call: the
+                # trip maps it back to (site, rung) — demote, drop the
+                # jit cache, re-run on the next rung. The re-jit IS the
+                # recovery, so this path does not consume the retry
+                # budget; a separate cap bounds demotion thrash. The trip
+                # kind outranks the surfaced exception: the failure may
+                # reach us as either the XlaRuntimeError from the sync or
+                # the NaN screen tripping on the poisoned buffer first.
+                try:
+                    reason = Reason(trip.kind).value
+                except ValueError:
+                    reason = canon_reason(e)
+                HEALTH.record(
+                    trip.site, reason, f"demote:{trip.rung}(runtime)",
+                    detail=f"key={trip.key or trip.site} {repr(e)[:160]}",
+                )
+                HEALTH.demote(trip.site, trip.rung, reason=reason)
+                reg.counter("runtime.demote").inc(
+                    1.0, site=trip.site, rung=trip.rung,
+                    key=trip.key or trip.site,
+                )
+                _JITTED.pop(model, None)
+                _RETRACE_PENDING = True
+                runtime_demotions += 1
+                if runtime_demotions <= _MAX_RUNTIME_DEMOTIONS:
+                    continue
             # frozen-vocabulary reason (health.Reason): fault kind →
             # verbatim, FloatingPointError → nan_logits, anything else →
             # runtime_error with the class name kept in detail
@@ -362,6 +603,25 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
             )
             reg.counter("serve.retries").inc(1.0, arch=model.cfg.name)
             time.sleep(delay)
+
+
+def replay_pending(model, params, journal: RequestJournal, **kw):
+    """Replay journaled in-flight requests after a restart. Greedy decode
+    is deterministic, so each replayed request reproduces bit-identical
+    tokens; completion writes the journal ``end`` record the crash never
+    did. Returns ``[(request_id, tokens, done), ...]``."""
+    out = []
+    for rec in journal.pending():
+        prompts = jnp.asarray(rec["prompts"], jnp.int32)
+        toks, done = generate(
+            model, params, prompts, gen_len=rec["gen_len"],
+            cache_len=rec["cache_len"], temperature=rec["temperature"],
+            seed=rec["seed"], journal=journal, request_id=rec["id"], **kw
+        )
+        obs.REGISTRY.counter("serve.journal_replayed").inc(1.0)
+        obs.info("serve", f"journal: replayed in-flight request {rec['id']}")
+        out.append((rec["id"], toks, done))
+    return out
 
 
 def quantize_for_serving(model, params, prompts):
@@ -425,6 +685,11 @@ def main():
                          "the batch with eos padding")
     ap.add_argument("--retries", type=int, default=2,
                     help="bounded retry budget per request")
+    ap.add_argument("--requests", type=int, default=1,
+                    help="sequential requests to serve (same prompts/seed "
+                         "— greedy decode makes them bit-identical, which "
+                         "is what lets chaos CI prove a repromoted rung "
+                         "reproduces the clean tokens)")
     args = ap.parse_args()
 
     if args.trace:
@@ -450,13 +715,26 @@ def main():
         model = build_model(cfg, rt)
     cache_len = args.prompt_len + args.gen + (args.prompt_len + args.gen) % 2
     cache_len = resolve_cache_len(cfg, cache_len, args.prompt_len, args.gen)
+    journal = RequestJournal(args.run_dir) if args.run_dir else None
     t0 = time.perf_counter()
-    toks, done = generate(
-        model, params, prompts, gen_len=args.gen,
-        cache_len=cache_len, temperature=args.temperature, seed=args.seed,
-        deadline_s=args.deadline_s, max_retries=args.retries,
-        run_dir=args.run_dir,
-    )
+    if journal is not None:
+        # a previous process crashed mid-request: finish its work first
+        for rid, rtoks, _rdone in replay_pending(
+            model, params, journal, deadline_s=args.deadline_s,
+            max_retries=args.retries, run_dir=args.run_dir,
+        ):
+            obs.info("serve",
+                     f"sample[{rid}]: {np.asarray(rtoks[0][:16])}")
+    for r in range(args.requests):
+        toks, done = generate(
+            model, params, prompts, gen_len=args.gen,
+            cache_len=cache_len, temperature=args.temperature,
+            seed=args.seed, deadline_s=args.deadline_s,
+            max_retries=args.retries, run_dir=args.run_dir,
+            journal=journal, request_id=f"req{r}",
+        )
+        if args.requests > 1:
+            obs.info("serve", f"sample[req{r}]: {np.asarray(toks[0][:16])}")
     dt = time.perf_counter() - t0
     # the summary facts the obs report CLI rebuilds these lines from —
     # metrics.json alone must reproduce this stdout summary
@@ -464,15 +742,16 @@ def main():
     run = reg.facts("serve.run")
     run.set("arch", cfg.name)
     run.set("shape", tuple(toks.shape))
+    n_tok = args.requests * args.batch * args.gen
     run.set("elapsed_s", f"{dt:.2f}")
-    run.set("tok_per_s", f"{args.batch * args.gen / dt:.1f}")
+    run.set("tok_per_s", f"{n_tok / dt:.1f}")
     run.set("recyclable", int(done.sum()))
     run.set("batch", args.batch)
     run.set("eos_id", cfg.eos_id)
     run.set("sample", np.asarray(toks[0][:16]))
     obs.info("serve",
-             f"generated {toks.shape} in {dt:.2f}s "
-             f"({args.batch * args.gen / dt:.1f} tok/s); "
+             f"generated {toks.shape} x{args.requests} in {dt:.2f}s "
+             f"({n_tok / dt:.1f} tok/s); "
              f"{int(done.sum())}/{args.batch} slots recyclable "
              f"(eos={cfg.eos_id})")
     from repro.kernels import ops as kops

@@ -24,7 +24,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, smoke_config
 from repro.data import SyntheticLMData, make_batch_iterator
 from repro.distributed.ft import RestartPolicy, StepWatchdog, beat
-from repro.health import HEALTH
+from repro.health import HEALTH, Reason, canon_reason
 from repro.distributed.sharding import Runtime
 from repro.launch.steps import make_train_step
 from repro.models import build_model
@@ -35,6 +35,10 @@ from repro.optim import OptConfig, init_opt_state
 # from each other and from the token pipeline's SeedSequence([seed, row]).
 _TAG_FRAMES = 1_000_003
 _TAG_PATCHES = 1_000_033
+
+#: runtime (in-compiled-call) demotions one step may absorb before its
+#: failure propagates to the restart wrapper (each one re-jits the step)
+_MAX_RUNTIME_DEMOTIONS_PER_STEP = 4
 
 
 def step_stream(seed: int, step: int, tag: int) -> np.random.Generator:
@@ -68,10 +72,16 @@ def train_loop(args) -> dict:
         lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 20, 5),
         state_dtype=cfg.opt_state_dtype,
     )
-    step_fn = jax.jit(
-        make_train_step(model, opt_cfg, accum_steps=cfg.grad_accum,
-                        accum_dtype=cfg.grad_accum_dtype)
-    )
+    def make_step_fn():
+        # a fresh closure per call: its jit cache starts empty, so the
+        # rebuilt step re-traces — the runtime catch layer and probation
+        # both rely on this to re-dispatch the ops ladder (DESIGN.md §15)
+        return jax.jit(
+            make_train_step(model, opt_cfg, accum_steps=cfg.grad_accum,
+                            accum_dtype=cfg.grad_accum_dtype)
+        )
+
+    step_fn = make_step_fn()
 
     ckpt = CheckpointManager(Path(args.run_dir) / "ckpt", keep=3)
     data = SyntheticLMData(
@@ -114,10 +124,22 @@ def train_loop(args) -> dict:
     )
     reg = obs.REGISTRY
     losses = []
+    probed: set[tuple[str, str]] = set()
+    retrace_t0 = None
     it = make_batch_iterator(data, start_step=start_step)
     for step, host_batch in it:
         if step >= args.steps:
             break
+        # probation poll: a demoted rung whose cooldown elapsed needs a
+        # fresh dispatch — rebuild the jitted step ONCE per breaker so
+        # the re-trace can grant the probe (the hot loop itself never
+        # re-dispatches)
+        ready = [pr for pr in HEALTH.probation_ready() if pr not in probed]
+        if ready:
+            probed.update(ready)
+            step_fn = make_step_fn()
+            obs.info("train", "probation re-jit for "
+                     + ", ".join(f"{s}/{i}" for s, i in ready))
         batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
         if cfg.family == "audio":
             half = args.seq  # encoder frames mirror the token length
@@ -134,10 +156,52 @@ def train_loop(args) -> dict:
         #                           wall-clock jumps (NTP, suspend)
         with obs.span("train.step", step=step):
             faults.sleep_point("slow_step", "train")  # chaos: straggler step
-            state, metrics = step_fn(state, batch)
-            loss = float(metrics["loss"])
+            for attempt in range(_MAX_RUNTIME_DEMOTIONS_PER_STEP + 1):
+                try:
+                    # state is NOT reassigned until after the float()
+                    # sync: the jitted call returns poisoned buffers
+                    # asynchronously, and the trap only surfaces
+                    # (XlaRuntimeError / poisoned loss) at the sync — an
+                    # eager assignment would hand the retry nan params
+                    new_state, metrics = step_fn(state, batch)
+                    loss = float(metrics["loss"])
+                    state = new_state
+                    break
+                except Exception as e:  # noqa: BLE001 — trip-gated retry
+                    trip = faults.consume_trip()
+                    if trip is None or attempt == _MAX_RUNTIME_DEMOTIONS_PER_STEP:
+                        raise
+                    # runtime kernel failure: demote the rung the trip
+                    # names, rebuild the jitted step without it, retry
+                    # THIS step on the untouched state
+                    try:
+                        reason = Reason(trip.kind).value
+                    except ValueError:
+                        reason = canon_reason(e)
+                    HEALTH.record(
+                        trip.site, reason, f"demote:{trip.rung}(runtime)",
+                        detail=f"key={trip.key or trip.site} step {step} "
+                               f"{repr(e)[:160]}",
+                    )
+                    HEALTH.demote(trip.site, trip.rung, reason=reason)
+                    reg.counter("runtime.demote").inc(
+                        1.0, site=trip.site, rung=trip.rung,
+                        key=trip.key or trip.site,
+                    )
+                    probed.discard((trip.site, trip.rung))
+                    step_fn = make_step_fn()
+                    retrace_t0 = time.perf_counter()
+        if retrace_t0 is not None:
+            # first successful step after a runtime demotion rebuilt the
+            # jit: its duration is the re-jit cost the demotion bought
+            dt_ms = (time.perf_counter() - retrace_t0) * 1000.0
+            reg.counter("runtime.retrace_ms").inc(dt_ms, arch=cfg.name)
+            obs.info("train", f"retrace after runtime demotion: {dt_ms:.0f}ms")
+            retrace_t0 = None
         dt = time.perf_counter() - t0
         wd.observe(step, dt)
+        # clean-step credit toward demoted rungs' probation cooldowns
+        HEALTH.tick()
         beat(args.run_dir, host_id=0)
         losses.append(loss)
         toks = args.batch * args.seq

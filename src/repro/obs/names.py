@@ -31,6 +31,10 @@ METRICS = frozenset({
     "autotune.cost_skipped",       # ranked early-exit leftovers, untimed
     # health registry mirror (site/reason/action labels)
     "health.events",
+    "health.repromote",            # circuit-breaker probation passed
+    # runtime fault domain (DESIGN.md §15): in-compiled-call failures
+    "runtime.demote",              # guest trap / sentinel → rung demoted
+    "runtime.retrace_ms",          # cumulative re-jit cost after demotion
     # serving
     "serve.requests",
     "serve.retries",
@@ -45,6 +49,9 @@ METRICS = frozenset({
     "serve.slots_recyclable",
     "serve.slot_occupancy",
     "serve.kv_cache_bytes",
+    "serve.quarantined",           # poisoned slots eos-masked + recycled
+    "serve.shed",                  # requests rejected at admission
+    "serve.journal_replayed",      # in-flight requests replayed on restart
     # training
     "train.steps",
     "train.tokens",

@@ -468,3 +468,261 @@ def test_serve_pallas_fault_token_exact():
         got = run("sliding_pallas")
     np.testing.assert_array_equal(got, want)
     assert HEALTH.events_for("conv1d", reason="pallas_compile")
+
+
+# -- runtime fault domain (DESIGN.md §15) --------------------------------------
+
+def test_guest_trap_not_armed_is_identity(rng):
+    x = jnp.asarray(rng.normal(size=(2, 3)).astype(np.float32))
+    assert faults.guest_trap("conv1d", "pallas", None, x) is x
+
+
+def test_runtime_sentinel_trips_on_nonfinite(monkeypatch):
+    monkeypatch.setenv(faults.SENTINEL_ENV, "1")
+    ok = jnp.ones((2, 2))
+    bad = ok.at[0, 0].set(jnp.nan)
+    assert bool(jnp.isfinite(faults.guest_trap("conv1d", "pallas",
+                                               "k", ok)).all())
+    with pytest.raises(faults.FaultError) as ei:
+        faults.guest_trap("conv1d", "pallas", "k", bad)
+    assert ei.value.kind == "nan_activations"
+    trip = faults.consume_trip()
+    assert trip == faults.Trip("conv1d", "pallas", "k", "nan_activations")
+    assert faults.consume_trip() is None  # mailbox is consume-once
+
+
+def test_consume_trip_site_filter():
+    faults._record_trip(faults.Trip("conv1d", "pallas", "k", "pallas_runtime"))
+    assert faults.consume_trip("conv2d") is None  # not ours: left in place
+    assert faults.consume_trip("conv1d") is not None
+    assert faults.consume_trip() is None
+
+
+def test_breaker_probation_repromotes(monkeypatch):
+    monkeypatch.setenv("REPRO_HEALTH_COOLDOWN_CALLS", "3")
+    HEALTH.demote("conv1d", "pallas", reason="pallas_runtime")
+    assert HEALTH.is_demoted("conv1d", "pallas")
+    HEALTH.tick(3)  # cooldown elapses
+    assert not HEALTH.is_demoted("conv1d", "pallas")  # the single probe
+    assert HEALTH.is_demoted("conv1d", "pallas")  # probe already out
+    HEALTH.note_success("conv1d", "pallas")  # probe passed
+    assert not HEALTH.is_demoted("conv1d", "pallas")
+    assert HEALTH.breaker("conv1d", "pallas") is None
+    assert HEALTH.events_for("conv1d", reason="pallas_runtime")
+    acts = {e.action for e in HEALTH.events_for("conv1d")}
+    assert "probe:pallas" in acts and "repromote:pallas" in acts
+
+
+def test_breaker_failed_probe_grows_cooldown(monkeypatch):
+    monkeypatch.setenv("REPRO_HEALTH_COOLDOWN_CALLS", "2")
+    monkeypatch.setenv("REPRO_HEALTH_COOLDOWN_GROWTH", "2.0")
+    HEALTH.demote("pool1d", "pallas")
+    HEALTH.tick(2)
+    assert not HEALTH.is_demoted("pool1d", "pallas")  # probe granted
+    HEALTH.demote("pool1d", "pallas")  # probe failed: re-open, trips=2
+    br = HEALTH.breaker("pool1d", "pallas")
+    assert br.trips == 2 and br.state == "open"
+    HEALTH.tick(2)
+    assert HEALTH.is_demoted("pool1d", "pallas")  # 2 < 2*growth: not ready
+    HEALTH.tick(2)
+    assert not HEALTH.is_demoted("pool1d", "pallas")  # 4 >= 4: next probe
+    HEALTH.note_success("pool1d", "pallas")
+    # trip history survives repromotion: a fresh demotion resumes at 3
+    HEALTH.demote("pool1d", "pallas")
+    assert HEALTH.breaker("pool1d", "pallas").trips == 3
+
+
+def test_eager_ladder_runtime_trap_probe_cycle(rng, monkeypatch):
+    """The full circuit through the real dispatch ladder, eagerly: runtime
+    trap → demote, cooldown → probe, probe fails → re-demote with grown
+    cooldown, second probe passes → repromote."""
+    monkeypatch.setenv("REPRO_HEALTH_COOLDOWN_CALLS", "1")
+    x = jnp.asarray(rng.normal(size=(1, 32, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32))
+    clean = ops.conv1d_depthwise(x, w)
+    with faults.inject("pallas_runtime", site="conv1d_depthwise", times=2):
+        out = ops.conv1d_depthwise(x, w)  # trap fires -> demote (trip 1)
+        np.testing.assert_allclose(out, clean, rtol=2e-5, atol=2e-5)
+        assert HEALTH.breaker("conv1d_depthwise", "pallas").trips == 1
+        # jax rung's note_success credited clean=1 >= 1: next call probes;
+        # the probe consumes the second injected fault -> re-demote
+        out = ops.conv1d_depthwise(x, w)
+        np.testing.assert_allclose(out, clean, rtol=2e-5, atol=2e-5)
+        br = HEALTH.breaker("conv1d_depthwise", "pallas")
+        assert br.trips == 2 and br.state == "open"
+        # grown cooldown: after one clean call the breaker is still open
+        # (is_demoted is a mutating probation gate — inspect via breaker)
+        out = ops.conv1d_depthwise(x, w)
+        br = HEALTH.breaker("conv1d_depthwise", "pallas")
+        assert br.state == "open" and br.trips == 2
+        # second clean call reaches the grown cooldown; the injection
+        # budget is exhausted, so the next probe passes -> repromote
+        ops.conv1d_depthwise(x, w)
+    assert HEALTH.breaker("conv1d_depthwise", "pallas") is None
+    acts = {e.action for e in HEALTH.events_for("conv1d_depthwise")}
+    assert "repromote:pallas" in acts
+
+
+def test_serve_runtime_fault_demotes_rejits_token_exact():
+    """A kernel dying INSIDE the compiled call (pallas_runtime guest trap)
+    maps back to its (site, rung) via the trip, demotes, re-jits, and the
+    re-run emits the SAME greedy tokens as the clean sliding baseline."""
+    from repro.configs import get_config, smoke_config
+    from repro.distributed.sharding import Runtime
+    from repro.launch.serve import generate
+    from repro.models import build_model
+
+    cfg = smoke_config(get_config("whisper-medium"))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(2, cfg.vocab_size, size=(1, 6)),
+                          jnp.int32)
+
+    def run(backend):
+        model = build_model(cfg.replace(conv_backend=backend), Runtime())
+        params = model.init(jax.random.key(0))
+        toks, _ = generate(model, params, prompts, gen_len=4, cache_len=16)
+        return np.asarray(toks)
+
+    want = run("sliding")
+    with faults.inject("pallas_runtime", site="conv1d", times=1):
+        got = run("sliding_pallas")
+    np.testing.assert_array_equal(got, want)
+    evs = HEALTH.events_for("conv1d", reason="pallas_runtime")
+    assert any(e.action == "demote:pallas(runtime)" for e in evs)
+    assert HEALTH.is_demoted("conv1d", "pallas")
+
+
+def test_serve_probation_repromotes_across_requests(monkeypatch):
+    """Request 1 trips the runtime trap (demote + re-jit); by request 2
+    the cooldown has elapsed, the probation poll drops the jit cache, the
+    probe passes, and the repromoted pallas rung reproduces the clean
+    tokens bit-for-bit."""
+    from repro.configs import get_config, smoke_config
+    from repro.distributed.sharding import Runtime
+    from repro.launch.serve import generate
+    from repro.models import build_model
+
+    monkeypatch.setenv("REPRO_HEALTH_COOLDOWN_CALLS", "2")
+    cfg = smoke_config(get_config("whisper-medium"))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(2, cfg.vocab_size, size=(1, 6)),
+                          jnp.int32)
+
+    clean_model = build_model(cfg.replace(conv_backend="sliding"), Runtime())
+    clean_params = clean_model.init(jax.random.key(0))
+    want, _ = generate(clean_model, clean_params, prompts, gen_len=4,
+                       cache_len=16)
+
+    model = build_model(cfg.replace(conv_backend="sliding_pallas"), Runtime())
+    params = model.init(jax.random.key(0))
+    with faults.inject("pallas_runtime", site="conv1d", times=1):
+        got1, _ = generate(model, params, prompts, gen_len=4, cache_len=16)
+        np.testing.assert_array_equal(np.asarray(got1), np.asarray(want))
+        # non-mutating check: is_demoted would consume the probe grant
+        br = HEALTH.breaker("conv1d", "pallas")
+        assert br is not None and br.state == "open" and br.trips == 1
+        got2, _ = generate(model, params, prompts, gen_len=4, cache_len=16)
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(want))
+    acts = {e.action for e in HEALTH.events_for("conv1d")}
+    assert "probe:pallas" in acts and "repromote:pallas" in acts
+    assert HEALTH.breaker("conv1d", "pallas") is None
+
+
+def test_serve_slot_quarantine_siblings_token_exact():
+    """One poisoned slot (injected nan_activations at serve/slot.1) is
+    quarantined — eos-masked, marked recyclable — while slot 0's tokens
+    stay bit-identical to the clean run. The batch survives."""
+    from repro.launch.serve import generate
+
+    model, params, prompts = _serve_model()
+    clean, _ = generate(model, params, prompts, gen_len=4, cache_len=16)
+    with faults.inject("nan_activations", site="serve/slot.1", times=1):
+        toks, done = generate(model, params, prompts, gen_len=4,
+                              cache_len=16)
+    np.testing.assert_array_equal(np.asarray(toks[0]), np.asarray(clean[0]))
+    assert bool(done[1])  # the poisoned slot is recyclable
+    eos = model.cfg.eos_id
+    assert bool((toks[1] == eos).all())  # its tokens pinned to eos
+    (ev,) = HEALTH.events_for("serve/slot", reason="nan_logits")
+    assert ev.action == "quarantine"
+    # no retry: the batch was never torn down
+    assert not HEALTH.events_for("serve/generate", reason="nan_logits")
+
+
+def test_serve_load_shedding(monkeypatch):
+    """With decode-step history projecting past the deadline budget, a new
+    request is rejected at admission with LoadShedError + a reason-coded
+    event (and never reaches the journal or the retry loop)."""
+    from repro import obs
+    from repro.launch.serve import LoadShedError, generate
+
+    model, params, prompts = _serve_model()
+    # seed the histogram with slow steps for this arch
+    hist = obs.REGISTRY.histogram("serve.decode_step_s")
+    for _ in range(10):
+        hist.observe(0.5, arch=model.cfg.name)
+    with pytest.raises(LoadShedError):
+        generate(model, params, prompts, gen_len=8, cache_len=16,
+                 deadline_s=0.2)
+    (ev,) = HEALTH.events_for("serve/admission", reason="load_shed")
+    assert ev.action == "shed"
+    # a generous budget still admits
+    toks, _ = generate(model, params, prompts, gen_len=4, cache_len=16,
+                       deadline_s=60.0)
+    assert toks.shape == (2, 4)
+
+
+def test_serve_journal_replay_roundtrip(tmp_path):
+    """A begin record without an end (crashed in flight) replays to
+    bit-identical greedy tokens and closes the journal."""
+    from repro.launch.serve import RequestJournal, generate, replay_pending
+
+    model, params, prompts = _serve_model()
+    want, want_done = generate(model, params, prompts, gen_len=4,
+                               cache_len=16)
+    j = RequestJournal(tmp_path)
+    j.begin("r1", prompts, gen_len=4, cache_len=16, temperature=0.0, seed=0)
+    assert [r["id"] for r in j.pending()] == ["r1"]
+    ((rid, toks, done),) = replay_pending(model, params, j)
+    assert rid == "r1"
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(done), np.asarray(want_done))
+    assert j.pending() == []  # replay wrote the end record
+    # completed requests journal begin+end and do not replay again
+    generate(model, params, prompts, gen_len=4, cache_len=16,
+             journal=j, request_id="r2")
+    assert j.pending() == []
+
+
+def test_train_runtime_fault_demotes_and_recovers(tmp_path):
+    """The train loop's runtime catch layer: an in-compiled-call trap at
+    step 0 demotes the rung, rebuilds the jitted step, and the retried
+    step produces the same loss as a clean run (state untouched by the
+    poisoned attempt)."""
+    import argparse
+
+    from repro.launch.train import train_loop
+
+    def args(run_dir):
+        return argparse.Namespace(
+            arch="whisper-medium", smoke=True, steps=2, batch=2, seq=16,
+            lr=3e-4, seed=0, run_dir=str(run_dir), ckpt_every=0,
+            log_every=10, grad_accum=None, conv_backend="sliding_pallas",
+            audio_frontend="mels", no_resume=True, fail_at=None,
+        )
+
+    clean = train_loop(args(tmp_path / "clean"))
+    HEALTH.reset()
+    with faults.inject("pallas_runtime", site="conv1d", times=1):
+        chaos = train_loop(args(tmp_path / "chaos"))
+    assert np.isfinite(chaos["losses"]).all()
+    # the retried step 0 must match the clean run exactly: the poisoned
+    # attempt's output never reached `state`
+    np.testing.assert_array_equal(np.asarray(chaos["losses"][0]),
+                                  np.asarray(clean["losses"][0]))
+    # later steps run on the demoted rung, whose backward may differ from
+    # the pallas rung in the final ulp — allclose, not bitwise
+    np.testing.assert_allclose(np.asarray(chaos["losses"]),
+                               np.asarray(clean["losses"]), rtol=1e-5)
+    evs = HEALTH.events_for("conv1d", reason="pallas_runtime")
+    assert any(e.action == "demote:pallas(runtime)" for e in evs)

@@ -133,6 +133,31 @@ def test_checkpoint_truncated_leaf_quarantined(tmp_path, rng):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_checkpoint_repeat_quarantine_keeps_evidence(tmp_path, rng):
+    """Regression: quarantining a step whose ``step_N.corrupt`` already
+    exists used to rmtree the previous autopsy evidence. Repeats must
+    take suffixed names (``step_N.corrupt.1``, …), all invisible to
+    ``latest_step``/``_gc``."""
+    from repro import faults
+
+    state = make_state(rng)
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(1, state)
+    for expect in ["step_4.corrupt", "step_4.corrupt.1", "step_4.corrupt.2"]:
+        mgr.save(4, state)
+        leaf = next((Path(tmp_path) / "step_4").glob("*.npy"))
+        faults.truncate_file(leaf)
+        assert mgr.latest_valid_step() == 1
+        assert (Path(tmp_path) / expect).is_dir()
+    # all three autopsy dirs coexist and none is a resume candidate
+    for name in ["step_4.corrupt", "step_4.corrupt.1", "step_4.corrupt.2"]:
+        assert (Path(tmp_path) / name).is_dir()
+    assert latest_step(tmp_path) == 1
+    mgr._gc()  # retention must not collect quarantined evidence either
+    for name in ["step_4.corrupt", "step_4.corrupt.1", "step_4.corrupt.2"]:
+        assert (Path(tmp_path) / name).is_dir()
+
+
 def test_latest_step_ignores_stray_dirs(tmp_path, rng, capfd):
     state = make_state(rng)
     mgr = CheckpointManager(tmp_path, keep=5)
